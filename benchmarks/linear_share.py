@@ -1,0 +1,62 @@
+"""Paper Fig. 3 analog: fraction of compute in linear layers vs attention.
+
+Nsight kernel profiling -> loop-aware FLOP accounting over the model's own
+structure (exact, since we own every matmul).  The paper's claim: linear
+layers dominate (>80%) at small sequence lengths; the quadratic attention
+term takes over as S grows -- which bounds the speedup available from
+quantizing linear layers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import get_config
+
+
+def flops_split(cfg, seq: int) -> dict:
+    """Per-token forward FLOPs split: linear (quantizable) vs attention
+    (score/context matmuls, not weight-bearing)."""
+    d, h, k, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, cfg.d_ff)
+    qkv = 2 * d * (h * hd) + 2 * 2 * d * (k * hd)
+    out = 2 * (h * hd) * d
+    if cfg.mlp_kind == "gated":
+        mlp = 3 * 2 * d * ff
+    else:
+        mlp = 2 * 2 * d * ff
+    if cfg.n_experts:
+        mlp = cfg.top_k * (3 * 2 * d * ff) + 2 * d * cfg.n_experts
+    linear = (qkv + out + mlp) * cfg.n_layers
+    # attention: QK^T + PV, causal halves the effective length
+    attn = 2 * 2 * (h * hd) * (seq / 2) * cfg.n_layers
+    head = 2 * d * cfg.vocab_size
+    return {"linear": linear, "attention": attn, "lm_head": head,
+            "linear_share": linear / (linear + attn + head)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="gpt2-small,llama3-8b,qwen3-32b")
+    ap.add_argument("--seqs", default="256,1024,4096,16384,65536")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "linear_share.json"))
+    args = ap.parse_args()
+    out = {}
+    for arch in args.archs.split(","):
+        cfg = get_config(arch)
+        rows = []
+        for seq in [int(s) for s in args.seqs.split(",")]:
+            r = flops_split(cfg, seq)
+            r["seq"] = seq
+            rows.append(r)
+            print(f"{arch:12s} seq={seq:6d} linear_share={r['linear_share']:.3f}")
+        out[arch] = rows
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

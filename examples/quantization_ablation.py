@@ -1,0 +1,65 @@
+"""Component ablation sweep (the paper's controlled-study shape): quantize
+one component at a time and compare validation-loss trajectories.
+
+    PYTHONPATH=src python examples/quantization_ablation.py --steps 100
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.qconfig import Granularity, QuantRecipe, QuantSpec
+from repro.data import Loader, SyntheticCorpus
+from repro.models import build_model
+from repro.optim import OptConfig
+from repro.train import init_train_state, make_eval_step, make_train_step
+
+SWEEP = {
+    "baseline": QuantRecipe(),
+    "W8/ch": QuantRecipe(weights=QuantSpec(8, Granularity.PER_CHANNEL)),
+    "W4/tensor": QuantRecipe(weights=QuantSpec(4, Granularity.PER_TENSOR)),
+    "A8/token": QuantRecipe(acts=QuantSpec(8, Granularity.PER_TOKEN)),
+    "A4/token": QuantRecipe(acts=QuantSpec(4, Granularity.PER_TOKEN)),
+    "G8/token": QuantRecipe(grads=QuantSpec(8, Granularity.PER_TOKEN)),
+    "M2-8/ch (paper: diverges)": QuantRecipe(
+        adam_m2=QuantSpec(8, Granularity.PER_CHANNEL)),
+    "M2-8 blockwise-sqrt (ours)": QuantRecipe(
+        adam_m2=QuantSpec(8, Granularity.PER_CHANNEL, symmetric=False,
+                          block_size=128, sqrt_domain=True)),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    args = ap.parse_args()
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
+
+    print(f"{'config':30s} {'final CE':>9s} {'vs base':>8s}")
+    base = None
+    for name, recipe in SWEEP.items():
+        opt = OptConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps)
+        state = init_train_state(model, jax.random.PRNGKey(0), recipe, opt)
+        step = jax.jit(make_train_step(model, recipe, opt))
+        eval_step = jax.jit(make_eval_step(model, recipe))
+        loader = Loader(corpus, cfg, batch_size=8, seq_len=128)
+        valid = Loader(corpus, cfg, batch_size=8, seq_len=128, split="valid")
+        diverged = False
+        for i in range(args.steps):
+            state, m = step(state, next(loader), None)
+            if not float(m["ce"]) < 30:
+                diverged = True
+                break
+        if diverged:
+            print(f"{name:30s} {'DIVERGED':>9s}")
+            continue
+        ce = float(eval_step(state.params, valid.peek(0))["ce"])
+        if base is None:
+            base = ce
+        print(f"{name:30s} {ce:9.4f} {ce - base:+8.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: quantized pre-training in ~60 lines.
+
+Trains a mini GPT-2 with the paper's recommended recipe (W8 per-channel +
+A8 per-token, Section 4.5) against the fp baseline and prints both curves.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 60]
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import fp_baseline, paper_recipe
+from repro.data import Loader, SyntheticCorpus
+from repro.models import build_model
+from repro.optim import OptConfig
+from repro.train import init_train_state, make_train_step
+
+
+def train(recipe, steps: int):
+    cfg = get_smoke_config("gpt2-small")      # the paper's model, reduced
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
+    opt = OptConfig(lr=3e-3, warmup_steps=10, total_steps=steps)
+    state = init_train_state(model, jax.random.PRNGKey(0), recipe, opt)
+    step = jax.jit(make_train_step(model, recipe, opt))
+    loader = Loader(corpus, cfg, batch_size=8, seq_len=128)
+    losses = []
+    for i in range(steps):
+        state, metrics = step(state, next(loader),
+                              jax.random.fold_in(jax.random.PRNGKey(0), i))
+        losses.append(float(metrics["ce"]))
+        if (i + 1) % 10 == 0:
+            print(f"  step {i+1:4d}  ce={losses[-1]:.4f}", flush=True)
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    print("== fp32/bf16 baseline ==")
+    fp = train(fp_baseline(), args.steps)
+    print("== paper recipe: W8 per-channel + A8 per-token ==")
+    q = train(paper_recipe(), args.steps)
+    print(f"\nfinal ce  baseline={fp[-1]:.4f}  quantized={q[-1]:.4f}  "
+          f"delta={q[-1] - fp[-1]:+.4f}")
+    print("(the paper's finding: the W8A8 recipe tracks the baseline)")
+
+
+if __name__ == "__main__":
+    main()

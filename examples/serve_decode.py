@@ -1,0 +1,71 @@
+"""Serving example: batched prefill + greedy decode with a quantized model.
+
+Loads the latest checkpoint written by train_quantized_gpt2.py (or trains a
+tiny model on the fly) and serves a batch of prompts, measuring per-token
+decode latency.
+
+    PYTHONPATH=src python examples/serve_decode.py --tokens 32
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import paper_recipe
+from repro.data import Loader, SyntheticCorpus
+from repro.models import build_model
+from repro.optim import OptConfig
+from repro.train import greedy_generate, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--warm-steps", type=int, default=80,
+                    help="quick pre-train so generations are non-random")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    recipe = paper_recipe()
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
+    opt = OptConfig(lr=3e-3, warmup_steps=5, total_steps=args.warm_steps)
+    state = init_train_state(model, jax.random.PRNGKey(0), recipe, opt)
+    step = jax.jit(make_train_step(model, recipe, opt))
+    loader = Loader(corpus, cfg, batch_size=args.batch,
+                    seq_len=args.prompt_len)
+    for i in range(args.warm_steps):
+        state, _ = step(state, next(loader), None)
+
+    prompts = next(loader)["tokens"][:, :args.prompt_len]
+    t0 = time.perf_counter()
+    gen = greedy_generate(model, state.params, {"tokens": prompts},
+                          args.tokens, recipe=recipe)
+    gen = np.asarray(jax.block_until_ready(gen))
+    dt = time.perf_counter() - t0
+    print(f"generated {gen.shape} in {dt:.2f}s "
+          f"({dt / args.tokens * 1e3:.1f} ms/token batched x{args.batch})")
+    print("sample:", gen[0][:16].tolist())
+
+    # quality probe: continuation CE of generated vs random tokens under the
+    # corpus's own bigram statistics
+    succ = corpus.succ
+    def hit_rate(seq):
+        hits = 0
+        for a, b in zip(seq[:-1], seq[1:]):
+            hits += int(b in succ[a])
+        return hits / (len(seq) - 1)
+    model_rate = np.mean([hit_rate(g) for g in gen])
+    rand = np.random.RandomState(0).randint(0, cfg.vocab_size,
+                                            gen.shape)
+    rand_rate = np.mean([hit_rate(g) for g in rand])
+    print(f"bigram-consistency: model={model_rate:.2f} random={rand_rate:.2f}"
+          f"  (higher = learned the corpus transitions)")
+
+
+if __name__ == "__main__":
+    main()

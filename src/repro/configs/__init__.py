@@ -1,0 +1,54 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+GPT-2 small.  ``--arch <id>`` everywhere resolves through here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (ArchConfig, SHAPES, ShapeConfig,
+                                shape_applicable)
+
+_MODULES: Dict[str, str] = {
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b_a6p6b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "paligemma-3b": "paligemma_3b",
+    "gemma-2b": "gemma_2b",
+    "qwen3-32b": "qwen3_32b",
+    "llama3-8b": "llama3_8b",
+    "yi-6b": "yi_6b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "mamba2-130m": "mamba2_130m",
+    "gpt2-small": "gpt2_small",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "gpt2-small"]
+
+
+def _module(name: str):
+    try:
+        return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; options: {sorted(_MODULES)}") from None
+
+
+def get_config(name: str) -> ArchConfig:
+    return _module(name).config()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return _module(name).smoke_config()
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ASSIGNED_ARCHS",
+           "get_config", "get_smoke_config", "get_shape", "list_archs",
+           "shape_applicable"]

@@ -1,0 +1,26 @@
+"""gemma-2b [arXiv:2403.08295; hf].
+
+18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=256000, GeGLU, head_dim=256,
+tied embeddings, embeddings scaled by sqrt(d_model), rmsnorm with (1+w).
+"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="gemma-2b", family="dense",
+        n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+        d_ff=16384, vocab_size=256000,
+        act="gelu", mlp_kind="gated", norm="rmsnorm_p1", pos="rope",
+        tie_embeddings=True, embed_scale=True,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="gemma-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=512,
+        act="gelu", mlp_kind="gated", norm="rmsnorm_p1", pos="rope",
+        tie_embeddings=True, embed_scale=True, logit_chunk=64,
+    )

@@ -1,0 +1,28 @@
+"""granite-moe-3b-a800m [hf:ibm-granite/granite-3.0-3b-a800m-base; hf].
+
+32L d_model=1536 24H (GQA kv=8) d_ff=512/expert vocab=49155, MoE 40 experts
+top-8.  E=40 does not divide the 16-way tensor axis -> ff_sharded expert mode
+(DESIGN.md Section 5).
+"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="granite-moe-3b-a800m", family="moe",
+        n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+        d_ff=512, vocab_size=49155, n_experts=40, top_k=8,
+        act="silu", mlp_kind="gated", norm="rmsnorm", pos="rope",
+        rope_theta=10000.0, tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="granite-moe-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=32, vocab_size=512, n_experts=8, top_k=2,
+        capacity_factor=8.0,  # dropless at smoke scale (decode==prefill)
+        act="silu", mlp_kind="gated", norm="rmsnorm", pos="rope",
+        tie_embeddings=True, logit_chunk=64,
+    )

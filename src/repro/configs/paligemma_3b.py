@@ -1,0 +1,30 @@
+"""paligemma-3b [arXiv:2407.07726; hf].
+
+Backbone only per the assignment: 18L gemma (d_model=2048 8H MQA kv=1
+head_dim=256 d_ff=16384 GeGLU) vocab=257216.  The SigLIP frontend is a STUB:
+input_specs provides precomputed patch embeddings (B, 256, d_model); training
+uses PaliGemma's prefix-LM masking (full attention over the image prefix).
+"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="paligemma-3b", family="vlm",
+        n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+        d_ff=16384, vocab_size=257216,
+        act="gelu", mlp_kind="gated", norm="rmsnorm_p1", pos="rope",
+        tie_embeddings=True, embed_scale=True, num_patches=256,
+        frontend="vision_stub",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="paligemma-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=512,
+        act="gelu", mlp_kind="gated", norm="rmsnorm_p1", pos="rope",
+        tie_embeddings=True, embed_scale=True, num_patches=8,
+        frontend="vision_stub", logit_chunk=64,
+    )

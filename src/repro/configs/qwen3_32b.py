@@ -1,0 +1,26 @@
+"""qwen3-32b [hf:Qwen/Qwen3-8B family; hf].
+
+64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936, qk_norm.
+head_dim=128 (the published Qwen3 value; see DESIGN.md Section 5).
+"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-32b", family="dense",
+        n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=25600, vocab_size=151936,
+        act="silu", mlp_kind="gated", norm="rmsnorm", pos="rope",
+        rope_theta=1e6, qk_norm=True,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512,
+        act="silu", mlp_kind="gated", norm="rmsnorm", pos="rope",
+        qk_norm=True, logit_chunk=64,
+    )

@@ -1,0 +1,27 @@
+"""seamless-m4t-medium [arXiv:2308.11596; hf].
+
+Encoder-decoder, 12L enc + 12L dec, d_model=1024 16H (MHA kv=16) d_ff=4096
+vocab=256206.  The audio frontend is a STUB: input_specs provides precomputed
+frame embeddings; encoder frames = seq_len // 4 (conv downsampling ratio).
+"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="seamless-m4t-medium", family="encdec",
+        n_layers=12, enc_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+        head_dim=64, d_ff=4096, vocab_size=256206,
+        act="gelu", mlp_kind="classic", norm="layernorm", pos="rope",
+        use_bias=True, frontend="audio_stub", frame_ratio=4,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="seamless-smoke", family="encdec",
+        n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=512,
+        act="gelu", mlp_kind="classic", norm="layernorm", pos="rope",
+        use_bias=True, frontend="audio_stub", frame_ratio=4, logit_chunk=64,
+    )

@@ -1,0 +1,25 @@
+"""yi-6b [arXiv:2403.04652; hf].
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000, llama-family.
+"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="yi-6b", family="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4, head_dim=128,
+        d_ff=11008, vocab_size=64000,
+        act="silu", mlp_kind="gated", norm="rmsnorm", pos="rope",
+        rope_theta=5000000.0,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="yi-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=512,
+        act="silu", mlp_kind="gated", norm="rmsnorm", pos="rope",
+        logit_chunk=64,
+    )

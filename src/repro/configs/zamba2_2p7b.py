@@ -1,0 +1,33 @@
+"""zamba2-2.7b [arXiv:2411.15242; hf].
+
+54 Mamba2 layers d_model=2560 ssm_state=64, plus a SHARED attention+MLP block
+(32H MHA kv=32, d_ff=10240) applied after every 6th mamba layer on
+concat(h, input_embedding) in 2*d_model space (9 invocations, shared weights,
+per-invocation KV cache).  Sub-quadratic -> runs long_500k.
+"""
+from repro.configs.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-2.7b", family="hybrid",
+        n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+        head_dim=160,                  # shared block operates in 2*d = 5120
+        d_ff=10240, vocab_size=32000,
+        ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+        hybrid_attn_every=6,
+        act="gelu", mlp_kind="gated", norm="rmsnorm", pos="rope",
+        tie_embeddings=True, sub_quadratic=True,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-smoke", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, head_dim=32,
+        d_ff=128, vocab_size=512,
+        ssm_state=16, ssm_expand=2, ssm_head_dim=16, ssm_conv=4,
+        hybrid_attn_every=2,
+        act="gelu", mlp_kind="gated", norm="rmsnorm", pos="rope",
+        tie_embeddings=True, sub_quadratic=True, logit_chunk=64,
+    )

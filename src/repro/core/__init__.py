@@ -1,0 +1,16 @@
+"""Core quantization library -- the paper's primary contribution in JAX."""
+from repro.core.qconfig import (Granularity, QuantRecipe, QuantSpec, RoundMode,
+                                beyond_paper_recipe, fp_baseline, get_recipe,
+                                paper_recipe, paper_recipe_wag8, PRESETS)
+from repro.core.qlinear import quantized_linear
+from repro.core.quantizer import (compute_scale_zero, dequantize_int,
+                                  fake_quant, fake_quant_nograd,
+                                  maybe_fake_quant, quant_error, quantize_int)
+
+__all__ = [
+    "Granularity", "QuantRecipe", "QuantSpec", "RoundMode",
+    "beyond_paper_recipe", "fp_baseline", "get_recipe", "paper_recipe",
+    "paper_recipe_wag8", "PRESETS", "quantized_linear", "compute_scale_zero",
+    "dequantize_int", "fake_quant", "fake_quant_nograd", "maybe_fake_quant",
+    "quant_error", "quantize_int",
+]

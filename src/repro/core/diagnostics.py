@@ -1,0 +1,87 @@
+"""Training diagnostics reproducing the paper's analysis figures.
+
+* channel outlier statistics (Fig. 6 / Fig. 8): activations carry persistent
+  per-channel outliers that break per-token/per-tensor quantization.
+* gradient sparsity (Fig. 10 down): gradients are near-sparse, which makes
+  absmax-scaled linear quantization lose most mass to the zero bin.
+* m-sharpness (Fig. 5, Foret et al. 2021): quantized pre-training lands in
+  sharper minima; measured as the average loss increase under worst-of-n
+  random perturbations of radius rho on a batch.
+* zero-bin fraction (Fig. 12): how much of a tensor quantizes to exactly 0 --
+  the mechanism behind Adam-m2 divergence.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantSpec
+from repro.core.quantizer import fake_quant_nograd
+
+
+def channel_outlier_stats(acts: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Per-channel outlier profile of an activation tensor (..., channels).
+
+    Returns the channel absmax vector plus summary ratios.  A large
+    ``max_over_median`` with a small set of recurring argmax channels is the
+    paper's Fig-6 signature.
+    """
+    flat = acts.reshape(-1, acts.shape[-1]).astype(jnp.float32)
+    ch_absmax = jnp.max(jnp.abs(flat), axis=0)
+    med = jnp.median(ch_absmax)
+    return {
+        "channel_absmax": ch_absmax,
+        "max_over_median": jnp.max(ch_absmax) / jnp.maximum(med, 1e-9),
+        "top_channel": jnp.argmax(ch_absmax),
+        "p99_over_p50": (jnp.percentile(ch_absmax, 99.0)
+                         / jnp.maximum(med, 1e-9)),
+    }
+
+
+def gradient_sparsity(g: jnp.ndarray, rel_threshold: float = 1e-3) -> jnp.ndarray:
+    """Fraction of entries with |g| < rel_threshold * absmax(g) (Fig. 10)."""
+    gf = g.astype(jnp.float32)
+    thresh = rel_threshold * jnp.max(jnp.abs(gf))
+    return jnp.mean((jnp.abs(gf) < thresh).astype(jnp.float32))
+
+
+def zero_bin_fraction(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Fraction of entries that dequantize to exactly zero (Fig. 12)."""
+    q = fake_quant_nograd(x.astype(jnp.float32), spec)
+    return jnp.mean((q == 0.0).astype(jnp.float32))
+
+
+def quant_snr_db(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Signal-to-quantization-noise ratio in dB (higher = better fidelity)."""
+    xf = x.astype(jnp.float32)
+    err = xf - fake_quant_nograd(xf, spec)
+    return 10.0 * jnp.log10(jnp.sum(xf ** 2) /
+                            jnp.maximum(jnp.sum(err ** 2), 1e-20))
+
+
+def m_sharpness(loss_fn: Callable, params, batch, key: jax.Array,
+                rho: float = 0.05, n_samples: int = 8) -> jnp.ndarray:
+    """m-sharpness (Foret et al. 2021) via worst-of-n random filter-normalized
+    perturbations: max_eps<=rho [ L(params + eps) - L(params) ].
+
+    ``loss_fn(params, batch) -> scalar``.  Perturbations are scaled per-leaf by
+    the leaf norm (filter normalization, Li et al. 2018) so the radius is
+    comparable across layers.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    base = loss_fn(params, batch)
+
+    def one(k):
+        ks = jax.random.split(k, len(leaves))
+        perturbed = []
+        for leaf, lk in zip(leaves, ks):
+            noise = jax.random.normal(lk, leaf.shape, dtype=jnp.float32)
+            nn = jnp.linalg.norm(noise.reshape(-1)) + 1e-12
+            ln = jnp.linalg.norm(leaf.astype(jnp.float32).reshape(-1))
+            perturbed.append((leaf + (rho * ln / nn) * noise).astype(leaf.dtype))
+        return loss_fn(jax.tree_util.tree_unflatten(treedef, perturbed), batch)
+
+    losses = jax.lax.map(one, jax.random.split(key, n_samples))
+    return jnp.max(losses) - base

@@ -1,0 +1,169 @@
+"""Quantization configuration for the paper's controlled study.
+
+The paper (EMNLP 2024 Findings) quantizes four component groups of a
+transformer during pre-training:
+
+  * weights        (linear-layer weights, forward pass)
+  * activations    (linear-layer inputs, forward pass)
+  * gradients      (output-gradient used on the dW path only -- Fig. 1)
+  * optimizer m1/m2 (Adam moments, stored quantized between steps)
+
+Each component gets a :class:`QuantSpec` (bits / granularity / symmetry) and
+the whole study is a :class:`QuantRecipe` bundling them.  ``QuantRecipe``
+instances are plain frozen dataclasses so they hash into jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class Granularity(str, enum.Enum):
+    """Scale-factor granularity (paper Section 3.2).
+
+    PER_TENSOR  : one scale for the whole tensor.
+    PER_CHANNEL : one scale per feature channel (last dim for activations,
+                  output dim for weights; "per-column" in the paper's
+                  optimizer tables).
+    PER_TOKEN   : one scale per token row (all dims except the last).
+    """
+
+    PER_TENSOR = "per_tensor"
+    PER_CHANNEL = "per_channel"
+    PER_TOKEN = "per_token"
+
+
+class RoundMode(str, enum.Enum):
+    NEAREST = "nearest"          # paper default: round-to-nearest
+    STOCHASTIC = "stochastic"    # beyond-paper option for gradients
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """One component's quantization scheme (paper Eq. 1)."""
+
+    bits: int = 8
+    granularity: Granularity = Granularity.PER_TENSOR
+    symmetric: bool = True               # z = 0 (paper default)
+    round_mode: RoundMode = RoundMode.NEAREST
+    # Beyond-paper: block-wise quantization (Dettmers et al. 2021) used to fix
+    # the m2 divergence.  block_size == 0 disables blocking.
+    block_size: int = 0
+    # Beyond-paper codec for strictly-positive tensors (Adam m2): quantize in
+    # sqrt-space so small values do not collapse into the zero bin (Fig. 12).
+    sqrt_domain: bool = False
+
+    def __post_init__(self):
+        if self.bits < 2 or self.bits > 16:
+            raise ValueError(f"unsupported bit width {self.bits}")
+        if self.block_size < 0:
+            raise ValueError("block_size must be >= 0")
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    def describe(self) -> str:
+        sym = "sym" if self.symmetric else "asym"
+        extra = ""
+        if self.block_size:
+            extra += f",block{self.block_size}"
+        if self.sqrt_domain:
+            extra += ",sqrt"
+        if self.round_mode is RoundMode.STOCHASTIC:
+            extra += ",sr"
+        return f"int{self.bits}/{self.granularity.value}/{sym}{extra}"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRecipe:
+    """Full pre-training quantization recipe (paper Section 4.5).
+
+    ``None`` disables quantization for that component (fp path).
+
+    ``grads`` quantizes the *output gradient on the dW path only*; the real
+    valued gradient always flows to dx (paper Fig. 1).  ``grads_dx`` enables
+    the paper's instability ablation (Fig. 10 top) where the input-gradient
+    path is quantized too.
+    """
+
+    weights: Optional[QuantSpec] = None
+    acts: Optional[QuantSpec] = None
+    grads: Optional[QuantSpec] = None
+    grads_dx: Optional[QuantSpec] = None     # ablation only -- diverges
+    adam_m1: Optional[QuantSpec] = None
+    adam_m2: Optional[QuantSpec] = None
+    # Quantize embedding / lm-head linears too?  Paper scopes to transformer
+    # block linears; embeddings stay fp by default.
+    include_embeddings: bool = False
+
+    def describe(self) -> str:
+        parts = []
+        for name in ("weights", "acts", "grads", "grads_dx", "adam_m1", "adam_m2"):
+            spec = getattr(self, name)
+            if spec is not None:
+                parts.append(f"{name}={spec.describe()}")
+        return "fp-baseline" if not parts else " ".join(parts)
+
+    @property
+    def any_linear_quant(self) -> bool:
+        return any(s is not None for s in (self.weights, self.acts, self.grads, self.grads_dx))
+
+
+# ---------------------------------------------------------------------------
+# Presets used throughout the study / benchmarks.
+# ---------------------------------------------------------------------------
+
+def fp_baseline() -> QuantRecipe:
+    return QuantRecipe()
+
+
+def paper_recipe() -> QuantRecipe:
+    """The paper's recommended recipe (Section 4.5): W8 per-channel + A8
+    per-token, gradients and optimizer states left in fp."""
+    return QuantRecipe(
+        weights=QuantSpec(8, Granularity.PER_CHANNEL),
+        acts=QuantSpec(8, Granularity.PER_TOKEN),
+    )
+
+
+def paper_recipe_wag8() -> QuantRecipe:
+    """Section 4.5's 'all three' variant: W8/A8/G8 (worse -- gradient noise)."""
+    return QuantRecipe(
+        weights=QuantSpec(8, Granularity.PER_CHANNEL),
+        acts=QuantSpec(8, Granularity.PER_TOKEN),
+        grads=QuantSpec(8, Granularity.PER_TOKEN),
+    )
+
+
+def beyond_paper_recipe() -> QuantRecipe:
+    """Beyond-paper: paper recipe + 4-bit per-channel m1 (paper shows it is
+    feasible) + blockwise sqrt-domain 8-bit m2 (fixes the paper's Fig-12
+    divergence)."""
+    return QuantRecipe(
+        weights=QuantSpec(8, Granularity.PER_CHANNEL),
+        acts=QuantSpec(8, Granularity.PER_TOKEN),
+        adam_m1=QuantSpec(4, Granularity.PER_CHANNEL),
+        adam_m2=QuantSpec(8, Granularity.PER_CHANNEL, symmetric=False,
+                          block_size=128, sqrt_domain=True),
+    )
+
+
+PRESETS = {
+    "fp": fp_baseline,
+    "paper": paper_recipe,
+    "paper_wag8": paper_recipe_wag8,
+    "beyond": beyond_paper_recipe,
+}
+
+
+def get_recipe(name: str) -> QuantRecipe:
+    try:
+        return PRESETS[name]()
+    except KeyError:
+        raise KeyError(f"unknown recipe {name!r}; options: {sorted(PRESETS)}") from None

@@ -1,0 +1,89 @@
+"""Quantized linear layer with the paper's Fig-1 forward/backward semantics.
+
+Forward  : y = qdq_A(x) @ qdq_W(w)
+Backward : dx = g        @ qdq_W(w)^T        (REAL-valued g -- paper finds that
+                                              propagating quantization error
+                                              through the input-gradient path
+                                              destabilizes training, Fig. 10)
+           dW = qdq_A(x)^T @ qdq_G(g)        (output-grad quantized ONLY on the
+                                              weight-update path)
+STE everywhere: the w / x cotangents pass straight through their quantizers.
+
+``grads_dx`` in the recipe turns on the paper's instability ablation where the
+dx path also sees quantized gradients.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qconfig import QuantRecipe
+from repro.core.quantizer import fake_quant_nograd, maybe_fake_quant
+
+
+def _flat2d(a: jnp.ndarray) -> jnp.ndarray:
+    return a.reshape(-1, a.shape[-1])
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qlinear(x: jnp.ndarray, w: jnp.ndarray, key, recipe: QuantRecipe):
+    xq = maybe_fake_quant(x, recipe.acts)
+    wq = maybe_fake_quant(w, recipe.weights)
+    return jnp.matmul(xq, wq)
+
+
+def _qlinear_fwd(x, w, key, recipe):
+    # Error injection happens here; the *quantized* tensors are the residuals
+    # (they are what the matmul actually consumed).
+    xq = fake_quant_nograd(x, recipe.acts) if recipe.acts is not None else x
+    wq = fake_quant_nograd(w, recipe.weights) if recipe.weights is not None else w
+    y = jnp.matmul(xq, wq)
+    return y, (xq, wq, key, x.shape)
+
+
+def _qlinear_bwd(recipe, res, g):
+    xq, wq, key, x_shape = res
+
+    # --- dx path: real-valued output gradient (paper Fig. 1). -------------
+    g_dx = g
+    if recipe.grads_dx is not None:                      # instability ablation
+        k = None
+        if key is not None:
+            key, k = jax.random.split(key)
+            k = k if recipe.grads_dx.round_mode.value == "stochastic" else None
+        g_dx = fake_quant_nograd(g, recipe.grads_dx, k)
+    dx = jnp.matmul(g_dx, wq.T).reshape(x_shape)
+
+    # --- dW path: quantized output gradient. ------------------------------
+    g_dw = g
+    if recipe.grads is not None:
+        k = None
+        if key is not None and recipe.grads.round_mode.value == "stochastic":
+            k = key
+        g_dw = fake_quant_nograd(g, recipe.grads, k)
+    g2 = _flat2d(g_dw)
+    x2 = _flat2d(xq)
+    dw = jax.lax.dot_general(
+        x2, g2, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(wq.dtype)
+
+    key_ct = (None if key is None
+              else np.zeros(key.shape, dtype=jax.dtypes.float0))
+    return dx, dw, key_ct
+
+
+_qlinear.defvjp(_qlinear_fwd, _qlinear_bwd)
+
+
+def quantized_linear(x: jnp.ndarray, w: jnp.ndarray, recipe: Optional[QuantRecipe],
+                     key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Public entry point.  Falls back to a plain matmul when the recipe does
+    not quantize any linear-layer component (keeps the fp baseline's HLO free
+    of custom_vjp scaffolding)."""
+    if recipe is None or not recipe.any_linear_quant:
+        return jnp.matmul(x, w)
+    return _qlinear(x, w, key, recipe)

@@ -1,0 +1,4 @@
+from repro.data.loader import Loader
+from repro.data.synthetic import SyntheticCorpus
+
+__all__ = ["Loader", "SyntheticCorpus"]

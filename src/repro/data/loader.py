@@ -1,0 +1,70 @@
+"""Checkpointable, shard-aware batch loader over a corpus.
+
+Supplies per-family batch dicts (tokens / patches / frames) matching
+``repro.models.model_api`` input specs.  State = {"step": int} -- restoring a
+checkpoint resumes the exact data stream (deterministic sharding, DESIGN.md
+Section 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.synthetic import SyntheticCorpus
+
+
+@dataclasses.dataclass
+class Loader:
+    corpus: SyntheticCorpus
+    cfg: ArchConfig
+    batch_size: int                 # global batch
+    seq_len: int
+    dp_rank: int = 0
+    dp_size: int = 1
+    split: str = "train"
+    step: int = 0
+
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.step}
+
+    def load_state_dict(self, state: Dict[str, int]) -> None:
+        self.step = int(state["step"])
+
+    def peek(self, step: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Batch for an arbitrary step (pure; used for recovery/tests)."""
+        step = self.step if step is None else step
+        local = self.batch_size // self.dp_size
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            toks = self.corpus.batch(step, self.dp_rank, self.dp_size,
+                                     batch_size=local,
+                                     seq_len=self.seq_len - p,
+                                     split=self.split)
+            rng = np.random.RandomState((step * 31 + self.dp_rank) % 2**31)
+            patches = rng.randn(local, p, cfg.d_model).astype(np.float32) * 0.1
+            return {"patches": patches, "tokens": toks}
+        if cfg.family == "encdec":
+            enc_len = max(self.seq_len // max(cfg.frame_ratio, 1), 1)
+            toks = self.corpus.batch(step, self.dp_rank, self.dp_size,
+                                     batch_size=local, seq_len=self.seq_len,
+                                     split=self.split)
+            rng = np.random.RandomState((step * 37 + self.dp_rank) % 2**31)
+            frames = rng.randn(local, enc_len, cfg.d_model).astype(
+                np.float32) * 0.1
+            return {"frames": frames, "tokens": toks}
+        toks = self.corpus.batch(step, self.dp_rank, self.dp_size,
+                                 batch_size=local, seq_len=self.seq_len,
+                                 split=self.split)
+        return {"tokens": toks}
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        batch = self.peek()
+        self.step += 1
+        return batch
+
+    def __iter__(self):
+        return self

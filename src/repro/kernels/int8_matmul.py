@@ -1,0 +1,69 @@
+"""Int8 x int8 -> int32 tiled matmul with fused per-row/per-col dequant.
+
+The real-compute path the paper's fake quantization simulates: TPU v5e MXUs
+run int8 at ~2x bf16 throughput (394 vs 197 TOPS).  Tiling is MXU-aligned
+(128x128x128 by default): A (bm, bk) x B (bk, bn) accumulated in an int32
+VMEM scratch across the k grid dim; the epilogue applies the paper's
+W-per-channel x A-per-token scale pair -- a rank-1 rescale, which is exactly
+why that granularity pairing is the hardware-efficient one (Section 3.2).
+
+TARGET: TPU.  VALIDATED: interpret=True vs ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BN, BK = 128, 128, 128
+
+
+def _int8_matmul_kernel(x_ref, w_ref, rs_ref, cs_ref, o_ref, acc_ref, *,
+                        nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        acc = acc_ref[...].astype(jnp.float32)
+        o_ref[...] = (acc * rs_ref[...] * cs_ref[...]).astype(o_ref.dtype)
+
+
+def int8_matmul(x: jnp.ndarray, w: jnp.ndarray, row_scale: jnp.ndarray,
+                col_scale: jnp.ndarray, out_dtype=jnp.bfloat16,
+                bm: int = BM, bn: int = BN, bk: int = BK,
+                interpret: bool = False) -> jnp.ndarray:
+    """x: int8 (M, K); w: int8 (K, N); row_scale fp32 (M, 1);
+    col_scale fp32 (1, N) -> (M, N) out_dtype.
+
+    Shapes must be multiples of the block sizes (ops.py pads).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_int8_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, row_scale, col_scale)

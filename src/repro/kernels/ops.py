@@ -1,0 +1,89 @@
+"""jit'd public wrappers around the Pallas kernels: padding to block/lane
+alignment, granularity dispatch, and the quantize->int8-matmul->dequant
+composite that realizes the paper's W8A8 recipe with real integer compute.
+
+``interpret=None`` auto-selects: compiled on TPU, interpret mode on CPU
+(functional validation; the kernels TARGET TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import Granularity, QuantSpec
+from repro.kernels import int8_matmul as _mm
+from repro.kernels import qdq as _qdq
+
+
+def _auto_interpret(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return flag
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult_r: int, mult_c: int) -> jnp.ndarray:
+    r, c = x.shape
+    pr, pc = (-r) % mult_r, (-c) % mult_c
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@partial(jax.jit, static_argnames=("spec", "interpret"))
+def fused_fake_quant(x: jnp.ndarray, spec: QuantSpec,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Pallas-fused equivalent of core.quantizer.fake_quant_nograd for 2D+
+    inputs with symmetric specs (the hot training path)."""
+    interp = _auto_interpret(interpret)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r, c = x2.shape
+    x2p = _pad_to(x2, 8, 128)
+    if spec.granularity is Granularity.PER_TOKEN:
+        out = _qdq.qdq_row(x2p, spec.bits, interpret=interp)
+    else:
+        xf = x2.astype(jnp.float32)
+        if spec.granularity is Granularity.PER_CHANNEL:
+            absmax = jnp.max(jnp.abs(xf), axis=0, keepdims=True)
+            scale = jnp.maximum(absmax, 1e-12) / spec.qmax
+            scale = _pad_to(scale, 1, 128)
+            # padded columns get scale 0 -> guard
+            scale = jnp.where(scale == 0, 1.0, scale)
+        else:
+            absmax = jnp.max(jnp.abs(xf))
+            scale = (jnp.maximum(absmax, 1e-12) / spec.qmax).reshape(1, 1)
+        out = _qdq.qdq_scaled(x2p, scale, spec.bits, interpret=interp)
+    return out[:r, :c].reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def int8_quantized_matmul(x: jnp.ndarray, w: jnp.ndarray,
+                          out_dtype=jnp.bfloat16,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Real-int8 W8A8 linear: per-token quantize x, per-channel quantize w,
+    int8 MXU matmul, fused rank-1 dequant epilogue.  x: (..., K); w: (K, N)."""
+    interp = _auto_interpret(interpret)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+
+    row_absmax = jnp.max(jnp.abs(x2), axis=1, keepdims=True)
+    row_scale = jnp.maximum(row_absmax, 1e-12) / 127.0
+    col_absmax = jnp.max(jnp.abs(wf), axis=0, keepdims=True)
+    col_scale = jnp.maximum(col_absmax, 1e-12) / 127.0
+
+    xq = jnp.clip(jnp.round(x2 / row_scale), -128, 127).astype(jnp.int8)
+    wq = jnp.clip(jnp.round(wf / col_scale), -128, 127).astype(jnp.int8)
+
+    m, k = xq.shape
+    n = wq.shape[1]
+    xqp = _pad_to(xq, 128, 128)
+    wqp = _pad_to(wq, 128, 128)
+    rsp = _pad_to(row_scale, 128, 1)
+    csp = _pad_to(col_scale, 1, 128)
+    out = _mm.int8_matmul(xqp, wqp, rsp, csp, out_dtype=out_dtype,
+                          interpret=interp)
+    return out[:m, :n].reshape(*shape[:-1], n)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qdq_row_ref(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    qmax = 2 ** (bits - 1) - 1
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(xf / scale), -qmax - 1, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+def qdq_scaled_ref(x: jnp.ndarray, scale: jnp.ndarray,
+                   bits: int = 8) -> jnp.ndarray:
+    qmax = 2 ** (bits - 1) - 1
+    xf = x.astype(jnp.float32)
+    sf = scale.astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / sf), -qmax - 1, qmax)
+    return (q * sf).astype(x.dtype)
+
+
+def int8_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, row_scale: jnp.ndarray,
+                    col_scale: jnp.ndarray, out_dtype=jnp.bfloat16
+                    ) -> jnp.ndarray:
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * row_scale.astype(jnp.float32)
+            * col_scale.astype(jnp.float32)).astype(out_dtype)

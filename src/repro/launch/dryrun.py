@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import: jax locks the device count at first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract memory/cost/collective analyses.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json (incremental:
+every cell writes its own file on completion; EXPERIMENTS.md tables are
+generated from these).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config, get_shape,
+                           shape_applicable)
+from repro.core import get_recipe
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_api import (build_model, decode_input_specs,
+                                    decode_state_axes, input_specs,
+                                    prefill_batch_specs, train_batch_specs)
+from repro.optim import OptConfig
+from repro.parallel.hlo_count import count_module
+from repro.parallel.roofline import roofline_terms
+from repro.parallel.sharding import make_rules
+from repro.train.step import (TrainState, batch_shardings, init_train_state,
+                              make_train_step, state_shardings)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _mem_dict(ma) -> dict:
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "peak_memory_in_bytes"]
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(ma, k))
+        except Exception:
+            pass
+    return out
+
+
+def _model_flops(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def lower_cell(arch: str, shape_name: str, mesh, recipe_name: str = "paper",
+               remat_override=None, serve_sp=None, rules_mode: str = "train"):
+    """Returns (lowered, meta) for one cell -- the core dry-run unit."""
+    cfg = get_config(arch)
+    if remat_override is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=remat_override)
+    shape = get_shape(shape_name)
+    recipe = get_recipe(recipe_name)
+    model = build_model(cfg)
+    n_dev = mesh.devices.size
+
+    if shape.kind == "train":
+        rules = make_rules(mesh, rules_mode, cfg=cfg)
+        opt_cfg = OptConfig()
+        state_shapes = jax.eval_shape(
+            lambda k: init_train_state(model, k, recipe, opt_cfg),
+            jax.random.PRNGKey(0))
+        st_sh = state_shardings(rules, model, state_shapes)
+        b_specs = train_batch_specs(cfg, shape)
+        b_sh = batch_shardings(rules, b_specs)
+        step = make_train_step(model, recipe, opt_cfg, rules=rules)
+        fn = jax.jit(lambda state, batch: step(state, batch, None),
+                     in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, None),
+                     donate_argnums=(0,))
+        with mesh:
+            lowered = fn.lower(state_shapes, b_specs)
+        return lowered, {"kind": "train"}
+
+    if shape.kind == "prefill":
+        rules = make_rules(mesh, "serve", cfg=cfg)
+        # serving holds bf16 weights (no fp32 master at inference time)
+        p_shapes = jax.eval_shape(
+            lambda k: model.init_params(k, jnp.bfloat16),
+            jax.random.PRNGKey(0))
+        p_sh = rules.tree_shardings(p_shapes, model.axes)
+        b_specs = prefill_batch_specs(cfg, shape)
+        b_sh = batch_shardings(rules, b_specs)
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, recipe=recipe, rules=rules)
+
+        fn = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+        with mesh:
+            lowered = fn.lower(p_shapes, b_specs)
+        return lowered, {"kind": "prefill"}
+
+    # decode: KV caches are seq-sharded over the tensor axis (SP flash-decode
+    # -- softmax reductions over the sharded KV length lower to all-reduces).
+    # Required whenever kv-head count < tp (GQA caches cannot head-shard).
+    use_sp = serve_sp if serve_sp is not None else True
+    rules = make_rules(mesh, "serve_sp" if use_sp else "serve", cfg=cfg)
+    p_shapes = jax.eval_shape(lambda k: model.init_params(k, jnp.bfloat16),
+                              jax.random.PRNGKey(0))
+    p_sh = rules.tree_shardings(p_shapes, model.axes)
+    specs = decode_input_specs(cfg, shape, model)
+    axes_tree = _expand_axes(decode_state_axes(cfg), specs["state"])
+    st_sh = jax.tree_util.tree_map(
+        lambda s, ax: rules.sharding_for(
+            s.shape, ax if ax else (None,) * len(s.shape)),
+        specs["state"], axes_tree)
+    tok_sh = batch_shardings(rules, {"t": specs["token"]})["t"]
+
+    def decode_fn(params, state, token, pos):
+        return model.decode(params, state, token, pos, recipe=recipe,
+                            rules=rules)
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(p_sh, st_sh, tok_sh, None),
+                 out_shardings=(None, st_sh),
+                 donate_argnums=(1,))
+    with mesh:
+        lowered = fn.lower(p_shapes, specs["state"], specs["token"],
+                           specs["pos"])
+    return lowered, {"kind": "decode", "serve_sp": use_sp}
+
+
+def _expand_axes(axes_tree, state_tree):
+    """Broadcast per-subtree axes tuples over the matching state leaves."""
+    def expand(ax, sub):
+        if sub is None:
+            return None
+        return jax.tree_util.tree_map(lambda leaf: ax, sub)
+    return jax.tree_util.tree_map(
+        expand, axes_tree, state_tree,
+        is_leaf=lambda x: x is None or (isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             recipe_name: str = "paper", out_dir: str = OUT_DIR,
+             tag: str = "", rules_mode: str = "train") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "recipe": recipe_name, "status": "ok"}
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        result.update({"status": "skipped", "reason": reason})
+        return _write(result, out_dir, tag)
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        lowered, meta = lower_cell(arch, shape_name, mesh, recipe_name,
+                                   rules_mode=rules_mode)
+        result["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+        ma = compiled.memory_analysis()
+        print(f"[{arch} {shape_name} {mesh_name}] memory_analysis: {ma}")
+        ca = compiled.cost_analysis()
+        text = compiled.as_text()
+        # loop-aware per-device counts (XLA cost_analysis counts scan bodies
+        # once -- see parallel/hlo_count.py)
+        counts = count_module(text, n_dev)
+        print(f"[{arch} {shape_name} {mesh_name}] "
+              f"flops/dev={counts['flops']:.3e} "
+              f"bytes/dev={counts['bytes']:.3e} "
+              f"wire/dev={counts['wire_bytes']:.3e}")
+        mf = _model_flops(cfg, shape)
+        terms = roofline_terms(counts["flops"], counts["bytes"],
+                               counts["wire_bytes"], mf, n_dev)
+        result.update({
+            "kind": meta["kind"],
+            "n_devices": n_dev,
+            "memory": _mem_dict(ma),
+            "flops_per_dev": counts["flops"],
+            "bytes_per_dev": counts["bytes"],
+            "collectives": {k: v for k, v in counts.items()
+                            if k.startswith("wire_") or k == "coll_count"},
+            "wire_bytes_per_dev": counts["wire_bytes"],
+            "xla_cost_raw": {"flops_once": ca.get("flops", 0.0),
+                             "bytes_once": ca.get("bytes accessed", 0.0)},
+            "model_flops": mf,
+            "params_total": cfg.param_count(),
+            "params_active": cfg.active_param_count(),
+            "roofline": terms,
+        })
+    except Exception as e:
+        result.update({"status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]})
+    return _write(result, out_dir, tag)
+
+
+def _write(result: dict, out_dir: str, tag: str = "") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    name = (f"{result['arch']}__{result['shape']}__{result['mesh']}"
+            f"{('__' + tag) if tag else ''}.json")
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(result, f, indent=1, default=float)
+    status = result["status"]
+    extra = ""
+    if status == "ok":
+        r = result["roofline"]
+        extra = (f" dominant={r['dominant']} step={r['step_time_s']:.4f}s "
+                 f"mfu={r.get('roofline_mfu', 0):.3f}")
+    print(f"[{result['arch']} {result['shape']} {result['mesh']}] "
+          f"{status}{extra}", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--recipe", default="paper")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--rules-mode", default="train")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ([False, True] if args.both_meshes
+              else [bool(args.multi_pod)])
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        tag = ("__" + args.tag) if args.tag else ""
+        path = os.path.join(args.out,
+                            f"{arch}__{shape}__{mesh_name}{tag}.json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[{arch} {shape} {mesh_name}] cached", flush=True)
+                    continue
+        run_cell(arch, shape, mp, args.recipe, args.out, args.tag,
+                 rules_mode=args.rules_mode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Production launcher: --arch <id> --shape <shape> on whatever mesh the
+host provides (falls back to single device for local runs; on a real TPU
+slice the same entry point builds the full mesh and sharded train step).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        --smoke --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        --shape train_4k --model-parallel 4       # on hardware
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_shape, get_smoke_config
+from repro.core import get_recipe
+from repro.data import Loader, SyntheticCorpus
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.optim import OptConfig
+from repro.parallel.sharding import make_rules
+from repro.train import (LoopConfig, Trainer, init_train_state,
+                         make_eval_step, make_train_step)
+from repro.train.step import batch_shardings, state_shardings
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + small batch (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--recipe", default="paper")
+    ap.add_argument("--state-storage", default="fake")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        batch = args.batch or 8
+        seq = args.seq or 64
+    else:
+        cfg = get_config(args.arch)
+        shape = get_shape(args.shape)
+        batch = args.batch or shape.global_batch
+        seq = args.seq or shape.seq_len
+
+    model = build_model(cfg)
+    recipe = get_recipe(args.recipe)
+    mesh = make_host_mesh(args.model_parallel)
+    multi = mesh.devices.size > 1
+    rules = make_rules(mesh, "train", cfg=cfg) if multi else None
+    print(f"arch={cfg.name} devices={mesh.devices.size} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"recipe=[{recipe.describe()}] batch={batch} seq={seq}")
+
+    opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                    total_steps=args.steps, state_storage=args.state_storage)
+    state = init_train_state(model, jax.random.PRNGKey(0), recipe, opt)
+    step_fn = make_train_step(model, recipe, opt, rules=rules,
+                              accum_steps=args.accum)
+    if multi:
+        st_sh = state_shardings(rules, model, jax.eval_shape(lambda: state))
+        step = jax.jit(step_fn, in_shardings=(st_sh, None, None),
+                       out_shardings=(st_sh, None))
+    else:
+        step = jax.jit(step_fn)
+    eval_step = jax.jit(make_eval_step(model, recipe, rules=rules))
+
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
+    loader = Loader(corpus, cfg, batch_size=batch, seq_len=seq)
+    valid = Loader(corpus, cfg, batch_size=batch, seq_len=seq, split="valid")
+    mgr = CheckpointManager(args.ckpt, async_write=True) if args.ckpt else None
+    trainer = Trainer(step, eval_step, state, loader, ckpt=mgr,
+                      valid_loader=valid,
+                      loop_cfg=LoopConfig(
+                          total_steps=args.steps,
+                          ckpt_every=max(args.steps // 3, 50),
+                          eval_every=max(args.steps // 5, 20),
+                          log_every=10))
+    trainer.install_preemption_handler()
+    trainer.maybe_resume()
+    for rowd in trainer.run(rng=jax.random.PRNGKey(0)):
+        extra = f"  valid={rowd['valid_ce']:.4f}" if "valid_ce" in rowd else ""
+        print(f"step {rowd['step']:5d}  ce={rowd['ce']:.4f}"
+              f"  {rowd['sec_per_step']*1e3:.0f}ms/step{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

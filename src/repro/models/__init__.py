@@ -1,0 +1,8 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM backbones, all
+routing their linear layers through the quantized-linear core."""
+from repro.models.model_api import (Model, build_model, decode_input_specs,
+                                    input_specs, prefill_batch_specs,
+                                    train_batch_specs)
+
+__all__ = ["Model", "build_model", "decode_input_specs", "input_specs",
+           "prefill_batch_specs", "train_batch_specs"]

@@ -1,0 +1,260 @@
+"""Multi-head attention with GQA/MQA, RoPE, qk-norm, KV cache, cross-attn.
+
+All weight-bearing projections route through ``repro.core.quantized_linear``
+(the paper's scope: linear layers of the transformer).  The score/context
+einsums are not linear layers and stay in the carrier precision.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core.qconfig import QuantRecipe
+from repro.core.qlinear import quantized_linear
+from repro.models.common import ParamSpec, constrain, rmsnorm, rope
+
+
+def qlin(x, w, b, recipe: Optional[QuantRecipe]):
+    y = quantized_linear(x, w, recipe)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def attn_spec(cfg, d_in: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = d_in if d_in is not None else cfg.d_model
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads"), "fan_in"),
+        "wk": ParamSpec((d, k * hd), ("embed", "kv"), "fan_in"),
+        "wv": ParamSpec((d, k * hd), ("embed", "kv"), "fan_in"),
+        "wo": ParamSpec((h * hd, d), ("heads", "embed"), "fan_in",
+                        scale=1.0 / max(cfg.n_layers, 1)),
+    }
+    if cfg.use_bias:
+        spec.update({
+            "bq": ParamSpec((h * hd,), ("heads",), "zeros"),
+            "bk": ParamSpec((k * hd,), ("kv",), "zeros"),
+            "bv": ParamSpec((k * hd,), ("kv",), "zeros"),
+            "bo": ParamSpec((d,), ("embed",), "zeros"),
+        })
+    if cfg.qk_norm:
+        spec.update({
+            "q_norm": ParamSpec((hd,), (None,), "ones"),
+            "k_norm": ParamSpec((hd,), (None,), "ones"),
+        })
+    return spec
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype, d_in: Optional[int] = None
+               ) -> Dict[str, jnp.ndarray]:
+    k, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_seq, k, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, k, hd), dtype),
+    }
+
+
+MAX_DENSE_Q = 1024        # q-chunk length for the memory-bounded path
+
+
+def _mask_chunk(mask, qpos: jnp.ndarray, s_kv: int) -> Optional[jnp.ndarray]:
+    """Materialize a (len(qpos), s_kv) boolean mask for one query chunk.
+    ``mask`` is None (full), a dict spec, or a ready (Sq, Skv) array."""
+    if mask is None:
+        return None
+    if isinstance(mask, dict):
+        kpos = jnp.arange(s_kv)
+        kind = mask["kind"]
+        if kind == "causal":
+            return kpos[None, :] <= qpos[:, None]
+        if kind == "prefix":
+            p = mask["prefix"]
+            base = kpos[None, :] <= qpos[:, None]
+            return base | ((qpos[:, None] < p) & (kpos[None, :] < p))
+        if kind == "full":
+            return None
+        raise ValueError(kind)
+    return mask
+
+
+def _attend_block(qg, k, v, mask_b) -> jnp.ndarray:
+    """qg: (B,qc,K,G,hd); k,v: (B,Skv,K,hd); mask_b: (qc,Skv) or None.
+
+    Keeps XLA's native softmax pattern: a hand-rolled "minimal-pass" variant
+    (bf16 probs, normalization on the context) was tried and REFUTED -- it
+    added an fp32 exp slab before the cast and broke XLA's softmax fusion
+    (memory term 5.65s -> 6.28s; see EXPERIMENTS.md Section Perf iter 2)."""
+    hd = qg.shape[-1]
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if mask_b is not None:
+        if mask_b.ndim == 2:
+            mask_b = mask_b[None, None, None]
+        scores = jnp.where(mask_b, scores, jnp.asarray(-1e30, scores.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+
+
+def _pick_chunk(sq: int, skv: int, b: int, h: int, rules,
+                budget_bytes: float = 768e6) -> int:
+    """Largest power-of-two q-chunk (<= MAX_DENSE_Q, dividing sq) whose fp32
+    score slab (b_loc, h_loc, chunk, skv) stays under the budget."""
+    dp = rules.dp_size if rules is not None else 1
+    tp = rules.tp_size if rules is not None else 1
+    b_loc = max(b // max(dp, 1), 1)
+    h_loc = h // tp if h % tp == 0 else h
+    chunk = MAX_DENSE_Q
+    while chunk > 128 and b_loc * h_loc * chunk * skv * 4 > budget_bytes:
+        chunk //= 2
+    while sq % chunk:
+        chunk //= 2
+    return max(chunk, 1)
+
+
+def _flash_path_ok(impl: str, sq: int, mask) -> bool:
+    if impl != "flash_pallas" or sq == 1:
+        return False
+    return mask is None or (isinstance(mask, dict)
+                            and mask["kind"] in ("causal", "full"))
+
+
+def _gqa_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                mask, rules, q_offset=0, impl: str = "xla") -> jnp.ndarray:
+    """q: (B,Sq,H,hd); k,v: (B,Skv,K,hd).  Softmax in fp32.
+
+    Training/prefill (Sq > 1): kv heads are repeated to the full head count
+    so the head dim shards cleanly on the tensor axis (GQA group dims like
+    8x4 cannot map onto a 16-way mesh axis), and the computation runs
+    query-chunked: the (Sq,Skv) score matrix never materializes -- only a
+    (chunk,Skv) slab per scan step, with per-chunk masks synthesized from the
+    mask spec (flash-attention memory behaviour, XLA-native).
+
+    Decode (Sq == 1): grouped-query form so the KV cache is NOT inflated."""
+    b, sq, h, hd = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+
+    if sq == 1:
+        qg = q.reshape(b, sq, kheads, g, hd)
+        qpos = jnp.arange(sq) + q_offset
+        ctx = _attend_block(qg, k, v, _mask_chunk(mask, qpos, k.shape[1]))
+        return ctx.reshape(b, sq, h * hd)
+
+    if g > 1:
+        # pre-repeat boundary: gather seq / settle kv sharding BEFORE the
+        # broadcast-reshape, else SPMD back-propagates the post-repeat head
+        # sharding into half-head splits (involuntary full rematerialization)
+        k = constrain(k, rules, "batch", None, "kv", None)
+        v = constrain(v, rules, "batch", None, "kv", None)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    # Megatron-SP boundary: gather sequence, shard heads (clean bwd since
+    # GQA group dims like 8x4 cannot map onto a 16-way axis, but the repeated
+    # h-dim can).
+    k = constrain(k, rules, "batch", None, "heads", None)
+    v = constrain(v, rules, "batch", None, "heads", None)
+    qg = constrain(q, rules, "batch", None, "heads", None
+                   ).reshape(b, sq, h, 1, hd)
+
+    if _flash_path_ok(impl, sq, mask) and rules is None:
+        # Pallas flash attention: VMEM-resident online softmax (fwd+bwd
+        # kernels, kernels/flash_attn.py).  Single-device/TPU path; under
+        # pjit the XLA q-chunked path below is used (interpret-mode pallas
+        # does not partition).
+        from repro.kernels.flash_attn import flash_attention
+        qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+        kt = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], hd)
+        vt = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], hd)
+        causal = mask is not None and mask.get("kind") == "causal"
+        ot = flash_attention(qt, kt, vt, causal, q_offset)
+        return ot.reshape(b, h, sq, hd).transpose(0, 2, 1, 3).reshape(
+            b, sq, h * hd)
+
+    chunk = _pick_chunk(sq, k.shape[1], b, h, rules)
+    if sq <= chunk:
+        qpos = jnp.arange(sq) + q_offset
+        ctx = _attend_block(qg, k, v, _mask_chunk(mask, qpos, k.shape[1]))
+        return ctx.reshape(b, sq, h * hd)
+
+    n_chunks = sq // chunk
+
+    def body(_, xs):
+        qc, i = xs
+        qpos = jnp.arange(chunk) + i * chunk + q_offset
+        mb = _mask_chunk(mask, qpos, k.shape[1])
+        return None, _attend_block(qc, k, v, mb)
+
+    # checkpoint: the chunk scan's backward recomputes scores/probs from
+    # (qc, k, v) instead of saving a probs slab per chunk
+    body = jax.checkpoint(body, prevent_cse=False)
+    q_chunks = jnp.moveaxis(qg.reshape(b, n_chunks, chunk, h, 1, hd), 1, 0)
+    _, chunks = jax.lax.scan(body, None, (q_chunks, jnp.arange(n_chunks)))
+    # chunks: (n_chunks, B, chunk, H, 1, hd) -> (B, Sq, H*hd)
+    ctx = jnp.moveaxis(chunks, 0, 1).reshape(b, sq, h, 1, hd)
+    return ctx.reshape(b, sq, h * hd)
+
+
+def attn_apply(params, x: jnp.ndarray, cfg, *,
+               recipe: Optional[QuantRecipe], rules,
+               positions: jnp.ndarray,
+               mask: Optional[jnp.ndarray],
+               kv_source: Optional[jnp.ndarray] = None,
+               cache: Optional[Dict[str, jnp.ndarray]] = None,
+               cache_offset=None,
+               ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """One attention call.
+
+    * self-attention:  kv_source is None -> k/v from x, RoPE applied.
+    * cross-attention: kv_source is the encoder output; no RoPE on k.
+    * decode:          cache holds (B, S_max, K, hd); the new k/v rows are
+      written at ``cache_offset`` and attention runs over the whole buffer
+      with a validity mask supplied by the caller.
+    """
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = qlin(x, params["wq"], params.get("bq"), recipe).reshape(b, s, h, hd)
+    src = x if kv_source is None else kv_source
+    k = qlin(src, params["wk"], params.get("bk"), recipe)
+    v = qlin(src, params["wv"], params.get("bv"), recipe)
+    k = k.reshape(b, k.shape[1], kh, hd)
+    v = v.reshape(b, v.shape[1], kh, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+
+    if cfg.pos == "rope" and kv_source is None:
+        q = rope(q, positions, cfg.rope_theta)
+        kv_pos = positions if cache is None else (
+            cache_offset + jnp.arange(s)[None, :])
+        k = rope(k, kv_pos, cfg.rope_theta)
+    elif cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # decode / incremental: write rows at cache_offset, attend over buffer
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_offset, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_offset, 0, 0))
+        ck = constrain(ck, rules, "batch", "kv_seq", "kv", None)
+        cv = constrain(cv, rules, "batch", "kv_seq", "kv", None)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+
+    ctx = _gqa_attend(q, k, v, mask, rules,
+                      impl=getattr(cfg, "attention_impl", "xla"))
+    # named for the remat policy: saving ctx prunes one full score-chain
+    # recompute from the backward (EXPERIMENTS.md Section Perf iter 4)
+    ctx = checkpoint_name(ctx, "attn_ctx")
+    y = qlin(ctx, params["wo"], params.get("bo"), recipe)
+    return y, new_cache

@@ -1,0 +1,74 @@
+"""Per-family transformer blocks (pre-norm residual wiring).
+
+One block = the unit scanned over by the layer loop in ``lm.py``.  Returns
+auxiliary losses (MoE load-balance / z-loss) so the scan can accumulate them.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantRecipe
+from repro.models.attention import attn_apply, attn_spec
+from repro.models.common import ParamSpec, apply_norm, constrain, norm_spec
+from repro.models.mlp import mlp_apply, mlp_spec
+from repro.models.moe import moe_apply, moe_spec
+from repro.models.ssm import ssm_apply, ssm_decode_step, ssm_spec
+
+
+def block_spec(cfg) -> Dict:
+    if cfg.family in ("ssm",):
+        return {"norm": norm_spec(cfg.d_model, cfg.norm), "ssm": ssm_spec(cfg)}
+    if cfg.family == "hybrid":
+        # the scanned unit is a mamba layer; the shared attn block lives at
+        # the LM level (weights shared across invocations)
+        return {"norm": norm_spec(cfg.d_model, cfg.norm), "ssm": ssm_spec(cfg)}
+    spec = {
+        "ln1": norm_spec(cfg.d_model, cfg.norm),
+        "attn": attn_spec(cfg),
+        "ln2": norm_spec(cfg.d_model, cfg.norm),
+    }
+    if cfg.n_experts:
+        spec["moe"] = moe_spec(cfg)
+    else:
+        spec["mlp"] = mlp_spec(cfg)
+    return spec
+
+
+def block_apply(params, h: jnp.ndarray, cfg, *,
+                recipe: Optional[QuantRecipe], rules,
+                positions, mask,
+                cache=None, cache_offset=None,
+                ssm_state=None, decode: bool = False):
+    """Returns (h, new_cache, new_ssm_state, aux, z_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        x = apply_norm(h, params["norm"], cfg.norm)
+        if decode:
+            y, new_state = ssm_decode_step(params["ssm"], x, cfg,
+                                           recipe=recipe, rules=rules,
+                                           state=ssm_state)
+        else:
+            y, new_state = ssm_apply(params["ssm"], x, cfg, recipe=recipe,
+                                     rules=rules, state=ssm_state,
+                                     return_state=ssm_state is not None)
+        h = h + y
+        h = constrain(h, rules, "batch", "seq", None)
+        return h, None, new_state, zero, zero
+
+    x = apply_norm(h, params["ln1"], cfg.norm)
+    y, new_cache = attn_apply(params["attn"], x, cfg, recipe=recipe,
+                              rules=rules, positions=positions, mask=mask,
+                              cache=cache, cache_offset=cache_offset)
+    h = h + y
+    h = constrain(h, rules, "batch", "seq", None)
+    x = apply_norm(h, params["ln2"], cfg.norm)
+    if cfg.n_experts:
+        y, aux, z = moe_apply(params["moe"], x, cfg, recipe=recipe, rules=rules)
+    else:
+        y, aux, z = mlp_apply(params["mlp"], x, cfg, recipe=recipe,
+                              rules=rules), zero, zero
+    h = h + y
+    h = constrain(h, rules, "batch", "seq", None)
+    return h, new_cache, None, aux, z

@@ -1,0 +1,203 @@
+"""Encoder-decoder LM (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d) which pass through a small adapter
+linear.  Encoder: bidirectional self-attn blocks.  Decoder: causal self-attn +
+cross-attn + MLP.  Decode caches self-attn KV incrementally and cross-attn KV
+once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_spec, init_cache, qlin
+from repro.models.common import (ParamSpec, apply_norm, cast_params,
+                                 causal_mask, constrain, norm_spec,
+                                 stack_layer_specs)
+from repro.models.lm import chunked_ce, embed_tokens, logits_chunk
+from repro.models.mlp import mlp_apply, mlp_spec
+
+
+def _enc_block_spec(cfg):
+    return {
+        "ln1": norm_spec(cfg.d_model, cfg.norm),
+        "attn": attn_spec(cfg),
+        "ln2": norm_spec(cfg.d_model, cfg.norm),
+        "mlp": mlp_spec(cfg),
+    }
+
+
+def _dec_block_spec(cfg):
+    return {
+        "ln1": norm_spec(cfg.d_model, cfg.norm),
+        "self_attn": attn_spec(cfg),
+        "ln2": norm_spec(cfg.d_model, cfg.norm),
+        "cross_attn": attn_spec(cfg),
+        "ln3": norm_spec(cfg.d_model, cfg.norm),
+        "mlp": mlp_spec(cfg),
+    }
+
+
+def encdec_spec(cfg) -> Dict:
+    spec = {
+        "frame_proj": ParamSpec((cfg.d_model, cfg.d_model),
+                                ("embed2", "embed"), "fan_in"),
+        "enc_blocks": stack_layer_specs(_enc_block_spec(cfg), cfg.enc_layers),
+        "enc_norm": norm_spec(cfg.d_model, cfg.norm),
+        "embed": ParamSpec((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                           "normal", 0.02),
+        "dec_blocks": stack_layer_specs(_dec_block_spec(cfg), cfg.n_layers),
+        "final_norm": norm_spec(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_padded),
+                                    ("embed", "vocab"), "fan_in")
+    return spec
+
+
+def encode(params, frames: jnp.ndarray, cfg, *, recipe=None, rules=None
+           ) -> jnp.ndarray:
+    dtype = jnp.dtype(cfg.dtype)
+    h = qlin(frames.astype(dtype), params["frame_proj"], None, recipe)
+    h = constrain(h, rules, "batch", "seq", None)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(hh, bp):
+        x = apply_norm(hh, bp["ln1"], cfg.norm)
+        y, _ = attn_apply(bp["attn"], x, cfg, recipe=recipe, rules=rules,
+                          positions=positions, mask=None)    # bidirectional
+        hh = hh + y
+        x = apply_norm(hh, bp["ln2"], cfg.norm)
+        hh = hh + mlp_apply(bp["mlp"], x, cfg, recipe=recipe, rules=rules)
+        hh = constrain(hh, rules, "batch", "seq", None)
+        return hh, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return apply_norm(h, params["enc_norm"], cfg.norm)
+
+
+def _dec_block(bp, h, enc_out, cfg, *, recipe, rules, positions, mask,
+               cache=None, cache_offset=None, cross_kv=None):
+    """cross_kv: precomputed {"k","v"} (B,S_enc,K,hd) or None (compute)."""
+    x = apply_norm(h, bp["ln1"], cfg.norm)
+    y, ncache = attn_apply(bp["self_attn"], x, cfg, recipe=recipe,
+                           rules=rules, positions=positions, mask=mask,
+                           cache=cache, cache_offset=cache_offset)
+    h = h + y
+    x = apply_norm(h, bp["ln2"], cfg.norm)
+    if cross_kv is not None:
+        from repro.models.attention import _gqa_attend
+        b, sq = x.shape[0], x.shape[1]
+        hd = cfg.head_dim
+        q = qlin(x, bp["cross_attn"]["wq"], bp["cross_attn"].get("bq"),
+                 recipe).reshape(b, sq, cfg.n_heads, hd)
+        ctx = _gqa_attend(q, cross_kv["k"], cross_kv["v"], None, rules)
+        y = qlin(ctx, bp["cross_attn"]["wo"], bp["cross_attn"].get("bo"),
+                 recipe)
+    else:
+        y, _ = attn_apply(bp["cross_attn"], x, cfg, recipe=recipe,
+                          rules=rules, positions=positions, mask=None,
+                          kv_source=enc_out)
+    h = h + y
+    x = apply_norm(h, bp["ln3"], cfg.norm)
+    h = h + mlp_apply(bp["mlp"], x, cfg, recipe=recipe, rules=rules)
+    return constrain(h, rules, "batch", "seq", None), ncache
+
+
+def encdec_loss(params, batch, cfg, *, recipe=None, rules=None, rng=None
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {"frames": (B,S_enc,d), "tokens": (B,S_dec+1)}."""
+    dtype = jnp.dtype(cfg.dtype)
+    params = cast_params(params, dtype)
+    enc_out = encode(params, batch["frames"], cfg, recipe=recipe, rules=rules)
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    b, s = inp.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = embed_tokens(params, inp, cfg, positions=positions, dtype=dtype)
+    mask = {"kind": "causal"}
+
+    def body(hh, bp):
+        hh, _ = _dec_block(bp, hh, enc_out, cfg, recipe=recipe, rules=rules,
+                           positions=positions, mask=mask)
+        return hh, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    ce = chunked_ce(params, h, labels, batch.get("loss_mask"), cfg, rules)
+    return ce, {"ce": ce, "loss": ce}
+
+
+def encdec_prefill(params, batch, cfg, *, recipe=None, rules=None,
+                   max_seq: Optional[int] = None):
+    """Encode frames, precompute cross KV per layer, run the decoder prompt.
+    Returns (last_logits, cache) with cache = {"self": stacked kv,
+    "cross": stacked kv}."""
+    dtype = jnp.dtype(cfg.dtype)
+    params = cast_params(params, dtype)
+    enc_out = encode(params, batch["frames"], cfg, recipe=recipe, rules=rules)
+    b, s_enc, _ = enc_out.shape
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def cross_kv_one(bp):
+        k = qlin(enc_out, bp["cross_attn"]["wk"], bp["cross_attn"].get("bk"),
+                 recipe).reshape(b, s_enc, kh, hd)
+        v = qlin(enc_out, bp["cross_attn"]["wv"], bp["cross_attn"].get("bv"),
+                 recipe).reshape(b, s_enc, kh, hd)
+        return {"k": k, "v": v}
+
+    cross = jax.lax.map(cross_kv_one, params["dec_blocks"])
+
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    max_seq = max_seq or s
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = embed_tokens(params, tokens, cfg, positions=positions, dtype=dtype)
+    mask = {"kind": "causal"}
+    self_cache0 = init_cache(cfg, b, max_seq, dtype)
+
+    def body(hh, xs):
+        bp, ckv = xs
+        cache = {"k": jnp.zeros_like(self_cache0["k"]),
+                 "v": jnp.zeros_like(self_cache0["v"])}
+        hh, ncache = _dec_block(bp, hh, None, cfg, recipe=recipe, rules=rules,
+                                positions=positions, mask=mask, cache=cache,
+                                cache_offset=0, cross_kv=ckv)
+        return hh, ncache
+
+    h, self_caches = jax.lax.scan(body, h, (params["dec_blocks"], cross))
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = logits_chunk(params, h[:, -1:, :], cfg)[:, 0, :]
+    return logits, {"self": self_caches, "cross": cross}
+
+
+def encdec_decode(params, cache, token: jnp.ndarray, pos: jnp.ndarray, cfg, *,
+                  recipe=None, rules=None):
+    dtype = jnp.dtype(cfg.dtype)
+    params = cast_params(params, dtype)
+    b = token.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    h = embed_tokens(params, token, cfg, positions=positions, dtype=dtype)
+    max_seq = cache["self"]["k"].shape[2]
+    mask = (jnp.arange(max_seq) <= pos)[None, :]
+
+    def body(hh, xs):
+        bp, sc, ckv = xs
+        hh, ncache = _dec_block(bp, hh, None, cfg, recipe=recipe, rules=rules,
+                                positions=positions, mask=mask, cache=sc,
+                                cache_offset=pos, cross_kv=ckv)
+        return hh, ncache
+
+    h, self_caches = jax.lax.scan(
+        body, h, (params["dec_blocks"], cache["self"], cache["cross"]))
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = logits_chunk(params, h, cfg)[:, 0, :]
+    return logits, {"self": self_caches, "cross": cache["cross"]}

@@ -1,0 +1,375 @@
+"""Decoder-only language model covering dense / MoE / SSM / hybrid / VLM
+families: scan-over-layers (compile-time O(1) in depth), remat, chunked
+cross-entropy (never materializes (B,S,V) logits), KV-cache prefill/decode.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantRecipe
+from repro.models.attention import attn_apply, attn_spec, init_cache, qlin
+from repro.models.blocks import block_apply, block_spec
+from repro.models.common import (ParamSpec, apply_norm, cast_params,
+                                 causal_mask, constrain, norm_spec,
+                                 prefix_lm_mask, stack_layer_specs)
+from repro.models.mlp import mlp_apply, mlp_spec
+from repro.models.ssm import init_ssm_state, ssm_dims
+from repro.configs.base import ArchConfig
+
+AUX_COEF = 0.01
+ZLOSS_COEF = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def shared_block_spec(cfg) -> Dict:
+    """zamba2: one attention+MLP block shared across the depth, operating on
+    concat(h, input_embedding) in 2*d_model space, projected back to d."""
+    d2 = 2 * cfg.d_model
+    return {
+        "ln1": norm_spec(d2, cfg.norm),
+        "attn": attn_spec(cfg, d_in=d2),
+        "ln2": norm_spec(d2, cfg.norm),
+        "mlp": mlp_spec(cfg, d_in=d2, d_ff=cfg.d_ff),
+        "proj": ParamSpec((d2, cfg.d_model), ("embed2", "embed"), "fan_in",
+                          scale=1.0 / max(cfg.n_layers, 1)),
+    }
+
+
+def lm_spec(cfg: ArchConfig) -> Dict:
+    spec: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                           "normal", 0.02),
+    }
+    if cfg.pos == "learned":
+        spec["pos_embed"] = ParamSpec((cfg.max_seq, cfg.d_model),
+                                      (None, "embed"), "normal", 0.01)
+    spec["blocks"] = stack_layer_specs(block_spec(cfg), cfg.n_layers)
+    spec["final_norm"] = norm_spec(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_padded),
+                                    ("embed", "vocab"), "fan_in")
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        spec["shared"] = shared_block_spec(cfg)
+    if cfg.family == "vlm":
+        # stub frontend: a single linear adapting precomputed patch embeddings
+        spec["patch_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                       ("embed2", "embed"), "fan_in")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens: jnp.ndarray, cfg, positions=None,
+                 dtype=None) -> jnp.ndarray:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    e = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.embed_scale:
+        e = e * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    if cfg.pos == "learned":
+        assert positions is not None
+        pe = jnp.take(params["pos_embed"], positions, axis=0).astype(dtype)
+        e = e + pe
+    return e
+
+
+def logits_chunk(params, h: jnp.ndarray, cfg) -> jnp.ndarray:
+    """(B, C, d) -> (B, C, V_padded) in fp32, padded tail masked to -inf."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bcd,vd->bcv", h, params["embed"].astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bcd,dv->bcv", h,
+                            params["lm_head"].astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+    if cfg.vocab_padded > cfg.vocab_size:
+        neg = jnp.asarray(-1e30, logits.dtype)
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(mask[None, None, :], logits, neg)
+    return logits
+
+
+def _chunk_len(s: int, target: int) -> int:
+    if s <= target:
+        return s
+    for c in range(target, 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def chunked_ce(params, h: jnp.ndarray, labels: jnp.ndarray,
+               mask: Optional[jnp.ndarray], cfg, rules) -> jnp.ndarray:
+    """Cross entropy computed in sequence chunks so (B,S,V) never exists.
+    Vocab stays sharded ('vocab' -> tensor axis) inside each chunk."""
+    b, s, _ = h.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    chunk = _chunk_len(s, cfg.logit_chunk or s)
+    n_chunks = s // chunk
+
+    def body(carry, i):
+        tot, cnt = carry
+        hc = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, 1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, 1)
+        logits = logits_chunk(params, hc, cfg)
+        logits = constrain(logits, rules, "batch", None, "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((logz - gold) * mc.astype(jnp.float32))
+        cnt = cnt + jnp.sum(mc.astype(jnp.float32))
+        return (tot, cnt), None
+
+    # checkpoint: the backward recomputes each chunk's logits instead of
+    # keeping an fp32 (B, chunk, V) slab alive per chunk
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2,
+                                 jnp.arange(n_chunks))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Layer stack execution
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(params, h, cfg, *, recipe, rules, positions, mask,
+                 caches=None, cache_offset=None, ssm_states=None,
+                 decode=False):
+    """Homogeneous layer scan.  caches/ssm_states are stacked (L, ...)."""
+
+    def body(carry, xs):
+        hh, aux, z = carry
+        bp, cache, sst = xs
+        hh, ncache, nsst, a, zz = block_apply(
+            bp, hh, cfg, recipe=recipe, rules=rules, positions=positions,
+            mask=mask, cache=cache, cache_offset=cache_offset,
+            ssm_state=sst, decode=decode)
+        return (hh, aux + a, z + zz), (ncache, nsst)
+
+    if cfg.remat and not decode:
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.save_only_these_names("attn_ctx"))
+
+    zero = jnp.zeros((), jnp.float32)
+    (h, aux, z), (ncaches, nssts) = jax.lax.scan(
+        body, (h, zero, zero), (params["blocks"], caches, ssm_states))
+    return h, ncaches, nssts, aux, z
+
+
+def _shared_attn(params, h, emb0, cfg, *, recipe, rules, positions, mask,
+                 cache=None, cache_offset=None):
+    """zamba2 shared block: operates on concat(h, emb0)."""
+    sp = params["shared"]
+    x2 = jnp.concatenate([h, emb0], axis=-1)
+    x = apply_norm(x2, sp["ln1"], cfg.norm)
+    y, ncache = attn_apply(sp["attn"], x, cfg, recipe=recipe, rules=rules,
+                           positions=positions, mask=mask, cache=cache,
+                           cache_offset=cache_offset)
+    x2 = x2 + y
+    x = apply_norm(x2, sp["ln2"], cfg.norm)
+    x2 = x2 + mlp_apply(sp["mlp"], x, cfg, recipe=recipe, rules=rules)
+    return h + qlin(x2, sp["proj"], None, recipe), ncache
+
+
+def _hybrid_blocks(params, h, cfg, *, recipe, rules, positions, mask,
+                   emb0, caches=None, cache_offset=None, ssm_states=None,
+                   decode=False):
+    """zamba2: groups of `hybrid_attn_every` mamba layers, each followed by
+    the shared attention block.  caches: (G, B, S, K, hd); ssm stacked (L,...)."""
+    per = cfg.hybrid_attn_every
+    groups = cfg.n_layers // per
+    grouped = jax.tree_util.tree_map(
+        lambda x: x.reshape(groups, per, *x.shape[1:]), params["blocks"])
+    g_ssm = (None if ssm_states is None else jax.tree_util.tree_map(
+        lambda x: x.reshape(groups, per, *x.shape[1:]), ssm_states))
+
+    def group_body(carry, xs):
+        hh, aux, z = carry
+        gparams, gssm, gcache = xs
+
+        def inner(c, xs2):
+            hhh, a2, z2 = c
+            bp, sst = xs2
+            hhh, _, nsst, a, zz = block_apply(
+                bp, hhh, cfg, recipe=recipe, rules=rules, positions=positions,
+                mask=None, ssm_state=sst, decode=decode)
+            return (hhh, a2 + a, z2 + zz), nsst
+
+        (hh, aux, z), nssm = jax.lax.scan(inner, (hh, aux, z), (gparams, gssm))
+        hh, ncache = _shared_attn(params, hh, emb0, cfg, recipe=recipe,
+                                  rules=rules, positions=positions, mask=mask,
+                                  cache=gcache, cache_offset=cache_offset)
+        return (hh, aux, z), (nssm, ncache)
+
+    if cfg.remat and not decode:
+        group_body = jax.checkpoint(
+            group_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.save_only_these_names("attn_ctx"))
+
+    zero = jnp.zeros((), jnp.float32)
+    (h, aux, z), (nssm, ncaches) = jax.lax.scan(
+        group_body, (h, zero, zero), (grouped, g_ssm, caches))
+    if nssm is not None:
+        nssm = jax.tree_util.tree_map(
+            lambda x: x.reshape(cfg.n_layers, *x.shape[2:]), nssm)
+    return h, ncaches, nssm, aux, z
+
+
+def run_stack(params, h, cfg, **kw):
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        return _hybrid_blocks(params, h, cfg, **kw)
+    kw.pop("emb0", None)
+    return _scan_blocks(params, h, cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Train loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
+            recipe: Optional[QuantRecipe], rules=None,
+            rng: Optional[jax.Array] = None) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {"tokens": (B, S+1) int32[, "patches": (B,P,d)]}.
+    Returns (loss, metrics)."""
+    dtype = jnp.dtype(cfg.dtype)
+    params = cast_params(params, dtype)
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    b, s_text = inp.shape
+    positions_text = jnp.broadcast_to(jnp.arange(s_text), (b, s_text))
+
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(dtype)
+        patches = qlin(patches, params["patch_proj"], None, None)
+        p = patches.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(p + s_text), (b, p + s_text))
+        e = embed_tokens(params, inp, cfg, positions=positions_text + p,
+                         dtype=dtype)
+        h = jnp.concatenate([patches, e], axis=1)
+        mask = {"kind": "prefix", "prefix": p}
+    else:
+        positions = positions_text
+        h = embed_tokens(params, inp, cfg, positions=positions, dtype=dtype)
+        mask = {"kind": "causal"} if cfg.family != "ssm" else None
+
+    h = constrain(h, rules, "batch", "seq", None)
+    h, _, _, aux, z = run_stack(params, h, cfg, recipe=recipe, rules=rules,
+                                positions=positions, mask=mask, emb0=h)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+
+    if cfg.family == "vlm":
+        h = h[:, h.shape[1] - s_text:, :]
+    loss_mask = batch.get("loss_mask")
+    ce = chunked_ce(params, h, labels, loss_mask, cfg, rules)
+    total = ce
+    metrics = {"ce": ce}
+    if cfg.n_experts:
+        total = total + AUX_COEF * aux / cfg.n_layers + \
+            ZLOSS_COEF * z / cfg.n_layers
+        metrics.update({"moe_aux": aux / cfg.n_layers,
+                        "moe_z": z / cfg.n_layers})
+    metrics["loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype):
+    """Stacked decode state for the whole stack."""
+    caches = None
+    ssm_states = None
+    if cfg.family in ("dense", "moe", "vlm"):
+        one = init_cache(cfg, batch, max_seq, dtype)
+        caches = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), one)
+    elif cfg.family == "ssm":
+        one = init_ssm_state(cfg, batch, dtype)
+        ssm_states = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), one)
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.hybrid_attn_every
+        one = init_cache(cfg, batch, max_seq, dtype)
+        caches = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (groups,) + x.shape).copy(), one)
+        s_one = init_ssm_state(cfg, batch, dtype)
+        ssm_states = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(),
+            s_one)
+    return caches, ssm_states
+
+
+def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
+               recipe=None, rules=None, max_seq: Optional[int] = None):
+    """Process the full prompt; returns (last_logits (B,V), caches, ssm_states).
+    Cache buffers sized to max_seq (defaults to prompt length)."""
+    dtype = jnp.dtype(cfg.dtype)
+    params = cast_params(params, dtype)
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    if cfg.family == "vlm" and "patches" in batch:
+        patches = batch["patches"].astype(dtype)
+        patches = qlin(patches, params["patch_proj"], None, None)
+        p = patches.shape[1]
+        s = p + tokens.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        e = embed_tokens(params, tokens, cfg,
+                         positions=positions[:, p:], dtype=dtype)
+        h = jnp.concatenate([patches, e], axis=1)
+        max_seq = max_seq or s
+        mask_full = {"kind": "prefix", "prefix": p}
+    else:
+        s = tokens.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        h = embed_tokens(params, tokens, cfg, positions=positions, dtype=dtype)
+        max_seq = max_seq or s
+        mask_full = {"kind": "causal"}
+    h = constrain(h, rules, "batch", "seq", None)
+
+    caches, ssm_states = init_caches(cfg, b, max_seq, dtype)
+    mask = None
+    if cfg.family != "ssm":
+        mask = mask_full
+    h, caches, ssm_states, _, _ = run_stack(
+        params, h, cfg, recipe=recipe, rules=rules, positions=positions,
+        mask=mask, caches=caches, cache_offset=0, ssm_states=ssm_states,
+        emb0=h)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = logits_chunk(params, h[:, -1:, :], cfg)[:, 0, :]
+    return logits, caches, ssm_states
+
+
+def lm_decode(params, caches, ssm_states, token: jnp.ndarray,
+              pos: jnp.ndarray, cfg: ArchConfig, *, recipe=None, rules=None):
+    """One-token decode.  token: (B,1) int32; pos: scalar int32 (number of
+    tokens already in the cache).  Returns (logits (B,V), caches, ssm_states)."""
+    dtype = jnp.dtype(cfg.dtype)
+    params = cast_params(params, dtype)
+    b = token.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    h = embed_tokens(params, token, cfg, positions=positions, dtype=dtype)
+
+    mask = None
+    if cfg.family != "ssm":
+        max_seq = (jax.tree_util.tree_leaves(caches)[0].shape
+                   [2])                                     # (L,B,S,K,hd)
+        mask = (jnp.arange(max_seq) <= pos)[None, :]        # (1, max_seq)
+    h, caches, ssm_states, _, _ = run_stack(
+        params, h, cfg, recipe=recipe, rules=rules, positions=positions,
+        mask=mask, caches=caches, cache_offset=pos, ssm_states=ssm_states,
+        decode=True, emb0=h)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = logits_chunk(params, h, cfg)[:, 0, :]
+    return logits, caches, ssm_states

@@ -1,0 +1,59 @@
+"""Dense feed-forward variants: gated (SwiGLU/GeGLU) and classic 2-layer.
+
+All projections go through the quantized linear (paper scope).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantRecipe
+from repro.models.attention import qlin
+from repro.models.common import ACT_FNS, ParamSpec, constrain
+
+
+def mlp_spec(cfg, d_in: Optional[int] = None, d_ff: Optional[int] = None
+             ) -> Dict[str, ParamSpec]:
+    d = d_in if d_in is not None else cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.mlp_kind == "gated":
+        spec = {
+            "w_gate": ParamSpec((d, ff), ("embed", "mlp"), "fan_in"),
+            "w_up": ParamSpec((d, ff), ("embed", "mlp"), "fan_in"),
+            "w_down": ParamSpec((ff, d), ("mlp", "embed"), "fan_in",
+                                scale=1.0 / max(cfg.n_layers, 1)),
+        }
+        if cfg.use_bias:
+            spec.update({
+                "b_gate": ParamSpec((ff,), ("mlp",), "zeros"),
+                "b_up": ParamSpec((ff,), ("mlp",), "zeros"),
+                "b_down": ParamSpec((d,), ("embed",), "zeros"),
+            })
+        return spec
+    # classic: fc1 -> act -> fc2 (GPT-2)
+    spec = {
+        "w_fc1": ParamSpec((d, ff), ("embed", "mlp"), "fan_in"),
+        "w_fc2": ParamSpec((ff, d), ("mlp", "embed"), "fan_in",
+                           scale=1.0 / max(cfg.n_layers, 1)),
+    }
+    if cfg.use_bias:
+        spec.update({
+            "b_fc1": ParamSpec((ff,), ("mlp",), "zeros"),
+            "b_fc2": ParamSpec((d,), ("embed",), "zeros"),
+        })
+    return spec
+
+
+def mlp_apply(params, x: jnp.ndarray, cfg, *,
+              recipe: Optional[QuantRecipe], rules) -> jnp.ndarray:
+    act = ACT_FNS[cfg.act]
+    if cfg.mlp_kind == "gated":
+        g = qlin(x, params["w_gate"], params.get("b_gate"), recipe)
+        u = qlin(x, params["w_up"], params.get("b_up"), recipe)
+        h = act(g) * u
+        h = constrain(h, rules, "batch", None, "mlp")
+        return qlin(h, params["w_down"], params.get("b_down"), recipe)
+    h = act(qlin(x, params["w_fc1"], params.get("b_fc1"), recipe))
+    h = constrain(h, rules, "batch", None, "mlp")
+    return qlin(h, params["w_fc2"], params.get("b_fc2"), recipe)

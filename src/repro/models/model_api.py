@@ -1,0 +1,162 @@
+"""Unified model facade: every architecture exposes the same four entry
+points (init / train_loss / prefill / decode) plus ShapeDtypeStruct input
+specs for dry-run lowering (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as ed
+from repro.models import lm
+from repro.models.common import axes_from_spec, init_from_spec
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    spec: Any
+    init_params: Callable            # (key, dtype=f32) -> params
+    axes: Any                        # logical-axes tree matching params
+    train_loss: Callable             # (params, batch, *, recipe, rules, rng)
+    prefill: Callable                # (params, batch, *, recipe, rules) -> (logits, state)
+    decode: Callable                 # (params, state, token, pos, *, recipe, rules)
+    init_decode_state: Callable      # (batch, max_seq, dtype) -> state tree
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        spec = ed.encdec_spec(cfg)
+
+        def train_loss(params, batch, *, recipe=None, rules=None, rng=None):
+            return ed.encdec_loss(params, batch, cfg, recipe=recipe,
+                                  rules=rules, rng=rng)
+
+        def prefill(params, batch, *, recipe=None, rules=None,
+                    max_seq=None):
+            logits, cache = ed.encdec_prefill(params, batch, cfg,
+                                              recipe=recipe, rules=rules,
+                                              max_seq=max_seq)
+            return logits, cache
+
+        def decode(params, state, token, pos, *, recipe=None, rules=None):
+            return ed.encdec_decode(params, state, token, pos, cfg,
+                                    recipe=recipe, rules=rules)
+
+        def init_decode_state(batch: int, max_seq: int, enc_len: int,
+                              dtype=jnp.bfloat16):
+            kh, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+            kv = lambda s: {"k": jnp.zeros((L, batch, s, kh, hd), dtype),
+                            "v": jnp.zeros((L, batch, s, kh, hd), dtype)}
+            return {"self": kv(max_seq), "cross": kv(enc_len)}
+    else:
+        spec = lm.lm_spec(cfg)
+
+        def train_loss(params, batch, *, recipe=None, rules=None, rng=None):
+            return lm.lm_loss(params, batch, cfg, recipe=recipe, rules=rules,
+                              rng=rng)
+
+        def prefill(params, batch, *, recipe=None, rules=None, max_seq=None):
+            logits, caches, ssm = lm.lm_prefill(params, batch, cfg,
+                                                recipe=recipe, rules=rules,
+                                                max_seq=max_seq)
+            return logits, {"caches": caches, "ssm": ssm}
+
+        def decode(params, state, token, pos, *, recipe=None, rules=None):
+            logits, caches, ssm = lm.lm_decode(
+                params, state.get("caches"), state.get("ssm"), token, pos,
+                cfg, recipe=recipe, rules=rules)
+            return logits, {"caches": caches, "ssm": ssm}
+
+        def init_decode_state(batch: int, max_seq: int, enc_len: int = 0,
+                              dtype=jnp.bfloat16):
+            caches, ssm = lm.init_caches(cfg, batch, max_seq, dtype)
+            return {"caches": caches, "ssm": ssm}
+
+    def init_params(key, dtype=jnp.float32):
+        return init_from_spec(key, spec, dtype)
+
+    return Model(cfg=cfg, spec=spec, init_params=init_params,
+                 axes=axes_from_spec(spec), train_loss=train_loss,
+                 prefill=prefill, decode=decode,
+                 init_decode_state=init_decode_state)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs (dry-run: no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def enc_len_for(cfg: ArchConfig, seq: int) -> int:
+    return max(seq // max(cfg.frame_ratio, 1), 1)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    gb, s = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        p = cfg.num_patches
+        return {"patches": _sds((gb, p, cfg.d_model), dtype),
+                "tokens": _sds((gb, s - p + 1), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"frames": _sds((gb, enc_len_for(cfg, s), cfg.d_model), dtype),
+                "tokens": _sds((gb, s + 1), jnp.int32)}
+    return {"tokens": _sds((gb, s + 1), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    gb, s = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        p = cfg.num_patches
+        return {"patches": _sds((gb, p, cfg.d_model), dtype),
+                "tokens": _sds((gb, s - p), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"frames": _sds((gb, enc_len_for(cfg, s), cfg.d_model), dtype),
+                "tokens": _sds((gb, s), jnp.int32)}
+    return {"tokens": _sds((gb, s), jnp.int32)}
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                       model: Optional[Model] = None) -> Dict[str, Any]:
+    """Specs for one decode step: token, pos, and the decode-state tree."""
+    model = model or build_model(cfg)
+    gb, s = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    state = jax.eval_shape(
+        lambda: model.init_decode_state(gb, s, enc_len_for(cfg, s), dtype))
+    return {"token": _sds((gb, 1), jnp.int32),
+            "pos": _sds((), jnp.int32),
+            "state": state}
+
+
+def decode_state_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    """Logical-axes tree matching ``init_decode_state`` output (for sharding
+    the serve-state: KV caches, SSM states, cross-attn KV)."""
+    kv_axes = ("layers", "batch", "kv_seq", "kv", None)
+    ssm_axes = {"ssm": ("layers", "batch", "dt", None, None),
+                "conv": ("layers", "batch", None, "inner")}
+    if cfg.family == "encdec":
+        kv = {"k": kv_axes, "v": kv_axes}
+        return {"self": kv, "cross": kv}
+    if cfg.family == "ssm":
+        return {"caches": None, "ssm": ssm_axes}
+    if cfg.family == "hybrid":
+        return {"caches": {"k": kv_axes, "v": kv_axes}, "ssm": ssm_axes}
+    return {"caches": {"k": kv_axes, "v": kv_axes}, "ssm": None}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                model: Optional[Model] = None) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape, model)
+    raise ValueError(shape.kind)

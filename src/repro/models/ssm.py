@@ -1,0 +1,271 @@
+"""Mamba2 (state-space duality) layer: chunked SSD for training/prefill and a
+recurrent step for decode.
+
+The paper's technique applies to the in/out projections (linear layers) which
+route through the quantized linear; SSD scan internals (A, dt, conv, state
+recurrence) run in fp32 for stability and are outside the paper's linear-layer
+scope (DESIGN.md Section 5).
+
+Reference: Dao & Gu, "Transformers are SSMs" (arXiv:2405.21060).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantRecipe
+from repro.models.attention import qlin
+from repro.models.common import ParamSpec, constrain, rmsnorm
+
+CHUNK = 128
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    n_state: int
+    n_groups: int
+    conv_width: int
+    conv_dim: int
+
+
+def ssm_dims(cfg) -> SSMDims:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = d_inner // p
+    g = 1
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * g * n
+    return SSMDims(d_inner, h, p, n, g, cfg.ssm_conv, conv_dim)
+
+
+def ssm_spec(cfg) -> Dict[str, ParamSpec]:
+    """Input projection split into TP-shardable segments (z / x / BC / dt):
+    the fused Mamba in_proj concatenates dims that are not individually
+    divisible by the tensor axis (dt has n_heads columns), so each segment is
+    its own quantized linear -- also matching the paper's per-linear-layer
+    quantization granularity."""
+    d = cfg.d_model
+    dm = ssm_dims(cfg)
+    gn = dm.n_groups * dm.n_state
+    return {
+        "in_z": ParamSpec((d, dm.d_inner), ("embed", "inner"), "fan_in"),
+        "in_x": ParamSpec((d, dm.d_inner), ("embed", "inner"), "fan_in"),
+        "in_bc": ParamSpec((d, 2 * gn), ("embed", "state"), "fan_in"),
+        "in_dt": ParamSpec((d, dm.n_heads), ("embed", "dt"), "fan_in"),
+        "conv_w": ParamSpec((dm.conv_width, dm.conv_dim), (None, "inner"),
+                            "fan_in"),
+        "conv_b": ParamSpec((dm.conv_dim,), ("inner",), "zeros"),
+        "A_log": ParamSpec((dm.n_heads,), (None,), "ones"),
+        "dt_bias": ParamSpec((dm.n_heads,), (None,), "zeros"),
+        "D": ParamSpec((dm.n_heads,), (None,), "ones"),
+        "gate_norm": ParamSpec((dm.d_inner,), ("inner",), "ones"),
+        "out_proj": ParamSpec((dm.d_inner, d), ("inner", "embed"), "fan_in",
+                              scale=1.0 / max(cfg.n_layers, 1)),
+    }
+
+
+def _in_projections(params, u, recipe):
+    """Returns (z, xbc, dt_raw) with xbc = concat(x, B, C) for the conv."""
+    z = qlin(u, params["in_z"], None, recipe)
+    x = qlin(u, params["in_x"], None, recipe)
+    bc = qlin(u, params["in_bc"], None, recipe)
+    dt_raw = qlin(u, params["in_dt"], None, recipe)
+    return z, jnp.concatenate([x, bc], axis=-1), dt_raw
+
+
+def _causal_conv(xbc: jnp.ndarray, conv_w: jnp.ndarray, conv_b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv along seq.  xbc: (B,S,C); conv_w: (W,C).
+    ``tail`` is the (B, W-1, C) left context (decode); returns (out, new_tail)."""
+    w = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    padded = jnp.concatenate([tail, xbc], axis=1)
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(w):
+        out = out + (padded[:, i:i + xbc.shape[1], :].astype(jnp.float32)
+                     * conv_w[i].astype(jnp.float32))
+    out = jax.nn.silu(out + conv_b.astype(jnp.float32)).astype(xbc.dtype)
+    new_tail = padded[:, -(w - 1):, :] if w > 1 else tail
+    return out, new_tail
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                bmat: jnp.ndarray, cmat: jnp.ndarray,
+                init_state: Optional[jnp.ndarray] = None,
+                chunk: int = CHUNK
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD (Dao & Gu 2024, Sec. 6).
+
+    x: (B,S,H,P), dt: (B,S,H) (already softplus'd), a: (H,) negative,
+    bmat/cmat: (B,S,G,N) with G dividing H.  Returns (y (B,S,H,P),
+    final_state (B,H,N,P)).  fp32 internally.
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    bf = jnp.repeat(bmat.astype(jnp.float32), rep, axis=2).reshape(
+        b, nc, chunk, h, n)
+    cf = jnp.repeat(cmat.astype(jnp.float32), rep, axis=2).reshape(
+        b, nc, chunk, h, n)
+
+    da = dtf * a  # (b,nc,l,h), negative
+    cum = jnp.cumsum(da, axis=2)
+    # intra-chunk: att[i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j, j<=i.
+    # The (b,nc,l,l,h) tensors are the memory hot spot -> carrier precision
+    # (exp(seg) <= 1 and CB are attention-like weights; states stay fp32).
+    intra_dtype = x.dtype if x.dtype != jnp.float32 else jnp.float32
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (b,nc,i,j,h)
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg).astype(intra_dtype)
+    cb = jnp.einsum("bclhn,bcmhn->bclmh", cf.astype(intra_dtype),
+                    bf.astype(intra_dtype))                      # (b,nc,i,j,h)
+    att = cb * decay * dtf[:, :, None, :, :].astype(intra_dtype)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", att,
+                         xf.astype(intra_dtype),
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j (x) x_j
+    last = cum[:, :, -1:, :]                                      # (b,nc,1,h)
+    state_decay = jnp.exp(last - cum)                             # (b,nc,l,h)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchnp",
+                        state_decay * dtf, bf, xf)                # (b,nc,h,n,p)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                       # (b,nc,h)
+
+    h0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                             # (b,h,n,p),(b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                         # emit PREV state
+
+    states_t = jnp.moveaxis(states, 1, 0)                         # (nc,b,h,n,p)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                     # (nc,b,h)
+    final, prev_states = jax.lax.scan(step, h0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                 # (b,nc,h,n,p)
+
+    # inter-chunk: y_i += (C_i . h_prev) * exp(cum_i)
+    y_inter = jnp.einsum("bclhn,bchnp,bclh->bclhp",
+                         cf, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_reference(x, dt, a, bmat, cmat, init_state=None):
+    """Sequential-scan oracle for tests: h_t = exp(dt a) h + dt B (x) x."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = jnp.repeat(bmat.astype(jnp.float32), rep, axis=2)
+    cf = jnp.repeat(cmat.astype(jnp.float32), rep, axis=2)
+    h0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, t):
+        da = jnp.exp(dtf[:, t] * a)                               # (b,h)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dtf[:, t], bf[:, t], xf[:, t])
+        new = carry * da[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", cf[:, t], new)
+        return new, y
+
+    final, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def ssm_apply(params, u: jnp.ndarray, cfg, *,
+              recipe: Optional[QuantRecipe], rules,
+              state: Optional[Dict[str, jnp.ndarray]] = None,
+              return_state: bool = False):
+    """Full-sequence Mamba2 layer.  u: (B,S,d).
+
+    state (decode/prefill carry): {"ssm": (B,H,N,P) fp32, "conv": (B,W-1,C)}.
+    Returns (out, new_state_or_None).
+    """
+    dm = ssm_dims(cfg)
+    z, xbc, dt_raw = _in_projections(params, u, recipe)
+    tail = state["conv"] if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"], tail)
+
+    di, gn = dm.d_inner, dm.n_groups * dm.n_state
+    xs = xbc[..., :di]
+    bmat = xbc[..., di:di + gn].reshape(*xbc.shape[:2], dm.n_groups, dm.n_state)
+    cmat = xbc[..., di + gn:].reshape(*xbc.shape[:2], dm.n_groups, dm.n_state)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    x4 = xs.reshape(*xs.shape[:2], dm.n_heads, dm.head_dim)
+    # shard SSD internals over heads on the tensor axis (the intra-chunk
+    # decay/attention tensors are the memory hot spot at train shapes)
+    x4 = constrain(x4, rules, "batch", None, "dt", None)
+    init = state["ssm"] if state is not None else None
+    s_len = u.shape[1]
+    chunk = CHUNK if s_len % CHUNK == 0 else s_len
+    y4, final = ssd_chunked(x4, dt, a, bmat, cmat, init_state=init,
+                            chunk=chunk)
+    y4 = constrain(y4, rules, "batch", None, "dt", None)
+    y4 = y4 + (params["D"].astype(jnp.float32)[None, None, :, None]
+               * x4.astype(jnp.float32)).astype(y4.dtype)
+    y = y4.reshape(*xs.shape[:2], dm.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                params["gate_norm"])
+    out = qlin(y, params["out_proj"], None, recipe)
+    new_state = ({"ssm": final, "conv": new_tail} if return_state else None)
+    return out, new_state
+
+
+def ssm_decode_step(params, u: jnp.ndarray, cfg, *,
+                    recipe: Optional[QuantRecipe], rules,
+                    state: Dict[str, jnp.ndarray]):
+    """Single-token recurrent update.  u: (B,1,d).  O(1) in context length --
+    this is what makes long_500k tractable for SSM/hybrid archs."""
+    dm = ssm_dims(cfg)
+    z, xbc, dt_raw = _in_projections(params, u, recipe)
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 state["conv"])
+    di, gn = dm.d_inner, dm.n_groups * dm.n_state
+    xs = xbc[..., :di]
+    bmat = xbc[..., di:di + gn].reshape(-1, dm.n_groups, dm.n_state)
+    cmat = xbc[..., di + gn:].reshape(-1, dm.n_groups, dm.n_state)
+    rep = dm.n_heads // dm.n_groups
+    bf = jnp.repeat(bmat.astype(jnp.float32), rep, axis=1)        # (B,H,N)
+    cf = jnp.repeat(cmat.astype(jnp.float32), rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                           # (B,H)
+    x3 = xs[:, 0].reshape(-1, dm.n_heads, dm.head_dim).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, bf, x3)
+    new_ssm = state["ssm"] * da[:, :, None, None] + upd
+    y3 = jnp.einsum("bhn,bhnp->bhp", cf, new_ssm)
+    y3 = y3 + params["D"].astype(jnp.float32)[None, :, None] * x3
+    y = y3.reshape(-1, 1, dm.d_inner).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                params["gate_norm"])
+    out = qlin(y, params["out_proj"], None, recipe)
+    return out, {"ssm": new_ssm, "conv": new_tail}
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    dm = ssm_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, dm.n_heads, dm.n_state, dm.head_dim),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, dm.conv_width - 1, dm.conv_dim), dtype),
+    }

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamState, OptConfig, adamw_update,
+                               clip_by_global_norm, global_norm,
+                               init_adam_state, lr_schedule)
+
+__all__ = ["AdamState", "OptConfig", "adamw_update", "clip_by_global_norm",
+           "global_norm", "init_adam_state", "lr_schedule"]

@@ -1,0 +1,123 @@
+"""AdamW with optionally-quantized moments (paper Section 4.4).
+
+The moments are stored between steps in the representation selected by the
+recipe (fp / fake-quantized fp / real int8+scales) and decoded for the update
+-- exactly the paper's methodology ("the quantized values of each state are
+stored until the next training iteration, then dequantized and used for
+Adam's update").
+
+Built from scratch (optax is not available in this environment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qadam
+from repro.core.qconfig import QuantRecipe
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 6e-4                 # paper Appendix A
+    b1: float = 0.9
+    b2: float = 0.95                 # nanoGPT-style (paper follows nanoGPT)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 300_000       # paper: 300k steps
+    min_lr_ratio: float = 0.0        # cosine decays to ~0 (paper: lr < 1e-6)
+    state_storage: str = "fake"      # fake (paper) | int (production int8)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray                # int32 scalar
+    m1: Any                          # pytree: fp arrays or qadam.QState
+    m2: Any
+
+
+def lr_schedule(step: jnp.ndarray, cfg: OptConfig) -> jnp.ndarray:
+    """Linear warmup + half-cycle cosine (paper Appendix A)."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    scale = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def init_adam_state(params, recipe: Optional[QuantRecipe],
+                    cfg: OptConfig) -> AdamState:
+    recipe = recipe or QuantRecipe()
+    m1 = jax.tree_util.tree_map(
+        lambda p: qadam.init_state(p, recipe.adam_m1, cfg.state_storage),
+        params)
+    m2 = jax.tree_util.tree_map(
+        lambda p: qadam.init_state(p, recipe.adam_m2, cfg.state_storage),
+        params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m1=m1, m2=m2)
+
+
+def _is_state_leaf(x):
+    return isinstance(x, qadam.QState) or isinstance(x, jnp.ndarray) or \
+        hasattr(x, "shape")
+
+
+def adamw_update(params, grads, state: AdamState, cfg: OptConfig,
+                 recipe: Optional[QuantRecipe] = None
+                 ) -> Tuple[Any, AdamState, Dict[str, jnp.ndarray]]:
+    """One AdamW step.  params fp32 master; grads any float dtype.
+    Returns (new_params, new_state, stats)."""
+    recipe = recipe or QuantRecipe()
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m1_leaves = treedef.flatten_up_to(state.m1)
+    m2_leaves = treedef.flatten_up_to(state.m2)
+
+    new_p, new_m1, new_m2 = [], [], []
+    for p, g, m1s, m2s in zip(p_leaves, g_leaves, m1_leaves, m2_leaves):
+        gf = g.astype(jnp.float32)
+        m1 = qadam.decode(m1s, recipe.adam_m1, p.shape)
+        m2 = qadam.decode(m2s, recipe.adam_m2, p.shape)
+        m1 = b1 * m1 + (1.0 - b1) * gf
+        m2 = b2 * m2 + (1.0 - b2) * jnp.square(gf)
+        upd = (m1 / c1) / (jnp.sqrt(m2 / c2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay and p.ndim >= 2:
+            upd = upd + cfg.weight_decay * pf
+        new_p.append((pf - lr * upd).astype(p.dtype))
+        new_m1.append(qadam.encode(m1, recipe.adam_m1, cfg.state_storage))
+        new_m2.append(qadam.encode(m2, recipe.adam_m2, cfg.state_storage))
+
+    stats = {"lr": lr, "grad_norm": gnorm,
+             "update_norm": jnp.zeros((), jnp.float32)}
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            AdamState(step=step,
+                      m1=jax.tree_util.tree_unflatten(treedef, new_m1),
+                      m2=jax.tree_util.tree_unflatten(treedef, new_m2)),
+            stats)

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import Rules, make_rules
+
+__all__ = ["Rules", "make_rules"]

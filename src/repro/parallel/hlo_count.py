@@ -1,0 +1,375 @@
+"""Loop-aware FLOP / byte / collective counting over compiled HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE -- a
+scan-over-layers train step under-reports by the trip count (verified: a
+32-layer llama step reports ~1/22000 of its true FLOPs).  This module parses
+``compiled.as_text()`` (the per-partition module), reconstructs the call
+graph (entry -> fusions / while bodies / conditionals), extracts while-loop
+trip counts from their condition computations (`compare(iv, constant(N)),
+direction=LT`), and accumulates:
+
+  * flops: dot ops (2*M*N*K from result shape x contracted size via the
+    per-computation symbol table), convolutions (approx), and elementwise /
+    reduce ops at 1 flop per output element;
+  * bytes: per-instruction operand+result bytes at fusion boundaries (inside
+    fused computations nothing re-counts -- mirrors XLA "bytes accessed");
+  * collective wire bytes by kind, ring-cost weighted (see roofline.py).
+
+All quantities are PER-DEVICE (the module is the partitioned program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{$")
+_TRIP_BACKEND = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s*([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\](?:{[^}]*})?")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_TRIP_LT = re.compile(r"constant\((\d+)\)")
+_CALL_ATTR = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                        r"\{?([%\w\.\-, ]+)\}?")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "exponential", "log",
+    "tanh", "rsqrt", "sqrt", "maximum", "minimum", "negate", "abs", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "logistic", "cosine",
+    "sine", "atan2", "expm1", "log1p", "compare", "select", "clamp",
+    "reduce", "exponential-minus-one",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dtype, dims in _SHAPE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dtype, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dtype, shape in _shape_list(type_str):
+        total += _DTYPE_BYTES[dtype] * int(math.prod(shape)) if shape else \
+            _DTYPE_BYTES[dtype]
+    return total
+
+
+def _nelems(type_str: str) -> int:
+    total = 0
+    for _, shape in _shape_list(type_str):
+        total += int(math.prod(shape)) if shape else 1
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "op", "rest")
+
+    def __init__(self, name, type_str, op, rest):
+        self.name, self.type_str, self.op, self.rest = name, type_str, op, rest
+
+
+def parse_module(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                if stripped.startswith("ENTRY"):
+                    entry = cur
+                comps[cur] = []
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _symbol_table(instrs: List[Instr]) -> Dict[str, str]:
+    return {i.name: i.type_str for i in instrs}
+
+
+def _fusion_param_bytes(body: List[Instr]) -> Dict[int, int]:
+    """Effective bytes read per fusion parameter.
+
+    A fusion that dynamic-slices a parameter (the scan-over-layers pattern:
+    read layer i of an (L, ...) stacked tensor) only touches the slice, so
+    charging the full operand overstates HBM traffic by L.  Returns
+    {param_index: effective_bytes}; parameters not sliced are charged fully.
+    """
+    params: Dict[str, int] = {}
+    full: Dict[str, int] = {}
+    for ins in body:
+        if ins.op == "parameter":
+            mm = re.match(r"(\d+)\)", ins.rest.strip())
+            if mm:
+                params[ins.name] = int(mm.group(1))
+                full[ins.name] = _nbytes(ins.type_str)
+    sliced: Dict[int, int] = {}
+    used_whole: Dict[int, bool] = {}
+    for ins in body:
+        refs = _OPERAND.findall(ins.rest)
+        for j, r in enumerate(refs):
+            if r not in params:
+                continue
+            idx = params[r]
+            if ins.op in ("dynamic-slice", "slice", "gather") and j == 0:
+                sliced[idx] = sliced.get(idx, 0) + _nbytes(ins.type_str)
+            elif ins.op != "parameter":
+                used_whole[idx] = True
+    out = {}
+    for name, idx in params.items():
+        if idx in sliced and not used_whole.get(idx, False):
+            out[idx] = sliced[idx]
+        else:
+            out[idx] = full[name]
+    return out
+
+
+def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> float:
+    out_elems = _nelems(instr.type_str)
+    ops = _OPERAND.findall(instr.rest)
+    k = 1
+    m = _CONTRACT.search(instr.rest)
+    if ops and m is not None:
+        lhs_type = symtab.get(ops[0], "")
+        shapes = _shape_list(lhs_type)
+        if shapes:
+            lhs_shape = shapes[0][1]
+            for d in m.group(1).split(","):
+                if d and int(d) < len(lhs_shape):
+                    k *= lhs_shape[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_bytes(op: str, b: float, n: int) -> float:
+    frac = (n - 1) / n if n > 1 else 0.0
+    if op == "all-reduce":
+        return 2.0 * b * frac
+    if op == "all-gather":
+        return b * frac
+    if op == "reduce-scatter":
+        return b * (n - 1)
+    if op == "all-to-all":
+        return b * frac
+    return float(b)              # collective-permute
+
+
+class Counts:
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.wire = {k: 0.0 for k in _COLLECTIVES}
+        self.coll_count = 0
+
+    def scaled(self, mult: float) -> "Counts":
+        c = Counts()
+        c.flops = self.flops * mult
+        c.bytes = self.bytes * mult
+        c.wire = {k: v * mult for k, v in self.wire.items()}
+        c.coll_count = self.coll_count * mult
+        return c
+
+    def add(self, other: "Counts"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in self.wire:
+            self.wire[k] += other.wire[k]
+        self.coll_count += other.coll_count
+
+
+def _trip_count_fallback(cond: List[Instr]) -> int:
+    """When backend_config lacks known_trip_count: scan-style while conditions
+    contain only the induction variable and the loop bound constant."""
+    best = 1
+    for i in cond:
+        if i.op == "constant" and i.type_str.strip().startswith("s32"):
+            mm = re.match(r"(\d+)\)", i.rest.strip())
+            if mm:
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def count_module(hlo: str, n_devices: int = 256) -> Dict[str, float]:
+    comps = parse_module(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "wire_bytes": 0.0}
+    memo: Dict[str, Counts] = {}
+
+    def visit(name: str, depth: int = 0) -> Counts:
+        if name in memo:
+            return memo[name]
+        if depth > 50 or name not in comps:
+            return Counts()
+        memo[name] = Counts()        # cycle guard
+        instrs = comps[name]
+        symtab = _symbol_table(instrs)
+        c = Counts()
+        for ins in instrs:
+            op = ins.op
+            if op == "dot":
+                c.flops += _dot_flops(ins, symtab)
+                c.bytes += _nbytes(ins.type_str) + sum(
+                    _nbytes(symtab.get(o, ""))
+                    for o in _OPERAND.findall(ins.rest)[:3])
+            elif op == "convolution":
+                c.flops += 2.0 * _nelems(ins.type_str) * 32   # approx
+                c.bytes += _nbytes(ins.type_str)
+            elif op == "fusion":
+                called = _CALL_ATTR.search(ins.rest)
+                inner = Counts()
+                target = None
+                if called:
+                    target = called.group(1).split(",")[0].strip().lstrip("%")
+                    inner = visit(target, depth + 1)
+                c.flops += inner.flops
+                # fusion boundary bytes: result + operands, with operands
+                # that the body only slices charged at slice size
+                eff = (_fusion_param_bytes(comps.get(target, []))
+                       if target else {})
+                operands = _OPERAND.findall(ins.rest.split("kind=")[0])
+                ob = 0
+                for idx, o in enumerate(operands):
+                    ob += eff.get(idx, _nbytes(symtab.get(o, "")))
+                c.bytes += _nbytes(ins.type_str) + ob
+                c.wire = {k: c.wire[k] + inner.wire[k] for k in c.wire}
+                c.coll_count += inner.coll_count
+            elif op == "while":
+                attrs = dict(re.findall(r"(body|condition)=%?([\w\.\-]+)",
+                                        ins.rest))
+                body = visit(attrs.get("body", ""), depth + 1)
+                m = _TRIP_BACKEND.search(ins.rest)
+                if m:
+                    trips = int(m.group(1))
+                else:
+                    trips = _trip_count_fallback(
+                        comps.get(attrs.get("condition", ""), []))
+                c.add(body.scaled(trips))
+            elif op == "conditional":
+                for target in re.findall(r"%([\w\.\-]+)",
+                                         ins.rest.split("),")[-1]):
+                    if target in comps:
+                        c.add(visit(target, depth + 1))
+            elif op in ("call", "async-start", "custom-call"):
+                called = _CALL_ATTR.search(ins.rest)
+                if called:
+                    target = called.group(1).split(",")[0].strip().lstrip("%")
+                    c.add(visit(target, depth + 1))
+                c.bytes += _nbytes(ins.type_str)
+            elif any(op.startswith(k) for k in _COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                base = next(k for k in _COLLECTIVES if op.startswith(k))
+                b = _nbytes(ins.type_str)
+                n = _group_size(ins.rest, n_devices)
+                c.wire[base] += _wire_bytes(base, b, n)
+                c.coll_count += 1
+                c.bytes += b
+            elif op in _ELEMENTWISE_FLOP_OPS:
+                c.flops += _nelems(ins.type_str)
+                c.bytes += _nbytes(ins.type_str)
+            elif op in ("copy", "copy-start", "transpose", "reshape",
+                        "broadcast", "concatenate", "slice", "dynamic-slice",
+                        "dynamic-update-slice", "gather", "scatter", "pad",
+                        "convert", "bitcast-convert", "iota", "reverse",
+                        "sort", "reduce-window", "select-and-scatter"):
+                c.bytes += _nbytes(ins.type_str)
+        memo[name] = c
+        return c
+
+    # fusion bodies must not be double counted: visit only from entry
+    total = visit("__entry__")
+    out = {"flops": total.flops, "bytes": total.bytes,
+           "wire_bytes": sum(total.wire.values()),
+           "coll_count": total.coll_count}
+    out.update({f"wire_{k}": v for k, v in total.wire.items()})
+    return out
+
+
+def top_contributors(hlo: str, n_devices: int = 256, top: int = 20):
+    """Debug: (multiplied) byte contributions per instruction, descending."""
+    comps = parse_module(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return []
+    trips: Dict[str, float] = {"__entry__": 1.0}
+    out = []
+
+    def walk(name: str, mult: float, depth: int = 0):
+        if depth > 50 or name not in comps:
+            return
+        instrs = comps[name]
+        symtab = _symbol_table(instrs)
+        for ins in instrs:
+            op = ins.op
+            if op == "while":
+                attrs = dict(re.findall(r"(body|condition)=%?([\w\.\-]+)",
+                                        ins.rest))
+                m = _TRIP_BACKEND.search(ins.rest)
+                t = int(m.group(1)) if m else _trip_count_fallback(
+                    comps.get(attrs.get("condition", ""), []))
+                walk(attrs.get("body", ""), mult * t, depth + 1)
+            elif op == "fusion":
+                called = _CALL_ATTR.search(ins.rest)
+                target = (called.group(1).split(",")[0].strip().lstrip("%")
+                          if called else None)
+                eff = (_fusion_param_bytes(comps.get(target, []))
+                       if target else {})
+                operands = _OPERAND.findall(ins.rest.split("kind=")[0])
+                b = _nbytes(ins.type_str) + sum(
+                    eff.get(idx, _nbytes(symtab.get(o, "")))
+                    for idx, o in enumerate(operands))
+                out.append((b * mult, mult, ins.op, ins.name, b))
+            elif op == "dot":
+                b = _nbytes(ins.type_str) + sum(
+                    _nbytes(symtab.get(o, ""))
+                    for o in _OPERAND.findall(ins.rest)[:3])
+                out.append((b * mult, mult, ins.op, ins.name, b))
+            elif op in ("copy", "transpose", "reshape", "broadcast",
+                        "concatenate", "slice", "dynamic-slice",
+                        "dynamic-update-slice", "gather", "scatter", "pad",
+                        "convert", "sort", "reduce", "reduce-window"):
+                b = _nbytes(ins.type_str)
+                out.append((b * mult, mult, ins.op, ins.name, b))
+    walk("__entry__", 1.0)
+    out.sort(reverse=True)
+    return out[:top]

@@ -1,0 +1,125 @@
+"""Roofline-term extraction from compiled XLA artifacts (EXPERIMENTS.md
+Section Roofline).
+
+Hardware model: TPU v5e -- 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (prompt-prescribed constants).
+
+Conventions (verified empirically on this jax build):
+  * ``compiled.cost_analysis()['flops']`` / ``['bytes accessed']`` are
+    PER-DEVICE (the partitioned module).
+  * ``compiled.as_text()`` is the per-partition HLO; collective operand
+    shapes are per-device.  Wire bytes per device use ring costs:
+      all-reduce        2 * b * (n-1)/n
+      all-gather        b_out * (n-1)/n
+      reduce-scatter    b_in * (n-1)/n      (b_in = n * b_out)
+      all-to-all        b * (n-1)/n
+      collective-permute b
+  * collective term assumes 1 active ICI link per hop (conservative).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\(?[\w\[\],\s{}]*?\)?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(result):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind + total, from partitioned HLO."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        if "replica_groups" not in line and "collective-permute" not in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[0]:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("result"))
+        n = max(_group_size(line, n_devices), 1)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if op == "all-reduce":
+            wire = 2.0 * b * frac
+        elif op == "all-gather":
+            wire = b * frac                      # result is the gathered array
+        elif op == "reduce-scatter":
+            wire = b * (n - 1)                   # result is the shard
+        elif op == "all-to-all":
+            wire = b * frac
+        else:                                    # collective-permute
+            wire = float(b)
+        out[op] += wire
+        out["count"] += 1
+    out["total_wire_bytes"] = sum(out[k] for k in
+                                  ("all-reduce", "all-gather",
+                                   "reduce-scatter", "all-to-all",
+                                   "collective-permute"))
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float,
+                   model_flops_total: Optional[float] = None,
+                   n_devices: int = 256) -> Dict[str, float]:
+    """Three terms in seconds + bottleneck + usefulness ratio."""
+    compute_s = flops_per_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = wire_bytes_per_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(compute_s, memory_s, collective_s)
+    out = dict(terms)
+    out["dominant"] = dominant
+    out["step_time_s"] = step_s
+    if model_flops_total:
+        model_per_dev = model_flops_total / n_devices
+        out["model_flops_total"] = model_flops_total
+        out["useful_flops_ratio"] = (model_per_dev / flops_per_dev
+                                     if flops_per_dev else 0.0)
+        # MFU against the dominant-term step time
+        out["roofline_mfu"] = (model_per_dev / PEAK_FLOPS_BF16) / step_s \
+            if step_s else 0.0
+    return out

@@ -1,0 +1,170 @@
+"""Logical-axis sharding rules (MaxText-style) for DP + FSDP + TP + EP + SP.
+
+Meshes (prescribed):
+  single-pod : (16, 16)    axes ("data", "model")
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model")
+
+Mapping (train mode):
+  batch   -> ("pod", "data")   data parallelism across pods and data rows
+  embed   -> "data"            FSDP: params/optimizer sharded over the data
+                               axis; GSPMD all-gathers per layer inside the
+                               scan (ZeRO-3 semantics)
+  vocab/mlp/heads/kv/inner/... -> "model"   tensor parallelism
+  expert  -> "model"           expert parallelism (when E % tp == 0)
+  kv_seq  -> "model" for decode shapes (SP flash-decode: softmax reductions
+             over the sharded KV length lower to all-reduces)
+
+Divisibility-driven: any mapping whose dim is not evenly divisible by the
+mesh-axis size (or whose mesh axis is already taken by an earlier dim of the
+same tensor) is dropped for that tensor (e.g. seamless' 256206 vocab is not
+16-divisible -> its embedding shards on d_model instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    axis_map: Dict[str, Tuple[str, ...]]
+    dp_axes: Tuple[str, ...]
+    tp_axis: str
+
+    @property
+    def dp_size(self) -> int:
+        sizes = _axis_sizes(self.mesh)
+        return math.prod(sizes[a] for a in self.dp_axes)
+
+    @property
+    def tp_size(self) -> int:
+        return _axis_sizes(self.mesh)[self.tp_axis]
+
+    def spec_for(self, shape: Tuple[int, ...], axes) -> P:
+        """Greedy per-dim assignment with divisibility + uniqueness checks."""
+        sizes = _axis_sizes(self.mesh)
+        used = set()
+        parts = []
+        for dim, logical in zip(shape, axes):
+            mesh_axes = self.axis_map.get(logical) if logical else None
+            if not mesh_axes:
+                parts.append(None)
+                continue
+            total = math.prod(sizes[a] for a in mesh_axes)
+            if dim % total == 0 and not (set(mesh_axes) & used):
+                used.update(mesh_axes)
+                parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    def sharding_for(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+    def constrain(self, x: jnp.ndarray, logical_axes) -> jnp.ndarray:
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding_for(x.shape, logical_axes))
+
+    def tree_shardings(self, shape_tree: PyTree, axes_tree: PyTree) -> PyTree:
+        """NamedSharding tree for a params/state tree.  ``shape_tree`` leaves
+        need a ``.shape``; axes leaves are tuples of logical names."""
+        return jax.tree_util.tree_map(
+            lambda leaf, ax: self.sharding_for(leaf.shape, ax),
+            shape_tree, axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def batch_spec(self, ndim: int) -> P:
+        return P(self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0],
+                 *([None] * (ndim - 1)))
+
+    def batch_sharding(self, ndim: int) -> NamedSharding:
+        return NamedSharding(self.mesh, self.batch_spec(ndim))
+
+
+_TRAIN_MAP = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),           # sequence-parallel residual stream (SP):
+                                 # per-layer saved activations shrink by tp;
+                                 # GSPMD inserts the gather/scatter at the
+                                 # attention/SSD boundary
+    "embed": ("data",),          # FSDP
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "inner": ("model",),
+    "state": ("model",),
+    "dt": ("model",),
+    "expert": ("model",),
+    "embed2": (),                # second d_model-like dim: replicated
+    "kv_seq": (),                # sequence never sharded in train
+    "layers": (),
+}
+
+_SERVE_MAP = dict(_TRAIN_MAP, embed=(), seq=())  # no FSDP/SP at serve time
+_SERVE_SP_MAP = dict(_SERVE_MAP, kv_seq=("model",))   # long-context decode
+
+# Flat FSDP-256 (beyond-paper perf remap, EXPERIMENTS.md Section Perf):
+# batch shards over BOTH mesh axes (4096 tokens/chip at train_4k) and every
+# parameter FSDP-shards over the flat 256; no tensor parallelism.  Megatron
+# TP-16's four per-layer h-sized all-reduces disappear; the remaining
+# collectives are per-layer bf16 weight gathers + fp32 grad reduce-scatters,
+# which overlap with compute.  Chunked CE makes the unsharded-vocab logits
+# affordable (b_loc=1).
+_TRAIN_FSDP_MAP = {
+    "batch": ("data", "model"),
+    "seq": (),
+    "embed": ("data", "model"),
+    "vocab": (), "mlp": (), "heads": (), "kv": (), "inner": (),
+    "state": (), "dt": (), "expert": (), "embed2": (), "kv_seq": (),
+    "layers": (),
+}
+
+
+def make_rules(mesh: Mesh, mode: str = "train", cfg=None) -> Rules:
+    """mode: train | serve | serve_sp (sequence-sharded KV for long decode).
+
+    ``cfg`` enables head-count-aware TP: a GQA projection whose FLAT dim
+    divides the axis (e.g. 8 kv heads x 128 = 1024 on a 16-way axis) but
+    whose HEAD count does not would get half-head splits -- SPMD then falls
+    back to full rematerialization at the (b,s,k,hd) reshape.  Megatron's
+    answer is kv duplication: keep those projections replicated on the
+    tensor axis (they are small) and shard the repeated q-heads instead.
+    """
+    names = set(mesh.axis_names)
+    amap = {"train": _TRAIN_MAP, "serve": _SERVE_MAP,
+            "serve_sp": _SERVE_SP_MAP, "train_fsdp": _TRAIN_FSDP_MAP}[mode]
+    amap = {k: tuple(a for a in v if a in names) for k, v in amap.items()}
+    if mode == "train_fsdp":
+        dp_axes = tuple(a for a in ("pod", "data", "model") if a in names)
+        tp_axis = "model" if "model" in names else mesh.axis_names[-1]
+        return Rules(mesh=mesh, axis_map=amap, dp_axes=dp_axes,
+                     tp_axis=tp_axis)
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+    if not dp_axes:
+        dp_axes = (mesh.axis_names[0],)
+    tp_axis = "model" if "model" in names else mesh.axis_names[-1]
+    if cfg is not None and tp_axis in names:
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape))[tp_axis]
+        if getattr(cfg, "n_heads", 0) and cfg.n_heads % tp != 0:
+            amap["heads"] = ()
+        if getattr(cfg, "n_kv_heads", 0) and cfg.n_kv_heads % tp != 0:
+            amap["kv"] = ()
+    return Rules(mesh=mesh, axis_map=amap, dp_axes=dp_axes, tp_axis=tp_axis)

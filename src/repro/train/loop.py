@@ -1,0 +1,113 @@
+"""Training loop with fault tolerance.
+
+* periodic + preemption-triggered checkpointing (SIGTERM -> save & exit);
+* resume from latest checkpoint (params, optimizer, loader state);
+* deterministic data sharding (step-keyed) so restarts and elastic
+  rescaling replay the exact stream;
+* periodic validation on a disjoint split;
+* straggler posture: the step itself is a single pjit program (bulk-
+  synchronous); recovery is checkpoint-restart (DESIGN.md Section 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import Loader
+from repro.train.step import TrainState
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 200
+    eval_every: int = 100
+    eval_batches: int = 4
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, train_step: Callable, eval_step: Optional[Callable],
+                 state: TrainState, loader: Loader,
+                 ckpt: Optional[CheckpointManager] = None,
+                 loop_cfg: Optional[LoopConfig] = None,
+                 valid_loader: Optional[Loader] = None,
+                 metadata: Optional[Dict] = None):
+        self.train_step = train_step
+        self.eval_step = eval_step
+        self.state = state
+        self.loader = loader
+        self.valid_loader = valid_loader
+        self.ckpt = ckpt
+        self.cfg = loop_cfg or LoopConfig(total_steps=100)
+        self.metadata = metadata or {}
+        self.history: List[Dict[str, float]] = []
+        self._preempted = False
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def install_preemption_handler(self) -> None:
+        def handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+
+    def maybe_resume(self) -> int:
+        if self.ckpt is None:
+            return 0
+        step = self.ckpt.latest_step()
+        if step is None:
+            return 0
+        self.state, meta = self.ckpt.restore(step, self.state)
+        self.loader.load_state_dict(meta.get("loader", {"step": step}))
+        return step
+
+    def _save(self, step: int) -> None:
+        if self.ckpt is None:
+            return
+        meta = dict(self.metadata)
+        meta["loader"] = self.loader.state_dict()
+        self.ckpt.save(step, self.state, metadata=meta)
+
+    # -- loop ----------------------------------------------------------------
+
+    def run(self, rng: Optional[jax.Array] = None) -> List[Dict[str, float]]:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        start = int(self.state.opt.step)
+        t0 = time.time()
+        for step in range(start, self.cfg.total_steps):
+            batch = next(self.loader)
+            # step-keyed rng: resume replays the identical stream
+            sub = jax.random.fold_in(rng, step)
+            self.state, metrics = self.train_step(self.state, batch, sub)
+            if (step + 1) % self.cfg.log_every == 0 or step == start:
+                row = {k: float(v) for k, v in metrics.items()}
+                row["step"] = step + 1
+                row["sec_per_step"] = (time.time() - t0) / max(
+                    step + 1 - start, 1)
+                if (self.eval_step is not None and self.valid_loader is not None
+                        and (step + 1) % self.cfg.eval_every == 0):
+                    row["valid_ce"] = self.evaluate()
+                self.history.append(row)
+            if self.ckpt and (step + 1) % self.cfg.ckpt_every == 0:
+                self._save(step + 1)
+            if self._preempted:
+                self._save(step + 1)
+                break
+        if self.ckpt:
+            self.ckpt.wait()
+        return self.history
+
+    def evaluate(self) -> float:
+        losses = []
+        for i in range(self.cfg.eval_batches):
+            batch = self.valid_loader.peek(step=i)
+            m = self.eval_step(self.state.params, batch)
+            losses.append(float(m["ce"]))
+        return float(np.mean(losses))

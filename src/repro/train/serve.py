@@ -1,0 +1,46 @@
+"""Batched serving: prefill + greedy decode with per-sequence stopping.
+
+The decode loop is a jitted ``lax.while_loop``-free simple fori over steps
+(fixed budget) -- production serving would wrap this in a scheduler; here it
+backs the examples, serving tests, and serve-shape dry-runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import Model
+
+
+def greedy_generate(model: Model, params, batch: Dict, max_new_tokens: int,
+                    *, recipe=None, rules=None, eos_id: Optional[int] = None,
+                    max_seq: Optional[int] = None) -> jnp.ndarray:
+    """Returns (B, max_new_tokens) int32 generations."""
+    prompt = batch["tokens"]
+    b, s = prompt.shape
+    total = (max_seq or (s + max_new_tokens))
+
+    logits, state = model.prefill(params, batch, recipe=recipe, rules=rules,
+                                  max_seq=total)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+    # vlm prompts occupy num_patches extra cache rows
+    base_pos = s + (model.cfg.num_patches if model.cfg.family == "vlm" else 0)
+
+    def step(carry, i):
+        state, tok, done = carry
+        logits, state = model.decode(params, state, tok, base_pos + i,
+                                     recipe=recipe, rules=rules)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if eos_id is not None:
+            done = done | (tok[:, 0] == eos_id)
+            nxt = jnp.where(done[:, None], jnp.full_like(nxt, eos_id), nxt)
+        return (state, nxt, done), tok[:, 0]
+
+    done0 = jnp.zeros((b,), bool)
+    (_, _, _), toks = jax.lax.scan(
+        step, (state, first, done0), jnp.arange(max_new_tokens))
+    return jnp.moveaxis(toks, 0, 1)

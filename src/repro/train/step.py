@@ -1,0 +1,156 @@
+"""pjit-able train / eval / serve step factories.
+
+``make_train_step`` closes over (model, recipe, opt config, sharding rules)
+and returns a pure function (state, batch, rng) -> (state, metrics) suitable
+for jax.jit with in/out shardings -- the same function is used by the CPU
+smoke tests, the real launcher, and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qadam
+from repro.core.qconfig import QuantRecipe
+from repro.models.model_api import Model
+from repro.optim.adamw import (AdamState, OptConfig, adamw_update,
+                               init_adam_state)
+
+
+class TrainState(NamedTuple):
+    params: Any                      # fp32 master weights
+    opt: AdamState
+
+
+def init_train_state(model: Model, key: jax.Array,
+                     recipe: Optional[QuantRecipe],
+                     opt_cfg: OptConfig) -> TrainState:
+    params = model.init_params(key, jnp.float32)
+    return TrainState(params=params,
+                      opt=init_adam_state(params, recipe, opt_cfg))
+
+
+def make_train_step(model: Model, recipe: Optional[QuantRecipe],
+                    opt_cfg: OptConfig, rules=None, accum_steps: int = 1):
+    """Gradient step with optional microbatch accumulation (accum_steps > 1
+    splits the leading batch dim; gradients are averaged -- communication for
+    the DP reduction is deferred to the last microbatch by XLA)."""
+
+    def constrain_like_params(tree, ref):
+        """Pin a params-shaped tree to the parameter shardings: gradients
+        then REDUCE-SCATTER to their FSDP shard instead of all-reducing
+        (halves dW wire), and the bf16 cast lands BEFORE the per-layer
+        weight all-gather (halves gather wire)."""
+        if rules is None:
+            return tree
+        flat, treedef = jax.tree_util.tree_flatten(ref)
+        flat_t = treedef.flatten_up_to(tree)
+        flat_ax = treedef.flatten_up_to(model.axes)
+        out = [jax.lax.with_sharding_constraint(
+                   t, rules.sharding_for(t.shape, ax))
+               for t, ax in zip(flat_t, flat_ax)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def loss_fn(params, batch, rng):
+        from repro.models.common import cast_params
+        compute_params = constrain_like_params(
+            cast_params(params, jnp.bfloat16), params)
+        loss, metrics = model.train_loss(compute_params, batch,
+                                         recipe=recipe, rules=rules, rng=rng)
+        return loss, metrics
+
+    def grad_fn(params, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, rng)
+        return (loss, metrics), constrain_like_params(grads, params)
+
+    def train_step(state: TrainState, batch, rng
+                   ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch, rng)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, mb, rng)
+                return (jax.tree_util.tree_map(jnp.add, g_acc, g),
+                        l_acc + l), None
+
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), split)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = {"ce": loss, "loss": loss}
+
+        new_params, new_opt, stats = adamw_update(
+            state.params, grads, state.opt, opt_cfg, recipe)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, recipe: Optional[QuantRecipe], rules=None):
+    def eval_step(params, batch):
+        loss, metrics = model.train_loss(params, batch, recipe=recipe,
+                                         rules=rules)
+        return metrics
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers for the full TrainState
+# ---------------------------------------------------------------------------
+
+def state_shardings(rules, model: Model, state_shapes: TrainState):
+    """NamedSharding tree matching a TrainState's structure.  Optimizer
+    moments mirror their parameter's logical axes when shapes match (fp/fake
+    storage); int-codec QState subtrees shard payloads like the flat param
+    when the leading dim divides, else replicate (scale sidecars are tiny)."""
+    if rules is None:
+        return None
+    flat_p, p_treedef = jax.tree_util.tree_flatten(state_shapes.params)
+    flat_ax = p_treedef.flatten_up_to(model.axes)
+    p_shard_leaves = [rules.sharding_for(p.shape, ax)
+                      for p, ax in zip(flat_p, flat_ax)]
+    p_shard = jax.tree_util.tree_unflatten(p_treedef, p_shard_leaves)
+
+    def moments(tree):
+        flat_m = p_treedef.flatten_up_to(tree)
+        out = []
+        for p, ax, mstate in zip(flat_p, flat_ax, flat_m):
+            if isinstance(mstate, qadam.QState):
+                out.append(qadam.QState(
+                    q=rules.replicated(), scale=rules.replicated(),
+                    zero=rules.replicated()))
+            elif tuple(mstate.shape) == tuple(p.shape):
+                out.append(rules.sharding_for(p.shape, ax))
+            else:
+                out.append(rules.replicated())
+        return jax.tree_util.tree_unflatten(p_treedef, out)
+
+    return TrainState(
+        params=p_shard,
+        opt=AdamState(step=rules.replicated(),
+                      m1=moments(state_shapes.opt.m1),
+                      m2=moments(state_shapes.opt.m2)))
+
+
+def batch_shardings(rules, batch_specs):
+    """DP-shard the leading batch dim where divisible, else replicate."""
+    if rules is None:
+        return None
+
+    def one(s):
+        if s.shape and s.shape[0] % rules.dp_size == 0:
+            return rules.batch_sharding(len(s.shape))
+        return rules.replicated()
+
+    return jax.tree_util.tree_map(one, batch_specs)

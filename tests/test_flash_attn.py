@@ -1,0 +1,85 @@
+"""Flash-attention Pallas kernel: interpret-mode sweeps vs oracle (fwd+bwd)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import (_ref_attend, flash_attention,
+                                      flash_attention_fwd, hbm_traffic_bytes)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(bh, sq, skv, d, dtype=jnp.float32):
+    kq, kk, kv = jax.random.split(KEY, 3)
+    return (jax.random.normal(kq, (bh, sq, d), dtype),
+            jax.random.normal(kk, (bh, skv, d), dtype),
+            jax.random.normal(kv, (bh, skv, d), dtype))
+
+
+@pytest.mark.parametrize("bh,sq,skv,d,causal", [
+    (4, 128, 128, 64, True), (2, 256, 256, 32, True),
+    (2, 128, 256, 64, True), (3, 64, 64, 128, False),
+    (1, 100, 100, 64, True), (2, 192, 192, 64, True),
+])
+def test_forward_sweep(bh, sq, skv, d, causal):
+    q, k, v = _qkv(bh, sq, skv, d)
+    off = skv - sq if causal else 0
+    got = flash_attention_fwd(q, k, v, causal=causal, q_offset=off,
+                              block_q=64, block_k=64)
+    want = _ref_attend(q, k, v, causal, off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_forward_bf16():
+    q, k, v = _qkv(2, 128, 128, 64, jnp.bfloat16)
+    got = flash_attention_fwd(q, k, v, causal=True, block_q=64, block_k=64)
+    want = _ref_attend(q, k, v, True, 0)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_backward_all_grads(causal):
+    q, k, v = _qkv(2, 64, 64, 32)
+
+    def loss_fa(a, b, c):
+        return jnp.sum(flash_attention(a, b, c, causal, 0, 64, 64, True) ** 2)
+
+    def loss_rf(a, b, c):
+        return jnp.sum(_ref_attend(a, b, c, causal, 0) ** 2)
+
+    g_fa = jax.grad(loss_fa, argnums=(0, 1, 2))(q, k, v)
+    g_rf = jax.grad(loss_rf, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_fa, g_rf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_hbm_traffic_claim_far_below_materialized():
+    """The kernel's DMA schedule vs materializing the score matrix."""
+    bh, s, d = 32, 4096, 128
+    flash = hbm_traffic_bytes(bh, s, s, d, dtype_bytes=2, block_q=1024)
+    materialized = bh * s * s * 4 * 4     # >= 4 fp32 passes over (S,S)
+    assert flash < materialized / 20, (flash, materialized)   # measured 25.6x
+
+
+def test_model_integration_matches_xla_path():
+    """Full model forward+grad with attention_impl=flash_pallas vs xla."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    cfg = get_smoke_config("llama3-8b")
+    cfg_flash = dataclasses.replace(cfg, attention_impl="flash_pallas")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 65), 0,
+                              cfg.vocab_size)
+    m1, m2 = build_model(cfg), build_model(cfg_flash)
+    p = m1.init_params(jax.random.PRNGKey(0))
+    l1, _ = m1.train_loss(p, {"tokens": toks})
+    l2, _ = m2.train_loss(p, {"tokens": toks})
+    assert abs(float(l1) - float(l2)) < 0.02
+    g = jax.grad(lambda pp: m2.train_loss(pp, {"tokens": toks})[0])(p)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert bool(jnp.all(jnp.isfinite(leaf)))

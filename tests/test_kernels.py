@@ -1,0 +1,110 @@
+"""Pallas kernel validation: interpret-mode sweeps vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qconfig import Granularity, QuantSpec
+from repro.core.quantizer import fake_quant_nograd
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(2)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (200, 300), (1024, 64),
+                                   (7, 513), (256, 4096)])
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qdq_row_sweep(shape, bits, dtype):
+    x = (jax.random.normal(KEY, shape) * 5).astype(dtype)
+    got = ops.fused_fake_quant(x, QuantSpec(bits, Granularity.PER_TOKEN))
+    want = ref.qdq_row_ref(x, bits)
+    g = np.asarray(got, np.float32)
+    w = np.asarray(want, np.float32)
+    if dtype == jnp.float32:
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+    else:
+        # bf16: (a) jit-fused vs eager rounding can resolve ties one grid
+        # step apart (both valid quantizations); (b) the bf16 OUTPUT adds a
+        # representation error of ~|v|*2^-8.  Assert one-LSB agreement under
+        # that combined tolerance, with large agreement in the half-LSB band.
+        qmax = 2 ** (bits - 1) - 1
+        xf = np.asarray(x, np.float32)
+        scale = np.abs(xf).max(-1, keepdims=True) / qmax
+        tol = 1.05 * scale + np.abs(w) * 2.0 ** -7 + 1e-6
+        err = np.abs(g - w)
+        assert (err <= tol).all(), float((err - tol).max())
+        assert (err > 0.51 * scale + np.abs(w) * 2.0 ** -7
+                ).mean() < 0.01
+
+
+@pytest.mark.parametrize("gran", [Granularity.PER_CHANNEL,
+                                  Granularity.PER_TENSOR])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qdq_scaled_matches_core(gran, bits):
+    x = jax.random.normal(KEY, (96, 257)) * 2
+    spec = QuantSpec(bits, gran)
+    got = ops.fused_fake_quant(x, spec)
+    want = fake_quant_nograd(x, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128),
+                                   (100, 300, 257), (64, 64, 64),
+                                   (130, 257, 90)])
+def test_int8_matmul_sweep(m, k, n):
+    kx, kw = jax.random.split(KEY)
+    x = jax.random.normal(kx, (m, k), jnp.float32) * 2
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    got = ops.int8_quantized_matmul(x, w, out_dtype=jnp.float32)
+
+    # Quantizer-contract bound (cross-implementation equality is flaky on
+    # round ties): |got - x@w| <= rs_i*cs_j*(0.5*sum|wq| + 0.5*sum|xq| + K/4)
+    xf, wf = np.asarray(x, np.float64), np.asarray(w, np.float64)
+    rs = np.maximum(np.abs(xf).max(1, keepdims=True), 1e-12) / 127
+    cs = np.maximum(np.abs(wf).max(0, keepdims=True), 1e-12) / 127
+    bound = (0.5 * rs * cs * (np.abs(wf / cs).sum(0, keepdims=True)
+                              + np.abs(xf / rs).sum(1, keepdims=True))
+             + rs * cs * k * 0.25) * 1.05 + 1e-5
+    err = np.abs(np.asarray(got, np.float64) - xf @ wf)
+    assert (err <= bound).all(), float((err - bound).max())
+    # and the int core is exact (test_int8_matmul_ref_consistency); here
+    # additionally require decent fidelity vs fp
+    rel = err.max() / np.abs(xf @ wf).max()
+    assert rel < 0.05, rel
+
+
+def test_int8_matmul_ref_consistency():
+    """kernel(int payloads) == ref.int8_matmul_ref exactly."""
+    from repro.kernels.int8_matmul import int8_matmul
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randint(-128, 128, (128, 256)), jnp.int8)
+    w = jnp.asarray(rng.randint(-128, 128, (256, 128)), jnp.int8)
+    rs = jnp.asarray(rng.rand(128, 1).astype(np.float32))
+    cs = jnp.asarray(rng.rand(1, 128).astype(np.float32))
+    got = int8_matmul(x, w, rs, cs, out_dtype=jnp.float32, interpret=True)
+    want = ref.int8_matmul_ref(x, w, rs, cs, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_int8_matmul_batched_input():
+    x = jax.random.normal(KEY, (2, 10, 64))
+    w = jax.random.normal(KEY, (64, 32))
+    got = ops.int8_quantized_matmul(x, w, out_dtype=jnp.float32)
+    assert got.shape == (2, 10, 32)
+    rel = float(jnp.max(jnp.abs(got - x @ w)) / jnp.max(jnp.abs(x @ w)))
+    assert rel < 0.05, rel
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 300), st.integers(2, 8))
+def test_property_qdq_row_any_shape(rows, cols, bits):
+    rng = np.random.RandomState(rows * 301 + cols)
+    x = jnp.asarray(rng.randn(rows, cols).astype(np.float32))
+    got = ops.fused_fake_quant(x, QuantSpec(bits, Granularity.PER_TOKEN))
+    want = ref.qdq_row_ref(x, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,136 @@
+"""Per-arch smoke tests: reduced config, one train step on CPU, shapes +
+no-NaN assertions; decode-vs-full-forward consistency per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.core import paper_recipe
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg, s=S, extra=1):
+    if cfg.family == "vlm":
+        return {"patches": jax.random.normal(
+                    KEY, (B, cfg.num_patches, cfg.d_model)),
+                "tokens": jax.random.randint(
+                    KEY, (B, s - cfg.num_patches + extra), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        return {"frames": jax.random.normal(
+                    KEY, (B, max(s // cfg.frame_ratio, 1), cfg.d_model)),
+                "tokens": jax.random.randint(KEY, (B, s + extra), 0,
+                                             cfg.vocab_size)}
+    return {"tokens": jax.random.randint(KEY, (B, s + extra), 0,
+                                         cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    batch = _batch(cfg, s=32)
+    loss, metrics = jax.jit(
+        lambda p, b: model.train_loss(p, b, recipe=paper_recipe()))(
+            params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    assert float(loss) > 0
+    grads = jax.jit(jax.grad(
+        lambda p: model.train_loss(p, _batch(cfg, s=32),
+                                   recipe=paper_recipe())[0]))(params)
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert not bool(jnp.any(jnp.isnan(leaf))), arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_matches_full_forward(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+
+    if cfg.family == "vlm":
+        p = cfg.num_patches
+        toks = jax.random.randint(KEY, (B, 9), 0, cfg.vocab_size)
+        patches = jax.random.normal(KEY, (B, p, cfg.d_model))
+        max_seq = p + 12
+        _, st = model.prefill(params, {"patches": patches,
+                                       "tokens": toks[:, :8]},
+                              max_seq=max_seq)
+        step_logits, _ = model.decode(params, st, toks[:, 8:9],
+                                      jnp.int32(p + 8))
+        full_logits, _ = model.prefill(params, {"patches": patches,
+                                                "tokens": toks},
+                                       max_seq=max_seq)
+    elif cfg.family == "encdec":
+        toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+        frames = jax.random.normal(KEY, (B, 4, cfg.d_model))
+        _, st = model.prefill(params, {"frames": frames,
+                                       "tokens": toks[:, :S]}, max_seq=S + 4)
+        step_logits, _ = model.decode(params, st, toks[:, S:S + 1],
+                                      jnp.int32(S))
+        full_logits, _ = model.prefill(params, {"frames": frames,
+                                                "tokens": toks},
+                                       max_seq=S + 4)
+    else:
+        toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+        _, st = model.prefill(params, {"tokens": toks[:, :S]}, max_seq=S + 4)
+        step_logits, _ = model.decode(params, st, toks[:, S:S + 1],
+                                      jnp.int32(S))
+        full_logits, _ = model.prefill(params, {"tokens": toks},
+                                       max_seq=S + 4)
+    err = float(jnp.max(jnp.abs(step_logits - full_logits)))
+    assert err < 0.15, (arch, err)
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers (the dry-run exercises the full configs)."""
+    from repro.configs import get_config
+    c = get_config("granite-moe-3b-a800m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.n_experts, c.top_k) == \
+        (32, 1536, 24, 8, 512, 49155, 40, 8)
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.n_experts, c.top_k) == \
+        (32, 4096, 32, 8, 6400, 32064, 16, 2)
+    c = get_config("zamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.ssm_state) == (54, 2560, 32, 32, 10240, 32000, 64)
+    c = get_config("paligemma-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (18, 2048, 8, 1, 16384, 257216)
+    c = get_config("gemma-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.head_dim) == (18, 2048, 8, 1, 16384, 256000, 256)
+    c = get_config("qwen3-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.qk_norm) == (64, 5120, 64, 8, 25600, 151936, True)
+    c = get_config("llama3-8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 4096, 32, 8, 14336, 128256)
+    c = get_config("yi-6b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 4096, 32, 4, 11008, 64000)
+    c = get_config("seamless-m4t-medium")
+    assert (c.n_layers, c.enc_layers, c.d_model, c.n_heads, c.n_kv_heads,
+            c.d_ff, c.vocab_size) == (12, 12, 1024, 16, 16, 4096, 256206)
+    c = get_config("mamba2-130m")
+    assert (c.n_layers, c.d_model, c.vocab_size, c.ssm_state) == \
+        (24, 768, 50280, 128)
+
+
+def test_param_counts_plausible():
+    from repro.configs import get_config
+    approx = {
+        "llama3-8b": 8.0e9, "yi-6b": 6.1e9, "gemma-2b": 2.5e9,
+        "qwen3-32b": 32.8e9, "phi3.5-moe-42b-a6.6b": 41.9e9,
+        "granite-moe-3b-a800m": 3.3e9, "mamba2-130m": 0.13e9,
+    }
+    for arch, want in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.7 * want < got < 1.4 * want, (arch, got, want)

@@ -1,0 +1,88 @@
+"""Paper Fig-1 forward/backward semantics of the quantized linear."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.qconfig import Granularity, QuantRecipe, QuantSpec
+from repro.core.qlinear import quantized_linear
+from repro.core.quantizer import fake_quant_nograd
+
+KEY = jax.random.PRNGKey(1)
+W8 = QuantSpec(8, Granularity.PER_CHANNEL)
+A8 = QuantSpec(8, Granularity.PER_TOKEN)
+G8 = QuantSpec(8, Granularity.PER_TOKEN)
+
+
+def _setup():
+    kx, kw = jax.random.split(KEY)
+    x = jax.random.normal(kx, (3, 5, 16))
+    w = jax.random.normal(kw, (16, 24)) * 0.2
+    return x, w
+
+
+def test_forward_injects_both_errors():
+    x, w = _setup()
+    r = QuantRecipe(weights=W8, acts=A8)
+    y = quantized_linear(x, w, r)
+    want = jnp.matmul(fake_quant_nograd(x, A8), fake_quant_nograd(w, W8))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_backward_fig1_semantics():
+    """dx uses the REAL gradient + quantized weights; dW uses the QUANTIZED
+    gradient + quantized activations."""
+    x, w = _setup()
+    r = QuantRecipe(weights=W8, acts=A8, grads=G8)
+
+    def loss(xx, ww):
+        return jnp.sum(quantized_linear(xx, ww, r) ** 2)
+
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    xq = fake_quant_nograd(x, A8)
+    wq = fake_quant_nograd(w, W8)
+    g = 2.0 * jnp.matmul(xq, wq)
+    dx_ref = jnp.matmul(g, wq.T)                        # real g on dx path
+    gq = fake_quant_nograd(g, G8)                       # quantized g on dW
+    dw_ref = xq.reshape(-1, 16).T @ gq.reshape(-1, 24)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_ref),
+                               rtol=2e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_ref),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_grads_dx_ablation_quantizes_input_grad_path():
+    x, w = _setup()
+    r = QuantRecipe(weights=W8, acts=A8, grads_dx=QuantSpec(4, Granularity.PER_TOKEN))
+
+    def loss(xx):
+        return jnp.sum(quantized_linear(xx, w, r) ** 2)
+
+    dx = jax.grad(loss)(x)
+    xq = fake_quant_nograd(x, A8)
+    wq = fake_quant_nograd(w, W8)
+    g = 2.0 * jnp.matmul(xq, wq)
+    gq = fake_quant_nograd(g, QuantSpec(4, Granularity.PER_TOKEN))
+    dx_ref = jnp.matmul(gq, wq.T)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_ref),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_fp_fallback_is_plain_matmul():
+    x, w = _setup()
+    y = quantized_linear(x, w, QuantRecipe())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-6)
+    y2 = quantized_linear(x, w, None)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(x @ w), rtol=1e-6)
+
+
+def test_quant_noise_shrinks_with_bits():
+    x, w = _setup()
+    errs = []
+    for bits in (2, 4, 8):
+        r = QuantRecipe(weights=QuantSpec(bits, Granularity.PER_CHANNEL))
+        errs.append(float(jnp.max(jnp.abs(
+            quantized_linear(x, w, r) - x @ w))))
+    assert errs[0] > errs[1] > errs[2]

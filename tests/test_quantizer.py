@@ -1,0 +1,113 @@
+"""Unit + property tests for the core quantizer (paper Eq. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qconfig import Granularity, QuantSpec, RoundMode
+from repro.core.quantizer import (compute_scale_zero, dequantize_int,
+                                  fake_quant, fake_quant_nograd, quant_error,
+                                  quantize_int)
+
+KEY = jax.random.PRNGKey(0)
+GRANS = list(Granularity)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("gran", GRANS)
+@pytest.mark.parametrize("symmetric", [True, False])
+def test_qdq_error_bound(bits, gran, symmetric):
+    x = jax.random.normal(KEY, (6, 10, 16)) * 3.0
+    spec = QuantSpec(bits, gran, symmetric=symmetric)
+    err = quant_error(x, spec)
+    scale, _ = compute_scale_zero(x, spec)
+    # max error is half an LSB of the per-group scale
+    bound = jnp.broadcast_to(scale, x.shape) * 0.5 + 1e-5
+    assert bool(jnp.all(err <= bound)), float(jnp.max(err - bound))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("gran", GRANS)
+def test_qdq_idempotent(bits, gran):
+    x = jax.random.normal(KEY, (8, 32))
+    spec = QuantSpec(bits, gran)
+    q1 = fake_quant_nograd(x, spec)
+    q2 = fake_quant_nograd(q1, spec)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_absmax_preserved_symmetric():
+    x = jax.random.normal(KEY, (64,)).reshape(1, 64)
+    spec = QuantSpec(8, Granularity.PER_TENSOR)
+    q = fake_quant_nograd(x, spec)
+    np.testing.assert_allclose(float(jnp.max(jnp.abs(q))),
+                               float(jnp.max(jnp.abs(x))), rtol=1e-6)
+
+
+def test_ste_gradient_is_identity():
+    x = jax.random.normal(KEY, (4, 8))
+    spec = QuantSpec(8, Granularity.PER_TOKEN)
+    g = jax.grad(lambda z: jnp.sum(fake_quant(z, spec) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones_like(g),
+                               rtol=1e-6)
+
+
+def test_int_roundtrip_matches_fake():
+    x = jax.random.normal(KEY, (16, 32)) * 2
+    for spec in [QuantSpec(8, Granularity.PER_CHANNEL),
+                 QuantSpec(4, Granularity.PER_TOKEN),
+                 QuantSpec(8, Granularity.PER_TENSOR, symmetric=False),
+                 QuantSpec(8, Granularity.PER_TOKEN, block_size=64)]:
+        q, s, z = quantize_int(x, spec)
+        deq = dequantize_int(q, s, z, spec, shape=x.shape)
+        fq = fake_quant_nograd(x, spec)
+        np.testing.assert_allclose(np.asarray(deq), np.asarray(fq),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_stochastic_rounding_unbiased():
+    x = jnp.full((20000,), 0.3).reshape(1, -1)
+    spec = QuantSpec(2, Granularity.PER_TENSOR,
+                     round_mode=RoundMode.STOCHASTIC)
+    # scale = 0.3 (absmax/1); value sits at 0.3/0.3 = 1.0 exactly -> trivial.
+    # Use a mix so values land between grid points.
+    x = jnp.concatenate([x, jnp.full((1, 1), 1.0)], axis=1)
+    q = fake_quant_nograd(x, spec, key=jax.random.PRNGKey(3))
+    mean = float(jnp.mean(q[0, :-1]))
+    assert abs(mean - 0.3) < 0.02, mean      # E[q] == x
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 6), st.integers(1, 64),
+       st.booleans())
+def test_property_error_bound_hypothesis(bits, rows, cols, symmetric):
+    rng = np.random.RandomState(bits * 1000 + rows * 64 + cols)
+    x = jnp.asarray(rng.randn(rows, cols).astype(np.float32) * 10)
+    spec = QuantSpec(bits, Granularity.PER_TOKEN, symmetric=symmetric)
+    err = np.asarray(quant_error(x, spec))
+    scale, _ = compute_scale_zero(x, spec)
+    bound = np.broadcast_to(np.asarray(scale), x.shape) * 0.5 + 1e-4
+    assert (err <= bound).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.1, 100.0))
+def test_property_positive_scale_equivariance(alpha):
+    """Symmetric per-tensor qdq commutes with positive scaling."""
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(4, 16).astype(np.float32))
+    spec = QuantSpec(8, Granularity.PER_TENSOR)
+    a = jnp.float32(alpha)
+    left = fake_quant_nograd(x * a, spec)
+    right = fake_quant_nograd(x, spec) * a
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_zero_tensor_safe():
+    x = jnp.zeros((4, 4))
+    for gran in GRANS:
+        q = fake_quant_nograd(x, QuantSpec(8, gran))
+        assert bool(jnp.all(q == 0)) and not bool(jnp.any(jnp.isnan(q)))
