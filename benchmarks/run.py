@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import paper_recipe
+from repro.core import LinearCtx, QuantPolicy, paper_recipe, parse_policy
 from repro.core.qconfig import Granularity, QuantRecipe, QuantSpec
 from repro.core.quantizer import fake_quant_nograd
 from repro.core.qlinear import quantized_linear
@@ -87,14 +87,37 @@ def bench_kernels() -> None:
         "interpret-mode; TPU target")
 
 
+def bench_policy_backends() -> None:
+    """QuantPolicy dispatch: fake-quant reference vs real-int8 Pallas on one
+    W8A8 linear (interpret mode on CPU -- TPU is the target), plus the
+    depth-switch overhead of a layer-banded policy."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2048, 1024))
+    w = jax.random.normal(jax.random.PRNGKey(1), (1024, 1024))
+    for name, pol in [
+            ("policy_fake_quant", QuantPolicy(default=paper_recipe())),
+            ("policy_int8_pallas", QuantPolicy(default=paper_recipe(),
+                                               backend="int8_pallas"))]:
+        f = jax.jit(lambda a, b, p=pol: p.linear(LinearCtx("mlp_up"), a, b))
+        row(name, _time(f, x, w, iters=3), "2048x1024x1024 W8A8")
+    banded = parse_policy("block[0:2].*=fp,*=w8c+a8t")
+    f = jax.jit(lambda a, b, li: banded.linear(
+        LinearCtx("mlp_up", layer=li, n_layers=12), a, b))
+    row("policy_depth_switch", _time(f, x, w, jnp.int32(6)),
+        "lax.switch over 2 depth classes")
+
+
 def bench_train_steps() -> None:
-    """Train-step wall time for the paper recipe vs fp baseline (mini GPT-2)."""
+    """Train-step wall time: fp baseline, global paper recipe, and a
+    per-layer policy with fp end-blocks (mini GPT-2)."""
     cfg = get_smoke_config("gpt2-small")
     model = build_model(cfg)
     corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
     loader = Loader(corpus, cfg, batch_size=8, seq_len=128)
     batch = next(loader)
-    for name, recipe in [("fp", None), ("paper_w8a8", paper_recipe())]:
+    for name, recipe in [
+            ("fp", None), ("paper_w8a8", paper_recipe()),
+            ("policy_banded", parse_policy(
+                "block[0:1].*=fp,block[-1:].*=fp,*=w8c+a8t"))]:
         opt = OptConfig(lr=1e-3, total_steps=100)
         state = init_train_state(model, jax.random.PRNGKey(0), recipe, opt)
         step = jax.jit(make_train_step(model, recipe, opt))
@@ -165,6 +188,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_quantizer_ops()
     bench_kernels()
+    bench_policy_backends()
     bench_train_steps()
     table_paper_results()
     table_memory_and_linear_share()

@@ -1,5 +1,6 @@
-"""Component ablation sweep (the paper's controlled-study shape): quantize
-one component at a time and compare validation-loss trajectories.
+"""Component + per-layer ablation sweep (the paper's controlled-study shape,
+extended with the QuantPolicy API): quantize one component / layer band at a
+time and compare validation-loss trajectories.
 
     PYTHONPATH=src python examples/quantization_ablation.py --steps 100
 """
@@ -8,24 +9,34 @@ import argparse
 import jax
 
 from repro.configs import get_smoke_config
-from repro.core.qconfig import Granularity, QuantRecipe, QuantSpec
+from repro.core import QuantPolicy, parse_policy, parse_recipe
 from repro.data import Loader, SyntheticCorpus
 from repro.models import build_model
 from repro.optim import OptConfig
 from repro.train import init_train_state, make_eval_step, make_train_step
 
+# Single-recipe rows use QuantPolicy.from_recipe (the legacy global scoping);
+# policy rows exercise the per-layer-role rules the paper's sensitivity
+# analysis calls for.
 SWEEP = {
-    "baseline": QuantRecipe(),
-    "W8/ch": QuantRecipe(weights=QuantSpec(8, Granularity.PER_CHANNEL)),
-    "W4/tensor": QuantRecipe(weights=QuantSpec(4, Granularity.PER_TENSOR)),
-    "A8/token": QuantRecipe(acts=QuantSpec(8, Granularity.PER_TOKEN)),
-    "A4/token": QuantRecipe(acts=QuantSpec(4, Granularity.PER_TOKEN)),
-    "G8/token": QuantRecipe(grads=QuantSpec(8, Granularity.PER_TOKEN)),
-    "M2-8/ch (paper: diverges)": QuantRecipe(
-        adam_m2=QuantSpec(8, Granularity.PER_CHANNEL)),
-    "M2-8 blockwise-sqrt (ours)": QuantRecipe(
-        adam_m2=QuantSpec(8, Granularity.PER_CHANNEL, symmetric=False,
-                          block_size=128, sqrt_domain=True)),
+    "baseline": QuantPolicy.from_recipe(None),
+    "W8/ch": QuantPolicy.from_recipe(parse_recipe("w8c")),
+    "W4/tensor": QuantPolicy.from_recipe(parse_recipe("w4n")),
+    "A8/token": QuantPolicy.from_recipe(parse_recipe("a8t")),
+    "A4/token": QuantPolicy.from_recipe(parse_recipe("a4t")),
+    "G8/token": QuantPolicy.from_recipe(parse_recipe("g8t")),
+    "M2-8/ch (paper: diverges)": QuantPolicy.from_recipe(
+        parse_recipe("m2:8c")),
+    "M2-8 blockwise-sqrt (ours)": QuantPolicy.from_recipe(
+        parse_recipe("m2:8c-asym-b128-sqrt")),
+    # --- per-layer policies (first/last block fp, middle quantized) -------
+    "W8A8 all blocks": parse_policy("*=w8c+a8t"),
+    "W8A8 mid, fp ends": parse_policy(
+        "block[0:1].*=fp,block[-1:].*=fp,*=w8c+a8t"),
+    "W8A8 mid int8-kernel, fp ends": parse_policy(
+        "block[0:1].*=fp,block[-1:].*=fp,*=w8c+a8t@int8_pallas"),
+    "W4 mid only (harsh)": parse_policy(
+        "block[0:1].*=fp,block[-1:].*=fp,*=w4c+a8t"),
 }
 
 
@@ -37,13 +48,13 @@ def main():
     model = build_model(cfg)
     corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
 
-    print(f"{'config':30s} {'final CE':>9s} {'vs base':>8s}")
+    print(f"{'config':32s} {'final CE':>9s} {'vs base':>8s}")
     base = None
-    for name, recipe in SWEEP.items():
+    for name, policy in SWEEP.items():
         opt = OptConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps)
-        state = init_train_state(model, jax.random.PRNGKey(0), recipe, opt)
-        step = jax.jit(make_train_step(model, recipe, opt))
-        eval_step = jax.jit(make_eval_step(model, recipe))
+        state = init_train_state(model, jax.random.PRNGKey(0), policy, opt)
+        step = jax.jit(make_train_step(model, policy, opt))
+        eval_step = jax.jit(make_eval_step(model, policy))
         loader = Loader(corpus, cfg, batch_size=8, seq_len=128)
         valid = Loader(corpus, cfg, batch_size=8, seq_len=128, split="valid")
         diverged = False
@@ -53,12 +64,12 @@ def main():
                 diverged = True
                 break
         if diverged:
-            print(f"{name:30s} {'DIVERGED':>9s}")
+            print(f"{name:32s} {'DIVERGED':>9s}")
             continue
         ce = float(eval_step(state.params, valid.peek(0))["ce"])
         if base is None:
             base = ce
-        print(f"{name:30s} {ce:9.4f} {ce - base:+8.4f}")
+        print(f"{name:32s} {ce:9.4f} {ce - base:+8.4f}")
 
 
 if __name__ == "__main__":

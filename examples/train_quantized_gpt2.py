@@ -6,6 +6,12 @@ Default trains the mini GPT-2 for a few hundred steps on CPU; pass
 
     PYTHONPATH=src python examples/train_quantized_gpt2.py \
         --steps 300 --recipe paper --ckpt /tmp/ckpt_gpt2
+
+Per-layer policies (QuantPolicy API): keep the sensitive first/last blocks
+fp and run the middle of the stack on the real-int8 Pallas kernel:
+
+    PYTHONPATH=src python examples/train_quantized_gpt2.py --steps 300 \
+        --policy 'block[0:1].*=fp,block[-1:].*=fp,*=w8c+a8t@int8_pallas'
 """
 import argparse
 
@@ -13,7 +19,7 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke_config
-from repro.core import get_recipe
+from repro.core import get_recipe, parse_policy
 from repro.data import Loader, SyntheticCorpus
 from repro.models import build_model
 from repro.optim import OptConfig
@@ -31,7 +37,10 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--recipe", default="paper",
-                    choices=["fp", "paper", "paper_wag8", "beyond"])
+                    help="preset name or compact spec ('w8c,a8t,m1:4c')")
+    ap.add_argument("--policy", default="",
+                    help="per-layer-role rules, e.g. 'block[0:2].*=fp,"
+                         "*=w8c+a8t@int8_pallas' (overrides --recipe)")
     ap.add_argument("--state-storage", default="fake",
                     choices=["fake", "int"])
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
@@ -39,9 +48,10 @@ def main():
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     model = build_model(cfg)
-    recipe = get_recipe(args.recipe)
+    recipe = (parse_policy(args.policy) if args.policy
+              else get_recipe(args.recipe))
     print(f"arch={cfg.name}  params~{cfg.param_count()/1e6:.1f}M  "
-          f"recipe=[{recipe.describe()}]")
+          f"policy=[{recipe.describe()}]")
 
     corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
     opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),

@@ -1,8 +1,13 @@
 """Core quantization library -- the paper's primary contribution in JAX."""
 from repro.core.qconfig import (Granularity, QuantRecipe, QuantSpec, RoundMode,
                                 beyond_paper_recipe, fp_baseline, get_recipe,
-                                paper_recipe, paper_recipe_wag8, PRESETS)
-from repro.core.qlinear import quantized_linear
+                                paper_recipe, paper_recipe_wag8, parse_recipe,
+                                parse_spec, PRESETS)
+from repro.core.qlinear import (int8_backend_supported, int8_quantized_linear,
+                                quantized_linear)
+from repro.core.qpolicy import (FP_POLICY, KERNEL_BACKENDS, LinearCtx,
+                                PolicyRule, QuantPolicy, ROLES, as_policy,
+                                parse_policy, register_backend)
 from repro.core.quantizer import (compute_scale_zero, dequantize_int,
                                   fake_quant, fake_quant_nograd,
                                   maybe_fake_quant, quant_error, quantize_int)
@@ -10,7 +15,10 @@ from repro.core.quantizer import (compute_scale_zero, dequantize_int,
 __all__ = [
     "Granularity", "QuantRecipe", "QuantSpec", "RoundMode",
     "beyond_paper_recipe", "fp_baseline", "get_recipe", "paper_recipe",
-    "paper_recipe_wag8", "PRESETS", "quantized_linear", "compute_scale_zero",
-    "dequantize_int", "fake_quant", "fake_quant_nograd", "maybe_fake_quant",
-    "quant_error", "quantize_int",
+    "paper_recipe_wag8", "parse_recipe", "parse_spec", "PRESETS",
+    "quantized_linear", "int8_backend_supported", "int8_quantized_linear",
+    "FP_POLICY", "KERNEL_BACKENDS", "LinearCtx", "PolicyRule", "QuantPolicy",
+    "ROLES", "as_policy", "parse_policy", "register_backend",
+    "compute_scale_zero", "dequantize_int", "fake_quant", "fake_quant_nograd",
+    "maybe_fake_quant", "quant_error", "quantize_int",
 ]

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import re
 from typing import Optional
 
 
@@ -79,6 +80,19 @@ class QuantSpec:
             extra += ",sr"
         return f"int{self.bits}/{self.granularity.value}/{sym}{extra}"
 
+    def describe_compact(self) -> str:
+        """Compact codec form, e.g. ``8c-asym-b128-sqrt`` (see parse_spec)."""
+        s = f"{self.bits}{_GRAN_TO_CODE[self.granularity]}"
+        if not self.symmetric:
+            s += "-asym"
+        if self.round_mode is RoundMode.STOCHASTIC:
+            s += "-sr"
+        if self.block_size:
+            s += f"-b{self.block_size}"
+        if self.sqrt_domain:
+            s += "-sqrt"
+        return s
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantRecipe:
@@ -113,6 +127,19 @@ class QuantRecipe:
     @property
     def any_linear_quant(self) -> bool:
         return any(s is not None for s in (self.weights, self.acts, self.grads, self.grads_dx))
+
+    def describe_compact(self) -> str:
+        """Compact string codec, the inverse of :func:`parse_recipe`:
+        ``w8c,a8t,g8t,m1:4c``.  ``fp`` for the baseline recipe."""
+        parts = []
+        for code, name in _COMP_CODES.items():
+            spec = getattr(self, name)
+            if spec is not None:
+                sep = ":" if code.startswith("m") else ""
+                parts.append(f"{code}{sep}{spec.describe_compact()}")
+        if self.include_embeddings:
+            parts.append("emb")
+        return "fp" if not parts else ",".join(parts)
 
 
 # ---------------------------------------------------------------------------
@@ -163,7 +190,82 @@ PRESETS = {
 
 
 def get_recipe(name: str) -> QuantRecipe:
-    try:
+    """Resolve a preset name OR a compact recipe string (``w8c,a8t``)."""
+    if name in PRESETS:
         return PRESETS[name]()
-    except KeyError:
-        raise KeyError(f"unknown recipe {name!r}; options: {sorted(PRESETS)}") from None
+    try:
+        return parse_recipe(name)
+    except ValueError as e:
+        raise KeyError(
+            f"unknown recipe {name!r}; options: {sorted(PRESETS)} "
+            f"or a compact spec like 'w8c,a8t,g8t,m1:4c' ({e})") from None
+
+
+# ---------------------------------------------------------------------------
+# Compact string codec (inverse of describe_compact): ad-hoc recipes on the
+# CLI without registering a preset -- e.g. ``--recipe w8c,a8t,m2:8c-b128-sqrt``.
+# ---------------------------------------------------------------------------
+
+_GRAN_CODES = {"c": Granularity.PER_CHANNEL, "t": Granularity.PER_TOKEN,
+               "n": Granularity.PER_TENSOR}
+_GRAN_TO_CODE = {v: k for k, v in _GRAN_CODES.items()}
+# component codes; insertion order fixes describe_compact() field order
+_COMP_CODES = {"w": "weights", "a": "acts", "g": "grads", "gx": "grads_dx",
+               "m1": "adam_m1", "m2": "adam_m2"}
+
+_SPEC_RE = re.compile(r"^(\d+)([ctn])((?:-(?:asym|sr|sqrt|b\d+))*)$")
+_TOKEN_RE = re.compile(r"^(gx|g|w|a|m1|m2):?(.*)$")
+
+
+def parse_spec(text: str) -> QuantSpec:
+    """``<bits><gran>[-asym][-sr][-b<N>][-sqrt]`` -> QuantSpec.
+
+    Granularity codes: ``c`` per-channel, ``t`` per-token, ``n`` per-tensor.
+    """
+    m = _SPEC_RE.match(text.strip())
+    if not m:
+        raise ValueError(f"bad quant spec {text!r} "
+                         "(want e.g. '8c', '4t-sr', '8c-asym-b128-sqrt')")
+    bits, gran, flags = int(m.group(1)), _GRAN_CODES[m.group(2)], m.group(3)
+    kw = {}
+    for flag in filter(None, flags.split("-")):
+        if flag == "asym":
+            kw["symmetric"] = False
+        elif flag == "sr":
+            kw["round_mode"] = RoundMode.STOCHASTIC
+        elif flag == "sqrt":
+            kw["sqrt_domain"] = True
+        elif flag.startswith("b"):
+            kw["block_size"] = int(flag[1:])
+    return QuantSpec(bits, gran, **kw)
+
+
+def parse_recipe(text: str) -> QuantRecipe:
+    """Inverse of :meth:`QuantRecipe.describe_compact`.
+
+    ``"w8c,a8t,g8t,m1:4c"`` -> W8 per-channel + A8 per-token + G8 per-token
+    + 4-bit per-channel Adam m1.  ``"fp"`` (or empty) is the fp baseline;
+    ``"emb"`` sets ``include_embeddings``.  ``+`` is accepted as a component
+    separator so recipe strings can be embedded in comma-separated policy
+    rules (``--policy '*=w8c+a8t'``).
+    """
+    text = text.strip()
+    if text in ("", "fp"):
+        return QuantRecipe()
+    kw = {}
+    for token in re.split(r"[,+]", text):
+        token = token.strip()
+        if not token:
+            continue
+        if token == "emb":
+            kw["include_embeddings"] = True
+            continue
+        m = _TOKEN_RE.match(token)
+        if not m:
+            raise ValueError(f"bad recipe component {token!r} "
+                             "(want e.g. 'w8c', 'a8t', 'm1:4c')")
+        name = _COMP_CODES[m.group(1)]
+        if name in kw:
+            raise ValueError(f"duplicate component {m.group(1)!r} in {text!r}")
+        kw[name] = parse_spec(m.group(2))
+    return QuantRecipe(**kw)

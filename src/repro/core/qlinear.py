@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qconfig import QuantRecipe
+from repro.core.qconfig import Granularity, QuantRecipe, RoundMode
 from repro.core.quantizer import fake_quant_nograd, maybe_fake_quant
 
 
@@ -87,3 +87,66 @@ def quantized_linear(x: jnp.ndarray, w: jnp.ndarray, recipe: Optional[QuantRecip
     if recipe is None or not recipe.any_linear_quant:
         return jnp.matmul(x, w)
     return _qlinear(x, w, key, recipe)
+
+
+# ---------------------------------------------------------------------------
+# Real-int8 forward backend: the Pallas W8A8 kernel replaces the fake-quant
+# einsum on the forward; the backward keeps the exact Fig-1 semantics above
+# (the kernel's integer payloads match fake_quant_nograd bit-exactly, so the
+# qdq residuals are what the MXU actually consumed).
+# ---------------------------------------------------------------------------
+
+_INT8_GRANS_W = (Granularity.PER_CHANNEL, Granularity.PER_TENSOR)
+_INT8_GRANS_A = (Granularity.PER_TOKEN, Granularity.PER_TENSOR)
+
+
+def int8_backend_supported(recipe: Optional[QuantRecipe]) -> bool:
+    """True when the recipe's forward is expressible as the int8 kernel's
+    rank-1-rescale W8A8 contract: symmetric 8-bit weights+acts, nearest
+    rounding, no block-wise codec (per-tensor/per-channel W x per-tensor/
+    per-token A)."""
+    if recipe is None:
+        return False
+    w, a = recipe.weights, recipe.acts
+    return (w is not None and a is not None
+            and w.bits == 8 and a.bits == 8
+            and w.symmetric and a.symmetric
+            and w.block_size == 0 and a.block_size == 0
+            and not w.sqrt_domain and not a.sqrt_domain
+            and w.round_mode is RoundMode.NEAREST
+            and a.round_mode is RoundMode.NEAREST
+            and w.granularity in _INT8_GRANS_W
+            and a.granularity in _INT8_GRANS_A)
+
+
+def _int8_forward(x, w, recipe):
+    from repro.kernels.ops import int8_linear    # lazy: pallas import
+    return int8_linear(x, w, recipe.acts, recipe.weights, out_dtype=x.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qlinear_int8(x: jnp.ndarray, w: jnp.ndarray, key, recipe: QuantRecipe):
+    return _int8_forward(x, w, recipe)
+
+
+def _qlinear_int8_fwd(x, w, key, recipe):
+    y = _int8_forward(x, w, recipe)
+    # residuals: same qdq grid the kernel quantized onto
+    xq = fake_quant_nograd(x, recipe.acts)
+    wq = fake_quant_nograd(w, recipe.weights)
+    return y, (xq, wq, key, x.shape)
+
+
+_qlinear_int8.defvjp(_qlinear_int8_fwd, _qlinear_bwd)
+
+
+def int8_quantized_linear(x: jnp.ndarray, w: jnp.ndarray, recipe: QuantRecipe,
+                          key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """W8A8 linear with real integer compute on the forward (TPU MXU path;
+    interpret-mode on CPU).  Caller must check :func:`int8_backend_supported`;
+    unsupported recipes should route to :func:`quantized_linear` instead."""
+    if not int8_backend_supported(recipe):
+        raise ValueError(
+            f"recipe [{recipe.describe() if recipe else 'fp'}] is outside the "
+            "int8 kernel contract; use quantized_linear")
+    return _qlinear_int8(x, w, key, recipe)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qconfig import Granularity, QuantSpec
+from repro.core.quantizer import quantize_int
 from repro.kernels import int8_matmul as _mm
 from repro.kernels import qdq as _qdq
 
@@ -59,31 +60,45 @@ def fused_fake_quant(x: jnp.ndarray, spec: QuantSpec,
     return out[:r, :c].reshape(shape)
 
 
+def int8_linear(x: jnp.ndarray, w: jnp.ndarray, a_spec: QuantSpec,
+                w_spec: QuantSpec, out_dtype=None,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Spec-driven real-int8 linear: quantize x per ``a_spec`` (per-token or
+    per-tensor) and w per ``w_spec`` (per-channel or per-tensor), run the int8
+    MXU matmul, apply the rank-1 dequant epilogue.  x: (..., K); w: (K, N).
+
+    Integer payloads come from ``core.quantizer.quantize_int`` -- the same
+    codec behind ``fake_quant_nograd`` -- so a backward pass built on the
+    fake-quant residuals sees exactly what the kernel multiplied, by
+    construction.  Caller gates eligibility (symmetric 8-bit, no blocking)
+    -- see ``core.qlinear.int8_backend_supported``.
+    """
+    interp = _auto_interpret(interpret)
+    out_dtype = out_dtype or x.dtype
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    xq, row_scale, _ = quantize_int(x2, a_spec)     # zero == 0 (symmetric)
+    wq, col_scale, _ = quantize_int(w, w_spec)
+    # per-tensor scales arrive (1, 1); the kernel wants rank-1 (M,1) x (1,N)
+    row_scale = jnp.broadcast_to(row_scale.astype(jnp.float32),
+                                 (x2.shape[0], 1))
+    col_scale = jnp.broadcast_to(col_scale.astype(jnp.float32),
+                                 (1, w.shape[1]))
+
+    m, n = xq.shape[0], wq.shape[1]
+    out = _mm.int8_matmul(_pad_to(xq, 128, 128), _pad_to(wq, 128, 128),
+                          _pad_to(row_scale, 128, 1),
+                          _pad_to(col_scale, 1, 128),
+                          out_dtype=out_dtype, interpret=interp)
+    return out[:m, :n].reshape(*shape[:-1], n)
+
+
 @partial(jax.jit, static_argnames=("out_dtype", "interpret"))
 def int8_quantized_matmul(x: jnp.ndarray, w: jnp.ndarray,
                           out_dtype=jnp.bfloat16,
                           interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Real-int8 W8A8 linear: per-token quantize x, per-channel quantize w,
-    int8 MXU matmul, fused rank-1 dequant epilogue.  x: (..., K); w: (K, N)."""
-    interp = _auto_interpret(interpret)
-    shape = x.shape
-    x2 = x.reshape(-1, shape[-1]).astype(jnp.float32)
-    wf = w.astype(jnp.float32)
-
-    row_absmax = jnp.max(jnp.abs(x2), axis=1, keepdims=True)
-    row_scale = jnp.maximum(row_absmax, 1e-12) / 127.0
-    col_absmax = jnp.max(jnp.abs(wf), axis=0, keepdims=True)
-    col_scale = jnp.maximum(col_absmax, 1e-12) / 127.0
-
-    xq = jnp.clip(jnp.round(x2 / row_scale), -128, 127).astype(jnp.int8)
-    wq = jnp.clip(jnp.round(wf / col_scale), -128, 127).astype(jnp.int8)
-
-    m, k = xq.shape
-    n = wq.shape[1]
-    xqp = _pad_to(xq, 128, 128)
-    wqp = _pad_to(wq, 128, 128)
-    rsp = _pad_to(row_scale, 128, 1)
-    csp = _pad_to(col_scale, 1, 128)
-    out = _mm.int8_matmul(xqp, wqp, rsp, csp, out_dtype=out_dtype,
-                          interpret=interp)
-    return out[:m, :n].reshape(*shape[:-1], n)
+    """Real-int8 W8A8 linear with the paper's recommended granularity pair
+    baked in: per-token x, per-channel w (int8_linear with fixed specs)."""
+    return int8_linear(x, w, QuantSpec(8, Granularity.PER_TOKEN),
+                       QuantSpec(8, Granularity.PER_CHANNEL),
+                       out_dtype=out_dtype, interpret=interpret)

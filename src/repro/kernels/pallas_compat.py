@@ -1,0 +1,12 @@
+"""Version shims for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+JAX releases; resolve whichever this environment provides so the kernels
+import (and run in interpret mode) across the supported version range.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

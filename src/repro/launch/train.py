@@ -6,6 +6,8 @@ slice the same entry point builds the full mesh and sharded train step).
         --smoke --steps 20
     PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
         --shape train_4k --model-parallel 4       # on hardware
+    PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
+        --policy 'block[0:2].*=fp,*=w8c+a8t@int8_pallas'   # per-layer policy
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_shape, get_smoke_config
-from repro.core import get_recipe
+from repro.core import get_recipe, parse_policy
 from repro.data import Loader, SyntheticCorpus
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -36,7 +38,12 @@ def main():
     ap.add_argument("--batch", type=int, default=0)
     ap.add_argument("--seq", type=int, default=0)
     ap.add_argument("--lr", type=float, default=6e-4)
-    ap.add_argument("--recipe", default="paper")
+    ap.add_argument("--recipe", default="paper",
+                    help="preset name or compact spec ('w8c,a8t,m1:4c')")
+    ap.add_argument("--policy", default="",
+                    help="per-layer-role policy rules, e.g. "
+                         "'embed=fp,block[0:2].*=fp,*=w8c+a8t@int8_pallas' "
+                         "(overrides --recipe)")
     ap.add_argument("--state-storage", default="fake")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -54,13 +61,14 @@ def main():
         seq = args.seq or shape.seq_len
 
     model = build_model(cfg)
-    recipe = get_recipe(args.recipe)
+    recipe = (parse_policy(args.policy) if args.policy
+              else get_recipe(args.recipe))
     mesh = make_host_mesh(args.model_parallel)
     multi = mesh.devices.size > 1
     rules = make_rules(mesh, "train", cfg=cfg) if multi else None
     print(f"arch={cfg.name} devices={mesh.devices.size} "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"recipe=[{recipe.describe()}] batch={batch} seq={seq}")
+          f"policy=[{recipe.describe()}] batch={batch} seq={seq}")
 
     opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
                     total_steps=args.steps, state_storage=args.state_storage)

@@ -1,8 +1,8 @@
 """Multi-head attention with GQA/MQA, RoPE, qk-norm, KV cache, cross-attn.
 
-All weight-bearing projections route through ``repro.core.quantized_linear``
-(the paper's scope: linear layers of the transformer).  The score/context
-einsums are not linear layers and stay in the carrier precision.
+All weight-bearing projections route through the layer-aware
+``QuantPolicy.linear`` dispatch (roles ``attn_qkv`` / ``attn_out``); the
+score/context einsums are not linear layers and stay in carrier precision.
 """
 from __future__ import annotations
 
@@ -14,16 +14,8 @@ import jax.numpy as jnp
 
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core.qconfig import QuantRecipe
-from repro.core.qlinear import quantized_linear
+from repro.core.qpolicy import LinearCtx, as_policy
 from repro.models.common import ParamSpec, constrain, rmsnorm, rope
-
-
-def qlin(x, w, b, recipe: Optional[QuantRecipe]):
-    y = quantized_linear(x, w, recipe)
-    if b is not None:
-        y = y + b
-    return y
 
 
 def attn_spec(cfg, d_in: Optional[int] = None) -> Dict[str, ParamSpec]:
@@ -202,12 +194,13 @@ def _gqa_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def attn_apply(params, x: jnp.ndarray, cfg, *,
-               recipe: Optional[QuantRecipe], rules,
+               policy=None, rules=None,
                positions: jnp.ndarray,
                mask: Optional[jnp.ndarray],
                kv_source: Optional[jnp.ndarray] = None,
                cache: Optional[Dict[str, jnp.ndarray]] = None,
                cache_offset=None,
+               layer=None, n_layers: int = 0,
                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """One attention call.
 
@@ -216,14 +209,21 @@ def attn_apply(params, x: jnp.ndarray, cfg, *,
     * decode:          cache holds (B, S_max, K, hd); the new k/v rows are
       written at ``cache_offset`` and attention runs over the whole buffer
       with a validity mask supplied by the caller.
+
+    ``policy`` is anything ``as_policy`` accepts (None / QuantRecipe /
+    QuantPolicy); ``layer`` may be a traced index from the layer scan.
     """
+    policy = as_policy(policy)
     b, s, _ = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ctx_qkv = LinearCtx("attn_qkv", layer, n_layers)
+    ctx_out = LinearCtx("attn_out", layer, n_layers)
 
-    q = qlin(x, params["wq"], params.get("bq"), recipe).reshape(b, s, h, hd)
+    q = policy.linear(ctx_qkv, x, params["wq"], params.get("bq")
+                      ).reshape(b, s, h, hd)
     src = x if kv_source is None else kv_source
-    k = qlin(src, params["wk"], params.get("bk"), recipe)
-    v = qlin(src, params["wv"], params.get("bv"), recipe)
+    k = policy.linear(ctx_qkv, src, params["wk"], params.get("bk"))
+    v = policy.linear(ctx_qkv, src, params["wv"], params.get("bv"))
     k = k.reshape(b, k.shape[1], kh, hd)
     v = v.reshape(b, v.shape[1], kh, hd)
 
@@ -256,5 +256,5 @@ def attn_apply(params, x: jnp.ndarray, cfg, *,
     # named for the remat policy: saving ctx prunes one full score-chain
     # recompute from the backward (EXPERIMENTS.md Section Perf iter 4)
     ctx = checkpoint_name(ctx, "attn_ctx")
-    y = qlin(ctx, params["wo"], params.get("bo"), recipe)
+    y = policy.linear(ctx_out, ctx, params["wo"], params.get("bo"))
     return y, new_cache

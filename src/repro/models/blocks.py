@@ -5,11 +5,11 @@ auxiliary losses (MoE load-balance / z-loss) so the scan can accumulate them.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax.numpy as jnp
 
-from repro.core.qconfig import QuantRecipe
+from repro.core.qpolicy import as_policy
 from repro.models.attention import attn_apply, attn_spec
 from repro.models.common import ParamSpec, apply_norm, constrain, norm_spec
 from repro.models.mlp import mlp_apply, mlp_spec
@@ -37,38 +37,49 @@ def block_spec(cfg) -> Dict:
 
 
 def block_apply(params, h: jnp.ndarray, cfg, *,
-                recipe: Optional[QuantRecipe], rules,
-                positions, mask,
+                policy=None, rules=None,
+                positions=None, mask=None,
                 cache=None, cache_offset=None,
-                ssm_state=None, decode: bool = False):
-    """Returns (h, new_cache, new_ssm_state, aux, z_loss)."""
+                ssm_state=None, decode: bool = False,
+                layer=None):
+    """Returns (h, new_cache, new_ssm_state, aux, z_loss).
+
+    ``layer`` is this block's depth index -- a traced scalar inside the layer
+    scan -- consumed by depth-indexed policy rules (``block[0:2].*=fp``)."""
+    policy = as_policy(policy)
+    nl = cfg.n_layers
     zero = jnp.zeros((), jnp.float32)
     if cfg.family in ("ssm", "hybrid"):
         x = apply_norm(h, params["norm"], cfg.norm)
         if decode:
             y, new_state = ssm_decode_step(params["ssm"], x, cfg,
-                                           recipe=recipe, rules=rules,
-                                           state=ssm_state)
+                                           policy=policy, rules=rules,
+                                           state=ssm_state,
+                                           layer=layer, n_layers=nl)
         else:
-            y, new_state = ssm_apply(params["ssm"], x, cfg, recipe=recipe,
+            y, new_state = ssm_apply(params["ssm"], x, cfg, policy=policy,
                                      rules=rules, state=ssm_state,
-                                     return_state=ssm_state is not None)
+                                     return_state=ssm_state is not None,
+                                     layer=layer, n_layers=nl)
         h = h + y
         h = constrain(h, rules, "batch", "seq", None)
         return h, None, new_state, zero, zero
 
     x = apply_norm(h, params["ln1"], cfg.norm)
-    y, new_cache = attn_apply(params["attn"], x, cfg, recipe=recipe,
+    y, new_cache = attn_apply(params["attn"], x, cfg, policy=policy,
                               rules=rules, positions=positions, mask=mask,
-                              cache=cache, cache_offset=cache_offset)
+                              cache=cache, cache_offset=cache_offset,
+                              layer=layer, n_layers=nl)
     h = h + y
     h = constrain(h, rules, "batch", "seq", None)
     x = apply_norm(h, params["ln2"], cfg.norm)
     if cfg.n_experts:
-        y, aux, z = moe_apply(params["moe"], x, cfg, recipe=recipe, rules=rules)
+        y, aux, z = moe_apply(params["moe"], x, cfg, policy=policy,
+                              rules=rules, layer=layer, n_layers=nl)
     else:
-        y, aux, z = mlp_apply(params["mlp"], x, cfg, recipe=recipe,
-                              rules=rules), zero, zero
+        y, aux, z = mlp_apply(params["mlp"], x, cfg, policy=policy,
+                              rules=rules, layer=layer, n_layers=nl), \
+            zero, zero
     h = h + y
     h = constrain(h, rules, "batch", "seq", None)
     return h, new_cache, None, aux, z

@@ -13,7 +13,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import attn_apply, attn_spec, init_cache, qlin
+from repro.core.qpolicy import LinearCtx, as_policy
+from repro.models.attention import attn_apply, attn_spec, init_cache
 from repro.models.common import (ParamSpec, apply_norm, cast_params,
                                  causal_mask, constrain, norm_spec,
                                  stack_layer_specs)
@@ -58,146 +59,176 @@ def encdec_spec(cfg) -> Dict:
     return spec
 
 
-def encode(params, frames: jnp.ndarray, cfg, *, recipe=None, rules=None
+def encode(params, frames: jnp.ndarray, cfg, *, policy=None, rules=None
            ) -> jnp.ndarray:
+    """Bidirectional encoder.  Depth-indexed policy rules address encoder
+    blocks by their position within the encoder stack."""
+    policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
-    h = qlin(frames.astype(dtype), params["frame_proj"], None, recipe)
+    h = policy.linear(LinearCtx("frame_proj"), frames.astype(dtype),
+                      params["frame_proj"])
     h = constrain(h, rules, "batch", "seq", None)
     b, s, _ = h.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    nl = cfg.enc_layers
 
-    def body(hh, bp):
+    def body(hh, xs):
+        bp, li = xs
         x = apply_norm(hh, bp["ln1"], cfg.norm)
-        y, _ = attn_apply(bp["attn"], x, cfg, recipe=recipe, rules=rules,
-                          positions=positions, mask=None)    # bidirectional
+        y, _ = attn_apply(bp["attn"], x, cfg, policy=policy, rules=rules,
+                          positions=positions, mask=None,    # bidirectional
+                          layer=li, n_layers=nl)
         hh = hh + y
         x = apply_norm(hh, bp["ln2"], cfg.norm)
-        hh = hh + mlp_apply(bp["mlp"], x, cfg, recipe=recipe, rules=rules)
+        hh = hh + mlp_apply(bp["mlp"], x, cfg, policy=policy, rules=rules,
+                            layer=li, n_layers=nl)
         hh = constrain(hh, rules, "batch", "seq", None)
         return hh, None
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
-    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    h, _ = jax.lax.scan(body, h, (params["enc_blocks"],
+                                  jnp.arange(nl, dtype=jnp.int32)))
     return apply_norm(h, params["enc_norm"], cfg.norm)
 
 
-def _dec_block(bp, h, enc_out, cfg, *, recipe, rules, positions, mask,
-               cache=None, cache_offset=None, cross_kv=None):
-    """cross_kv: precomputed {"k","v"} (B,S_enc,K,hd) or None (compute)."""
+def _dec_block(bp, h, enc_out, cfg, *, policy, rules, positions, mask,
+               cache=None, cache_offset=None, cross_kv=None,
+               layer=None):
+    """cross_kv: precomputed {"k","v"} (B,S_enc,K,hd) or None (compute).
+    Cross-attention projections share the attn_qkv/attn_out roles."""
+    nl = cfg.n_layers
     x = apply_norm(h, bp["ln1"], cfg.norm)
-    y, ncache = attn_apply(bp["self_attn"], x, cfg, recipe=recipe,
+    y, ncache = attn_apply(bp["self_attn"], x, cfg, policy=policy,
                            rules=rules, positions=positions, mask=mask,
-                           cache=cache, cache_offset=cache_offset)
+                           cache=cache, cache_offset=cache_offset,
+                           layer=layer, n_layers=nl)
     h = h + y
     x = apply_norm(h, bp["ln2"], cfg.norm)
     if cross_kv is not None:
         from repro.models.attention import _gqa_attend
         b, sq = x.shape[0], x.shape[1]
         hd = cfg.head_dim
-        q = qlin(x, bp["cross_attn"]["wq"], bp["cross_attn"].get("bq"),
-                 recipe).reshape(b, sq, cfg.n_heads, hd)
+        q = policy.linear(LinearCtx("attn_qkv", layer, nl), x,
+                          bp["cross_attn"]["wq"], bp["cross_attn"].get("bq")
+                          ).reshape(b, sq, cfg.n_heads, hd)
         ctx = _gqa_attend(q, cross_kv["k"], cross_kv["v"], None, rules)
-        y = qlin(ctx, bp["cross_attn"]["wo"], bp["cross_attn"].get("bo"),
-                 recipe)
+        y = policy.linear(LinearCtx("attn_out", layer, nl), ctx,
+                          bp["cross_attn"]["wo"], bp["cross_attn"].get("bo"))
     else:
-        y, _ = attn_apply(bp["cross_attn"], x, cfg, recipe=recipe,
+        y, _ = attn_apply(bp["cross_attn"], x, cfg, policy=policy,
                           rules=rules, positions=positions, mask=None,
-                          kv_source=enc_out)
+                          kv_source=enc_out, layer=layer, n_layers=nl)
     h = h + y
     x = apply_norm(h, bp["ln3"], cfg.norm)
-    h = h + mlp_apply(bp["mlp"], x, cfg, recipe=recipe, rules=rules)
+    h = h + mlp_apply(bp["mlp"], x, cfg, policy=policy, rules=rules,
+                      layer=layer, n_layers=nl)
     return constrain(h, rules, "batch", "seq", None), ncache
 
 
-def encdec_loss(params, batch, cfg, *, recipe=None, rules=None, rng=None
+def encdec_loss(params, batch, cfg, *, policy=None, rules=None, rng=None
                 ) -> Tuple[jnp.ndarray, Dict]:
     """batch: {"frames": (B,S_enc,d), "tokens": (B,S_dec+1)}."""
+    policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
-    enc_out = encode(params, batch["frames"], cfg, recipe=recipe, rules=rules)
+    enc_out = encode(params, batch["frames"], cfg, policy=policy, rules=rules)
     tokens = batch["tokens"]
     inp, labels = tokens[:, :-1], tokens[:, 1:]
     b, s = inp.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-    h = embed_tokens(params, inp, cfg, positions=positions, dtype=dtype)
+    h = embed_tokens(params, inp, cfg, positions=positions, dtype=dtype,
+                     policy=policy)
     mask = {"kind": "causal"}
 
-    def body(hh, bp):
-        hh, _ = _dec_block(bp, hh, enc_out, cfg, recipe=recipe, rules=rules,
-                           positions=positions, mask=mask)
+    def body(hh, xs):
+        bp, li = xs
+        hh, _ = _dec_block(bp, hh, enc_out, cfg, policy=policy, rules=rules,
+                           positions=positions, mask=mask, layer=li)
         return hh, None
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
-    h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+    h, _ = jax.lax.scan(body, h, (params["dec_blocks"],
+                                  jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     h = apply_norm(h, params["final_norm"], cfg.norm)
-    ce = chunked_ce(params, h, labels, batch.get("loss_mask"), cfg, rules)
+    ce = chunked_ce(params, h, labels, batch.get("loss_mask"), cfg, rules,
+                    policy)
     return ce, {"ce": ce, "loss": ce}
 
 
-def encdec_prefill(params, batch, cfg, *, recipe=None, rules=None,
+def encdec_prefill(params, batch, cfg, *, policy=None, rules=None,
                    max_seq: Optional[int] = None):
     """Encode frames, precompute cross KV per layer, run the decoder prompt.
     Returns (last_logits, cache) with cache = {"self": stacked kv,
     "cross": stacked kv}."""
+    policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
-    enc_out = encode(params, batch["frames"], cfg, recipe=recipe, rules=rules)
+    enc_out = encode(params, batch["frames"], cfg, policy=policy, rules=rules)
     b, s_enc, _ = enc_out.shape
     kh, hd = cfg.n_kv_heads, cfg.head_dim
+    nl = cfg.n_layers
 
-    def cross_kv_one(bp):
-        k = qlin(enc_out, bp["cross_attn"]["wk"], bp["cross_attn"].get("bk"),
-                 recipe).reshape(b, s_enc, kh, hd)
-        v = qlin(enc_out, bp["cross_attn"]["wv"], bp["cross_attn"].get("bv"),
-                 recipe).reshape(b, s_enc, kh, hd)
+    def cross_kv_one(xs):
+        bp, li = xs
+        ctx = LinearCtx("attn_qkv", li, nl)
+        k = policy.linear(ctx, enc_out, bp["cross_attn"]["wk"],
+                          bp["cross_attn"].get("bk")).reshape(b, s_enc, kh, hd)
+        v = policy.linear(ctx, enc_out, bp["cross_attn"]["wv"],
+                          bp["cross_attn"].get("bv")).reshape(b, s_enc, kh, hd)
         return {"k": k, "v": v}
 
-    cross = jax.lax.map(cross_kv_one, params["dec_blocks"])
+    layer_ids = jnp.arange(nl, dtype=jnp.int32)
+    cross = jax.lax.map(cross_kv_one, (params["dec_blocks"], layer_ids))
 
     tokens = batch["tokens"]
     s = tokens.shape[1]
     max_seq = max_seq or s
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-    h = embed_tokens(params, tokens, cfg, positions=positions, dtype=dtype)
+    h = embed_tokens(params, tokens, cfg, positions=positions, dtype=dtype,
+                     policy=policy)
     mask = {"kind": "causal"}
     self_cache0 = init_cache(cfg, b, max_seq, dtype)
 
     def body(hh, xs):
-        bp, ckv = xs
+        bp, ckv, li = xs
         cache = {"k": jnp.zeros_like(self_cache0["k"]),
                  "v": jnp.zeros_like(self_cache0["v"])}
-        hh, ncache = _dec_block(bp, hh, None, cfg, recipe=recipe, rules=rules,
+        hh, ncache = _dec_block(bp, hh, None, cfg, policy=policy, rules=rules,
                                 positions=positions, mask=mask, cache=cache,
-                                cache_offset=0, cross_kv=ckv)
+                                cache_offset=0, cross_kv=ckv, layer=li)
         return hh, ncache
 
-    h, self_caches = jax.lax.scan(body, h, (params["dec_blocks"], cross))
+    h, self_caches = jax.lax.scan(body, h, (params["dec_blocks"], cross,
+                                            layer_ids))
     h = apply_norm(h, params["final_norm"], cfg.norm)
-    logits = logits_chunk(params, h[:, -1:, :], cfg)[:, 0, :]
+    logits = logits_chunk(params, h[:, -1:, :], cfg, policy)[:, 0, :]
     return logits, {"self": self_caches, "cross": cross}
 
 
 def encdec_decode(params, cache, token: jnp.ndarray, pos: jnp.ndarray, cfg, *,
-                  recipe=None, rules=None):
+                  policy=None, rules=None):
+    policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
     b = token.shape[0]
     positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
-    h = embed_tokens(params, token, cfg, positions=positions, dtype=dtype)
+    h = embed_tokens(params, token, cfg, positions=positions, dtype=dtype,
+                     policy=policy)
     max_seq = cache["self"]["k"].shape[2]
     mask = (jnp.arange(max_seq) <= pos)[None, :]
 
     def body(hh, xs):
-        bp, sc, ckv = xs
-        hh, ncache = _dec_block(bp, hh, None, cfg, recipe=recipe, rules=rules,
+        bp, sc, ckv, li = xs
+        hh, ncache = _dec_block(bp, hh, None, cfg, policy=policy, rules=rules,
                                 positions=positions, mask=mask, cache=sc,
-                                cache_offset=pos, cross_kv=ckv)
+                                cache_offset=pos, cross_kv=ckv, layer=li)
         return hh, ncache
 
     h, self_caches = jax.lax.scan(
-        body, h, (params["dec_blocks"], cache["self"], cache["cross"]))
+        body, h, (params["dec_blocks"], cache["self"], cache["cross"],
+                  jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     h = apply_norm(h, params["final_norm"], cfg.norm)
-    logits = logits_chunk(params, h, cfg)[:, 0, :]
+    logits = logits_chunk(params, h, cfg, policy)[:, 0, :]
     return logits, {"self": self_caches, "cross": cache["cross"]}

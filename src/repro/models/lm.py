@@ -11,8 +11,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.qconfig import QuantRecipe
-from repro.models.attention import attn_apply, attn_spec, init_cache, qlin
+from repro.core.qpolicy import LinearCtx, as_policy
+from repro.models.attention import attn_apply, attn_spec, init_cache
 from repro.models.blocks import block_apply, block_spec
 from repro.models.common import (ParamSpec, apply_norm, cast_params,
                                  causal_mask, constrain, norm_spec,
@@ -70,9 +70,15 @@ def lm_spec(cfg: ArchConfig) -> Dict:
 # ---------------------------------------------------------------------------
 
 def embed_tokens(params, tokens: jnp.ndarray, cfg, positions=None,
-                 dtype=None) -> jnp.ndarray:
+                 dtype=None, policy=None) -> jnp.ndarray:
+    """Token (+learned position) embedding.  The ``embed`` role governs a
+    weight-only qdq of the table (fp under ``from_recipe`` policies unless
+    ``include_embeddings`` -- the paper scopes to block linears)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
-    e = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    table = params["embed"]
+    if policy is not None:
+        table = policy.quantize_weight("embed", table)
+    e = jnp.take(table, tokens, axis=0).astype(dtype)
     if cfg.embed_scale:
         e = e * jnp.asarray(math.sqrt(cfg.d_model), dtype)
     if cfg.pos == "learned":
@@ -82,14 +88,21 @@ def embed_tokens(params, tokens: jnp.ndarray, cfg, positions=None,
     return e
 
 
-def logits_chunk(params, h: jnp.ndarray, cfg) -> jnp.ndarray:
-    """(B, C, d) -> (B, C, V_padded) in fp32, padded tail masked to -inf."""
+def logits_chunk(params, h: jnp.ndarray, cfg, policy=None) -> jnp.ndarray:
+    """(B, C, d) -> (B, C, V_padded) in fp32, padded tail masked to -inf.
+    The ``lm_head`` role governs a weight-only qdq of the head matrix (the
+    tied embedding table when ``tie_embeddings``)."""
     if cfg.tie_embeddings:
-        logits = jnp.einsum("bcd,vd->bcv", h, params["embed"].astype(h.dtype),
+        table = params["embed"]
+        if policy is not None:
+            table = policy.quantize_weight("lm_head", table)
+        logits = jnp.einsum("bcd,vd->bcv", h, table.astype(h.dtype),
                             preferred_element_type=jnp.float32)
     else:
-        logits = jnp.einsum("bcd,dv->bcv", h,
-                            params["lm_head"].astype(h.dtype),
+        head = params["lm_head"]
+        if policy is not None:
+            head = policy.quantize_weight("lm_head", head)
+        logits = jnp.einsum("bcd,dv->bcv", h, head.astype(h.dtype),
                             preferred_element_type=jnp.float32)
     if cfg.vocab_padded > cfg.vocab_size:
         neg = jnp.asarray(-1e30, logits.dtype)
@@ -108,7 +121,8 @@ def _chunk_len(s: int, target: int) -> int:
 
 
 def chunked_ce(params, h: jnp.ndarray, labels: jnp.ndarray,
-               mask: Optional[jnp.ndarray], cfg, rules) -> jnp.ndarray:
+               mask: Optional[jnp.ndarray], cfg, rules,
+               policy=None) -> jnp.ndarray:
     """Cross entropy computed in sequence chunks so (B,S,V) never exists.
     Vocab stays sharded ('vocab' -> tensor axis) inside each chunk."""
     b, s, _ = h.shape
@@ -122,7 +136,7 @@ def chunked_ce(params, h: jnp.ndarray, labels: jnp.ndarray,
         hc = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, 1)
         lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
         mc = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, 1)
-        logits = logits_chunk(params, hc, cfg)
+        logits = logits_chunk(params, hc, cfg, policy)
         logits = constrain(logits, rules, "batch", None, "vocab")
         logz = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
@@ -142,18 +156,20 @@ def chunked_ce(params, h: jnp.ndarray, labels: jnp.ndarray,
 # Layer stack execution
 # ---------------------------------------------------------------------------
 
-def _scan_blocks(params, h, cfg, *, recipe, rules, positions, mask,
+def _scan_blocks(params, h, cfg, *, policy, rules, positions, mask,
                  caches=None, cache_offset=None, ssm_states=None,
                  decode=False):
-    """Homogeneous layer scan.  caches/ssm_states are stacked (L, ...)."""
+    """Homogeneous layer scan.  caches/ssm_states are stacked (L, ...).
+    The scanned xs carry the depth index so depth-indexed policy rules can
+    select per-layer quantization inside the (layer-invariant) trace."""
 
     def body(carry, xs):
         hh, aux, z = carry
-        bp, cache, sst = xs
+        bp, cache, sst, li = xs
         hh, ncache, nsst, a, zz = block_apply(
-            bp, hh, cfg, recipe=recipe, rules=rules, positions=positions,
+            bp, hh, cfg, policy=policy, rules=rules, positions=positions,
             mask=mask, cache=cache, cache_offset=cache_offset,
-            ssm_state=sst, decode=decode)
+            ssm_state=sst, decode=decode, layer=li)
         return (hh, aux + a, z + zz), (ncache, nsst)
 
     if cfg.remat and not decode:
@@ -163,26 +179,30 @@ def _scan_blocks(params, h, cfg, *, recipe, rules, positions, mask,
 
     zero = jnp.zeros((), jnp.float32)
     (h, aux, z), (ncaches, nssts) = jax.lax.scan(
-        body, (h, zero, zero), (params["blocks"], caches, ssm_states))
+        body, (h, zero, zero),
+        (params["blocks"], caches, ssm_states,
+         jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     return h, ncaches, nssts, aux, z
 
 
-def _shared_attn(params, h, emb0, cfg, *, recipe, rules, positions, mask,
+def _shared_attn(params, h, emb0, cfg, *, policy, rules, positions, mask,
                  cache=None, cache_offset=None):
-    """zamba2 shared block: operates on concat(h, emb0)."""
+    """zamba2 shared block: operates on concat(h, emb0).  The block's weights
+    are shared across depth, so its linears resolve depth-less (layer=None);
+    the down-projection is the ``shared_proj`` role."""
     sp = params["shared"]
     x2 = jnp.concatenate([h, emb0], axis=-1)
     x = apply_norm(x2, sp["ln1"], cfg.norm)
-    y, ncache = attn_apply(sp["attn"], x, cfg, recipe=recipe, rules=rules,
+    y, ncache = attn_apply(sp["attn"], x, cfg, policy=policy, rules=rules,
                            positions=positions, mask=mask, cache=cache,
                            cache_offset=cache_offset)
     x2 = x2 + y
     x = apply_norm(x2, sp["ln2"], cfg.norm)
-    x2 = x2 + mlp_apply(sp["mlp"], x, cfg, recipe=recipe, rules=rules)
-    return h + qlin(x2, sp["proj"], None, recipe), ncache
+    x2 = x2 + mlp_apply(sp["mlp"], x, cfg, policy=policy, rules=rules)
+    return h + policy.linear(LinearCtx("shared_proj"), x2, sp["proj"]), ncache
 
 
-def _hybrid_blocks(params, h, cfg, *, recipe, rules, positions, mask,
+def _hybrid_blocks(params, h, cfg, *, policy, rules, positions, mask,
                    emb0, caches=None, cache_offset=None, ssm_states=None,
                    decode=False):
     """zamba2: groups of `hybrid_attn_every` mamba layers, each followed by
@@ -193,21 +213,23 @@ def _hybrid_blocks(params, h, cfg, *, recipe, rules, positions, mask,
         lambda x: x.reshape(groups, per, *x.shape[1:]), params["blocks"])
     g_ssm = (None if ssm_states is None else jax.tree_util.tree_map(
         lambda x: x.reshape(groups, per, *x.shape[1:]), ssm_states))
+    layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32).reshape(groups, per)
 
     def group_body(carry, xs):
         hh, aux, z = carry
-        gparams, gssm, gcache = xs
+        gparams, gssm, gcache, g_layers = xs
 
         def inner(c, xs2):
             hhh, a2, z2 = c
-            bp, sst = xs2
+            bp, sst, li = xs2
             hhh, _, nsst, a, zz = block_apply(
-                bp, hhh, cfg, recipe=recipe, rules=rules, positions=positions,
-                mask=None, ssm_state=sst, decode=decode)
+                bp, hhh, cfg, policy=policy, rules=rules, positions=positions,
+                mask=None, ssm_state=sst, decode=decode, layer=li)
             return (hhh, a2 + a, z2 + zz), nsst
 
-        (hh, aux, z), nssm = jax.lax.scan(inner, (hh, aux, z), (gparams, gssm))
-        hh, ncache = _shared_attn(params, hh, emb0, cfg, recipe=recipe,
+        (hh, aux, z), nssm = jax.lax.scan(inner, (hh, aux, z),
+                                          (gparams, gssm, g_layers))
+        hh, ncache = _shared_attn(params, hh, emb0, cfg, policy=policy,
                                   rules=rules, positions=positions, mask=mask,
                                   cache=gcache, cache_offset=cache_offset)
         return (hh, aux, z), (nssm, ncache)
@@ -219,7 +241,7 @@ def _hybrid_blocks(params, h, cfg, *, recipe, rules, positions, mask,
 
     zero = jnp.zeros((), jnp.float32)
     (h, aux, z), (nssm, ncaches) = jax.lax.scan(
-        group_body, (h, zero, zero), (grouped, g_ssm, caches))
+        group_body, (h, zero, zero), (grouped, g_ssm, caches, layer_ids))
     if nssm is not None:
         nssm = jax.tree_util.tree_map(
             lambda x: x.reshape(cfg.n_layers, *x.shape[2:]), nssm)
@@ -238,10 +260,12 @@ def run_stack(params, h, cfg, **kw):
 # ---------------------------------------------------------------------------
 
 def lm_loss(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
-            recipe: Optional[QuantRecipe], rules=None,
+            policy=None, rules=None,
             rng: Optional[jax.Array] = None) -> Tuple[jnp.ndarray, Dict]:
     """batch: {"tokens": (B, S+1) int32[, "patches": (B,P,d)]}.
-    Returns (loss, metrics)."""
+    Returns (loss, metrics).  ``policy`` is anything ``as_policy`` accepts
+    (None / QuantRecipe / QuantPolicy / policy string)."""
+    policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
     tokens = batch["tokens"]
@@ -251,27 +275,29 @@ def lm_loss(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
 
     if cfg.family == "vlm":
         patches = batch["patches"].astype(dtype)
-        patches = qlin(patches, params["patch_proj"], None, None)
+        patches = policy.linear(LinearCtx("patch_proj"), patches,
+                                params["patch_proj"])
         p = patches.shape[1]
         positions = jnp.broadcast_to(jnp.arange(p + s_text), (b, p + s_text))
         e = embed_tokens(params, inp, cfg, positions=positions_text + p,
-                         dtype=dtype)
+                         dtype=dtype, policy=policy)
         h = jnp.concatenate([patches, e], axis=1)
         mask = {"kind": "prefix", "prefix": p}
     else:
         positions = positions_text
-        h = embed_tokens(params, inp, cfg, positions=positions, dtype=dtype)
+        h = embed_tokens(params, inp, cfg, positions=positions, dtype=dtype,
+                         policy=policy)
         mask = {"kind": "causal"} if cfg.family != "ssm" else None
 
     h = constrain(h, rules, "batch", "seq", None)
-    h, _, _, aux, z = run_stack(params, h, cfg, recipe=recipe, rules=rules,
+    h, _, _, aux, z = run_stack(params, h, cfg, policy=policy, rules=rules,
                                 positions=positions, mask=mask, emb0=h)
     h = apply_norm(h, params["final_norm"], cfg.norm)
 
     if cfg.family == "vlm":
         h = h[:, h.shape[1] - s_text:, :]
     loss_mask = batch.get("loss_mask")
-    ce = chunked_ce(params, h, labels, loss_mask, cfg, rules)
+    ce = chunked_ce(params, h, labels, loss_mask, cfg, rules, policy)
     total = ce
     metrics = {"ce": ce}
     if cfg.n_experts:
@@ -312,28 +338,32 @@ def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype):
 
 
 def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
-               recipe=None, rules=None, max_seq: Optional[int] = None):
+               policy=None, rules=None, max_seq: Optional[int] = None):
     """Process the full prompt; returns (last_logits (B,V), caches, ssm_states).
     Cache buffers sized to max_seq (defaults to prompt length)."""
+    policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
     tokens = batch["tokens"]
     b = tokens.shape[0]
     if cfg.family == "vlm" and "patches" in batch:
         patches = batch["patches"].astype(dtype)
-        patches = qlin(patches, params["patch_proj"], None, None)
+        patches = policy.linear(LinearCtx("patch_proj"), patches,
+                                params["patch_proj"])
         p = patches.shape[1]
         s = p + tokens.shape[1]
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
         e = embed_tokens(params, tokens, cfg,
-                         positions=positions[:, p:], dtype=dtype)
+                         positions=positions[:, p:], dtype=dtype,
+                         policy=policy)
         h = jnp.concatenate([patches, e], axis=1)
         max_seq = max_seq or s
         mask_full = {"kind": "prefix", "prefix": p}
     else:
         s = tokens.shape[1]
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-        h = embed_tokens(params, tokens, cfg, positions=positions, dtype=dtype)
+        h = embed_tokens(params, tokens, cfg, positions=positions, dtype=dtype,
+                         policy=policy)
         max_seq = max_seq or s
         mask_full = {"kind": "causal"}
     h = constrain(h, rules, "batch", "seq", None)
@@ -343,23 +373,25 @@ def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
     if cfg.family != "ssm":
         mask = mask_full
     h, caches, ssm_states, _, _ = run_stack(
-        params, h, cfg, recipe=recipe, rules=rules, positions=positions,
+        params, h, cfg, policy=policy, rules=rules, positions=positions,
         mask=mask, caches=caches, cache_offset=0, ssm_states=ssm_states,
         emb0=h)
     h = apply_norm(h, params["final_norm"], cfg.norm)
-    logits = logits_chunk(params, h[:, -1:, :], cfg)[:, 0, :]
+    logits = logits_chunk(params, h[:, -1:, :], cfg, policy)[:, 0, :]
     return logits, caches, ssm_states
 
 
 def lm_decode(params, caches, ssm_states, token: jnp.ndarray,
-              pos: jnp.ndarray, cfg: ArchConfig, *, recipe=None, rules=None):
+              pos: jnp.ndarray, cfg: ArchConfig, *, policy=None, rules=None):
     """One-token decode.  token: (B,1) int32; pos: scalar int32 (number of
     tokens already in the cache).  Returns (logits (B,V), caches, ssm_states)."""
+    policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
     b = token.shape[0]
     positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
-    h = embed_tokens(params, token, cfg, positions=positions, dtype=dtype)
+    h = embed_tokens(params, token, cfg, positions=positions, dtype=dtype,
+                     policy=policy)
 
     mask = None
     if cfg.family != "ssm":
@@ -367,9 +399,9 @@ def lm_decode(params, caches, ssm_states, token: jnp.ndarray,
                    [2])                                     # (L,B,S,K,hd)
         mask = (jnp.arange(max_seq) <= pos)[None, :]        # (1, max_seq)
     h, caches, ssm_states, _, _ = run_stack(
-        params, h, cfg, recipe=recipe, rules=rules, positions=positions,
+        params, h, cfg, policy=policy, rules=rules, positions=positions,
         mask=mask, caches=caches, cache_offset=pos, ssm_states=ssm_states,
         decode=True, emb0=h)
     h = apply_norm(h, params["final_norm"], cfg.norm)
-    logits = logits_chunk(params, h, cfg)[:, 0, :]
+    logits = logits_chunk(params, h, cfg, policy)[:, 0, :]
     return logits, caches, ssm_states

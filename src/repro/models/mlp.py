@@ -1,6 +1,8 @@
 """Dense feed-forward variants: gated (SwiGLU/GeGLU) and classic 2-layer.
 
-All projections go through the quantized linear (paper scope).
+All projections go through the policy-dispatched quantized linear (roles
+``mlp_up`` for the expanding projections, ``mlp_down`` for the contraction
+back to the residual -- the sublayer Bondarenko et al. find range-sensitive).
 """
 from __future__ import annotations
 
@@ -8,8 +10,7 @@ from typing import Dict, Optional
 
 import jax.numpy as jnp
 
-from repro.core.qconfig import QuantRecipe
-from repro.models.attention import qlin
+from repro.core.qpolicy import LinearCtx, as_policy
 from repro.models.common import ACT_FNS, ParamSpec, constrain
 
 
@@ -46,14 +47,19 @@ def mlp_spec(cfg, d_in: Optional[int] = None, d_ff: Optional[int] = None
 
 
 def mlp_apply(params, x: jnp.ndarray, cfg, *,
-              recipe: Optional[QuantRecipe], rules) -> jnp.ndarray:
+              policy=None, rules=None, layer=None,
+              n_layers: int = 0) -> jnp.ndarray:
+    policy = as_policy(policy)
+    ctx_up = LinearCtx("mlp_up", layer, n_layers)
+    ctx_down = LinearCtx("mlp_down", layer, n_layers)
     act = ACT_FNS[cfg.act]
     if cfg.mlp_kind == "gated":
-        g = qlin(x, params["w_gate"], params.get("b_gate"), recipe)
-        u = qlin(x, params["w_up"], params.get("b_up"), recipe)
+        g = policy.linear(ctx_up, x, params["w_gate"], params.get("b_gate"))
+        u = policy.linear(ctx_up, x, params["w_up"], params.get("b_up"))
         h = act(g) * u
         h = constrain(h, rules, "batch", None, "mlp")
-        return qlin(h, params["w_down"], params.get("b_down"), recipe)
-    h = act(qlin(x, params["w_fc1"], params.get("b_fc1"), recipe))
+        return policy.linear(ctx_down, h, params["w_down"],
+                             params.get("b_down"))
+    h = act(policy.linear(ctx_up, x, params["w_fc1"], params.get("b_fc1")))
     h = constrain(h, rules, "batch", None, "mlp")
-    return qlin(h, params["w_fc2"], params.get("b_fc2"), recipe)
+    return policy.linear(ctx_down, h, params["w_fc2"], params.get("b_fc2"))

@@ -1,6 +1,11 @@
 """Unified model facade: every architecture exposes the same four entry
 points (init / train_loss / prefill / decode) plus ShapeDtypeStruct input
 specs for dry-run lowering (no allocation).
+
+Quantization is configured with either ``recipe=`` (a legacy
+:class:`QuantRecipe`, wrapped via ``QuantPolicy.from_recipe``) or
+``policy=`` (a :class:`~repro.core.qpolicy.QuantPolicy` / policy string);
+``policy`` wins when both are given.
 """
 from __future__ import annotations
 
@@ -10,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.qpolicy import as_policy
 from repro.models import encdec as ed
 from repro.models import lm
 from repro.models.common import axes_from_spec, init_from_spec
@@ -20,30 +26,37 @@ class Model(NamedTuple):
     spec: Any
     init_params: Callable            # (key, dtype=f32) -> params
     axes: Any                        # logical-axes tree matching params
-    train_loss: Callable             # (params, batch, *, recipe, rules, rng)
-    prefill: Callable                # (params, batch, *, recipe, rules) -> (logits, state)
-    decode: Callable                 # (params, state, token, pos, *, recipe, rules)
+    train_loss: Callable             # (params, batch, *, recipe/policy, rules, rng)
+    prefill: Callable                # (params, batch, *, recipe/policy, rules) -> (logits, state)
+    decode: Callable                 # (params, state, token, pos, *, recipe/policy, rules)
     init_decode_state: Callable      # (batch, max_seq, dtype) -> state tree
+
+
+def _pick(policy, recipe):
+    return as_policy(policy if policy is not None else recipe)
 
 
 def build_model(cfg: ArchConfig) -> Model:
     if cfg.family == "encdec":
         spec = ed.encdec_spec(cfg)
 
-        def train_loss(params, batch, *, recipe=None, rules=None, rng=None):
-            return ed.encdec_loss(params, batch, cfg, recipe=recipe,
+        def train_loss(params, batch, *, recipe=None, policy=None,
+                       rules=None, rng=None):
+            return ed.encdec_loss(params, batch, cfg,
+                                  policy=_pick(policy, recipe),
                                   rules=rules, rng=rng)
 
-        def prefill(params, batch, *, recipe=None, rules=None,
+        def prefill(params, batch, *, recipe=None, policy=None, rules=None,
                     max_seq=None):
             logits, cache = ed.encdec_prefill(params, batch, cfg,
-                                              recipe=recipe, rules=rules,
-                                              max_seq=max_seq)
+                                              policy=_pick(policy, recipe),
+                                              rules=rules, max_seq=max_seq)
             return logits, cache
 
-        def decode(params, state, token, pos, *, recipe=None, rules=None):
+        def decode(params, state, token, pos, *, recipe=None, policy=None,
+                   rules=None):
             return ed.encdec_decode(params, state, token, pos, cfg,
-                                    recipe=recipe, rules=rules)
+                                    policy=_pick(policy, recipe), rules=rules)
 
         def init_decode_state(batch: int, max_seq: int, enc_len: int,
                               dtype=jnp.bfloat16):
@@ -54,20 +67,24 @@ def build_model(cfg: ArchConfig) -> Model:
     else:
         spec = lm.lm_spec(cfg)
 
-        def train_loss(params, batch, *, recipe=None, rules=None, rng=None):
-            return lm.lm_loss(params, batch, cfg, recipe=recipe, rules=rules,
+        def train_loss(params, batch, *, recipe=None, policy=None,
+                       rules=None, rng=None):
+            return lm.lm_loss(params, batch, cfg,
+                              policy=_pick(policy, recipe), rules=rules,
                               rng=rng)
 
-        def prefill(params, batch, *, recipe=None, rules=None, max_seq=None):
+        def prefill(params, batch, *, recipe=None, policy=None, rules=None,
+                    max_seq=None):
             logits, caches, ssm = lm.lm_prefill(params, batch, cfg,
-                                                recipe=recipe, rules=rules,
-                                                max_seq=max_seq)
+                                                policy=_pick(policy, recipe),
+                                                rules=rules, max_seq=max_seq)
             return logits, {"caches": caches, "ssm": ssm}
 
-        def decode(params, state, token, pos, *, recipe=None, rules=None):
+        def decode(params, state, token, pos, *, recipe=None, policy=None,
+                   rules=None):
             logits, caches, ssm = lm.lm_decode(
                 params, state.get("caches"), state.get("ssm"), token, pos,
-                cfg, recipe=recipe, rules=rules)
+                cfg, policy=_pick(policy, recipe), rules=rules)
             return logits, {"caches": caches, "ssm": ssm}
 
         def init_decode_state(batch: int, max_seq: int, enc_len: int = 0,

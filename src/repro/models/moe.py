@@ -21,14 +21,14 @@ Switch-style load-balance aux loss and router z-loss are returned.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.qconfig import QuantRecipe
-from repro.core.qlinear import quantized_linear
+from repro.core.qpolicy import LinearCtx, as_policy
+from repro.parallel.compat import axis_size, shard_map
 from repro.models.common import ACT_FNS, ParamSpec
 
 
@@ -43,11 +43,13 @@ def moe_spec(cfg) -> Dict[str, ParamSpec]:
     }
 
 
-def _route(x2: jnp.ndarray, w_router: jnp.ndarray, cfg
+def _route(x2: jnp.ndarray, w_router: jnp.ndarray, cfg, policy,
+           ctx_router: LinearCtx
            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Router in fp32.  Returns (gates (T,k), experts (T,k), aux, z_loss)."""
-    logits = jnp.matmul(x2.astype(jnp.float32),
-                        w_router.astype(jnp.float32))          # (T, E)
+    """Router in fp32 (role ``router``; fp under from_recipe policies --
+    quantizing the router is a beyond-paper ablation)."""
+    logits = policy.linear(ctx_router, x2.astype(jnp.float32),
+                           w_router.astype(jnp.float32))       # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     top_logits, top_e = jax.lax.top_k(logits, cfg.top_k)
     gates = jax.nn.softmax(top_logits, axis=-1)                # renormalized
@@ -76,34 +78,38 @@ def _dispatch_indices(top_e: jnp.ndarray, n_experts: int, capacity: int,
     return slot, keep, token_idx
 
 
-def _expert_ffn(buf: jnp.ndarray, params, cfg,
-                recipe: Optional[QuantRecipe]) -> jnp.ndarray:
-    """buf: (E_local, C, d) -> (E_local, C, d).  vmapped quantized linears so
+def _expert_ffn(buf: jnp.ndarray, params, cfg, policy, layer,
+                n_layers: int) -> jnp.ndarray:
+    """buf: (E_local, C, d) -> (E_local, C, d).  vmapped policy linears so
     per-channel/per-token scales stay per-expert."""
     act = ACT_FNS[cfg.act]
+    ctx_up = LinearCtx("mlp_up", layer, n_layers)
+    ctx_down = LinearCtx("mlp_down", layer, n_layers)
 
     def one(xb, wg, wu, wd):
-        g = quantized_linear(xb, wg, recipe)
-        u = quantized_linear(xb, wu, recipe)
-        return quantized_linear(act(g) * u, wd, recipe)
+        g = policy.linear(ctx_up, xb, wg)
+        u = policy.linear(ctx_up, xb, wu)
+        return policy.linear(ctx_down, act(g) * u, wd)
 
     return jax.vmap(one)(buf, params["w_gate"], params["w_up"], params["w_down"])
 
 
-def _local_moe(x2: jnp.ndarray, params, cfg, recipe,
-               capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+def _local_moe(x2: jnp.ndarray, params, cfg, policy, capacity: int,
+               layer, n_layers: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Capacity dispatch + expert FFN on one device's token set.  Used both
     standalone (no mesh) and as the per-shard body of the ff_sharded mode."""
     t, d = x2.shape
     e, k = cfg.n_experts, cfg.top_k
-    gates, top_e, aux, z_loss = _route(x2, params["w_router"], cfg)
+    gates, top_e, aux, z_loss = _route(x2, params["w_router"], cfg, policy,
+                                       LinearCtx("router", layer, n_layers))
     slot, keep, token_idx = _dispatch_indices(top_e, e, capacity, k)
 
     rows = jnp.take(x2, token_idx, axis=0)                       # (T*k, d)
     buf = jnp.zeros((e * capacity + 1, d), x2.dtype)
     buf = buf.at[slot].set(rows, mode="drop", unique_indices=True)
     h = _expert_ffn(buf[:e * capacity].reshape(e, capacity, d), params, cfg,
-                    recipe)
+                    policy, layer, n_layers)
     h = h.reshape(e * capacity, -1)
     out_rows = jnp.take(jnp.concatenate(
         [h, jnp.zeros((1, h.shape[-1]), h.dtype)], axis=0), slot, axis=0)
@@ -121,19 +127,20 @@ def _capacity(tokens: int, cfg) -> int:
 MAX_DISPATCH_TOKENS = 16384
 
 
-def _local_moe_chunked(x2, params, cfg, recipe):
+def _local_moe_chunked(x2, params, cfg, policy, layer, n_layers):
     """Token-chunked dispatch: bounds the (E*C, d) scatter buffers at train
     shapes (capacity is per-chunk -- standard grouped dispatch semantics)."""
     t, d = x2.shape
     if t <= MAX_DISPATCH_TOKENS:
-        return _local_moe(x2, params, cfg, recipe, _capacity(t, cfg))
+        return _local_moe(x2, params, cfg, policy, _capacity(t, cfg),
+                          layer, n_layers)
     chunk = MAX_DISPATCH_TOKENS
     while t % chunk:
         chunk //= 2
     cap = _capacity(chunk, cfg)
 
     def body(_, xc):
-        y, aux, z = _local_moe(xc, params, cfg, recipe, cap)
+        y, aux, z = _local_moe(xc, params, cfg, policy, cap, layer, n_layers)
         return None, (y, aux, z)
 
     body = jax.checkpoint(body, prevent_cse=False)
@@ -142,17 +149,18 @@ def _local_moe_chunked(x2, params, cfg, recipe):
     return ys.reshape(t, d), jnp.mean(auxs), jnp.mean(zs)
 
 
-def _alltoall_moe(x2, params, cfg, recipe, tp_axis: str):
+def _alltoall_moe(x2, params, cfg, policy, tp_axis: str, layer, n_layers):
     """Per-shard body (tokens already split over tp_axis; expert weights
     already sharded over tp_axis): route locally, all_to_all to expert
     owners, FFN, all_to_all back, combine."""
-    tp = jax.lax.axis_size(tp_axis)
+    tp = axis_size(tp_axis)
     t_loc, d = x2.shape
     e, k = cfg.n_experts, cfg.top_k
     e_loc = e // tp
     cap = _capacity(t_loc, cfg)
 
-    gates, top_e, aux, z_loss = _route(x2, params["w_router"], cfg)
+    gates, top_e, aux, z_loss = _route(x2, params["w_router"], cfg, policy,
+                                       LinearCtx("router", layer, n_layers))
     slot, keep, token_idx = _dispatch_indices(top_e, e, cap, k)
     rows = jnp.take(x2, token_idx, axis=0)
     send = jnp.zeros((e * cap + 1, d), x2.dtype)
@@ -164,7 +172,8 @@ def _alltoall_moe(x2, params, cfg, recipe, tp_axis: str):
     ffn_in = (recv.reshape(tp, e_loc, cap, d)
               .transpose(1, 0, 2, 3).reshape(e_loc, tp * cap, d))
     # expert weights arrive pre-sharded: (e_loc, d, ff) per rank
-    h = _expert_ffn(ffn_in, params, cfg, recipe)                 # (e_loc, tp*cap, d)
+    h = _expert_ffn(ffn_in, params, cfg, policy, layer,
+                    n_layers)                                    # (e_loc, tp*cap, d)
     back = (h.reshape(e_loc, tp, cap, d).transpose(1, 0, 2, 3)
             .reshape(tp, e_loc * cap, d))
     got = jax.lax.all_to_all(back, tp_axis, split_axis=0, concat_axis=0,
@@ -177,12 +186,14 @@ def _alltoall_moe(x2, params, cfg, recipe, tp_axis: str):
 
 
 def moe_apply(params, x: jnp.ndarray, cfg, *,
-              recipe: Optional[QuantRecipe], rules
+              policy=None, rules=None, layer=None, n_layers: int = 0
               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """x: (B, S, d) -> (y, aux_loss, z_loss)."""
+    policy = as_policy(policy)
     b, s, d = x.shape
     if rules is None or rules.tp_size == 1:
-        y, aux, z = _local_moe_chunked(x.reshape(-1, d), params, cfg, recipe)
+        y, aux, z = _local_moe_chunked(x.reshape(-1, d), params, cfg, policy,
+                                       layer, n_layers)
         return y.reshape(b, s, d), aux, z
 
     mesh = rules.mesh
@@ -209,14 +220,14 @@ def moe_apply(params, x: jnp.ndarray, cfg, *,
 
         def body(xb, p):
             xl = xb.reshape(-1, d)
-            y, aux, z = _local_moe_chunked(xl, p, cfg, recipe)
+            y, aux, z = _local_moe_chunked(xl, p, cfg, policy, layer, n_layers)
             return y.reshape(xb.shape), aux, z
 
         in_specs = (P(dp_axes, None, None), {
             "w_router": P(None, None), "w_gate": P(None, None, None),
             "w_up": P(None, None, None), "w_down": P(None, None, None)})
         out_specs = (P(dp_axes, None, None), P(), P())
-        y, aux, z = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+        y, aux, z = shard_map(body, mesh=mesh, in_specs=in_specs,
                                   out_specs=out_specs, check_vma=False)(
             x, {k: params[k] for k in
                 ("w_router", "w_gate", "w_up", "w_down")})
@@ -227,7 +238,8 @@ def moe_apply(params, x: jnp.ndarray, cfg, *,
         # --- all-to-all expert parallelism (training shapes) --------------
         def body(xb, p):
             xl = xb.reshape(-1, d)
-            y, aux, z = _alltoall_moe(xl, p, cfg, recipe, tp_axis)
+            y, aux, z = _alltoall_moe(xl, p, cfg, policy, tp_axis, layer,
+                                      n_layers)
             return (y.reshape(xb.shape),
                     jax.lax.pmean(aux, tp_axis), jax.lax.pmean(z, tp_axis))
 
@@ -238,7 +250,7 @@ def moe_apply(params, x: jnp.ndarray, cfg, *,
             "w_down": P(tp_axis, None, None),
         })
         out_specs = (P(dp_axes, tp_axis, None), P(), P())
-        y, aux, z = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+        y, aux, z = shard_map(body, mesh=mesh, in_specs=in_specs,
                                   out_specs=out_specs, check_vma=False)(
             x, {k: params[k] for k in
                 ("w_router", "w_gate", "w_up", "w_down")})
@@ -251,7 +263,8 @@ def moe_apply(params, x: jnp.ndarray, cfg, *,
 
         def body(xb, p):
             xl = xb.reshape(-1, d)
-            gates, top_e, aux, z = _route(xl, p["w_router"], cfg)
+            gates, top_e, aux, z = _route(xl, p["w_router"], cfg, policy,
+                                          LinearCtx("router", layer, n_layers))
             my = jax.lax.axis_index(tp_axis)
             # keep only pairs routed to my expert block (weights arrive
             # pre-sharded: p["w_gate"] is (e_loc, d, ff) on this rank)
@@ -266,7 +279,8 @@ def moe_apply(params, x: jnp.ndarray, cfg, *,
             buf = jnp.zeros(((e_loc + 1) * cap + 1, d), xl.dtype)
             buf = buf.at[slot].set(rows, mode="drop", unique_indices=True)
             h = _expert_ffn(buf[:e_loc * cap].reshape(e_loc, cap, d),
-                            p, cfg, recipe).reshape(e_loc * cap, d)
+                            p, cfg, policy, layer,
+                            n_layers).reshape(e_loc * cap, d)
             h = jnp.concatenate(
                 [h, jnp.zeros((1 + cap, d), h.dtype)], axis=0)
             out_rows = jnp.take(h, jnp.minimum(slot, e_loc * cap + cap), axis=0)
@@ -281,7 +295,7 @@ def moe_apply(params, x: jnp.ndarray, cfg, *,
             "w_router": P(None, None), "w_gate": P(tp_axis, None, None),
             "w_up": P(tp_axis, None, None), "w_down": P(tp_axis, None, None)})
         out_specs = (P(dp_axes, None, None), P(), P())
-        y, aux, z = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+        y, aux, z = shard_map(body, mesh=mesh, in_specs=in_specs,
                                   out_specs=out_specs, check_vma=False)(
             x, {k: params[k] for k in
                 ("w_router", "w_gate", "w_up", "w_down")})
@@ -291,7 +305,7 @@ def moe_apply(params, x: jnp.ndarray, cfg, *,
 
     def body(xb, p):
         xl = xb.reshape(-1, d)
-        y, aux, z = _local_moe_chunked(xl, p, cfg, recipe)
+        y, aux, z = _local_moe_chunked(xl, p, cfg, policy, layer, n_layers)
         y = jax.lax.psum(y, tp_axis)
         return (y.reshape(xb.shape), jax.lax.pmean(aux, tp_axis),
                 jax.lax.pmean(z, tp_axis))
@@ -302,7 +316,7 @@ def moe_apply(params, x: jnp.ndarray, cfg, *,
         "w_up": P(None, None, tp_axis),
         "w_down": P(None, tp_axis, None)})
     out_specs = (P(dp_axes, None, None), P(), P())
-    y, aux, z = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+    y, aux, z = shard_map(body, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs, check_vma=False)(
         x, {k: params[k] for k in ("w_router", "w_gate", "w_up", "w_down")})
     return y, jnp.mean(aux), jnp.mean(z)

@@ -15,8 +15,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.qconfig import QuantRecipe
-from repro.models.attention import qlin
+from repro.core.qpolicy import LinearCtx, as_policy
 from repro.models.common import ParamSpec, constrain, rmsnorm
 
 CHUNK = 128
@@ -68,12 +67,12 @@ def ssm_spec(cfg) -> Dict[str, ParamSpec]:
     }
 
 
-def _in_projections(params, u, recipe):
+def _in_projections(params, u, policy, ctx_in: LinearCtx):
     """Returns (z, xbc, dt_raw) with xbc = concat(x, B, C) for the conv."""
-    z = qlin(u, params["in_z"], None, recipe)
-    x = qlin(u, params["in_x"], None, recipe)
-    bc = qlin(u, params["in_bc"], None, recipe)
-    dt_raw = qlin(u, params["in_dt"], None, recipe)
+    z = policy.linear(ctx_in, u, params["in_z"])
+    x = policy.linear(ctx_in, u, params["in_x"])
+    bc = policy.linear(ctx_in, u, params["in_bc"])
+    dt_raw = policy.linear(ctx_in, u, params["in_dt"])
     return z, jnp.concatenate([x, bc], axis=-1), dt_raw
 
 
@@ -187,16 +186,18 @@ def ssd_reference(x, dt, a, bmat, cmat, init_state=None):
 
 
 def ssm_apply(params, u: jnp.ndarray, cfg, *,
-              recipe: Optional[QuantRecipe], rules,
+              policy=None, rules=None,
               state: Optional[Dict[str, jnp.ndarray]] = None,
-              return_state: bool = False):
+              return_state: bool = False, layer=None, n_layers: int = 0):
     """Full-sequence Mamba2 layer.  u: (B,S,d).
 
     state (decode/prefill carry): {"ssm": (B,H,N,P) fp32, "conv": (B,W-1,C)}.
     Returns (out, new_state_or_None).
     """
+    policy = as_policy(policy)
     dm = ssm_dims(cfg)
-    z, xbc, dt_raw = _in_projections(params, u, recipe)
+    z, xbc, dt_raw = _in_projections(
+        params, u, policy, LinearCtx("ssm_in", layer, n_layers))
     tail = state["conv"] if state is not None else None
     xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"], tail)
 
@@ -224,18 +225,22 @@ def ssm_apply(params, u: jnp.ndarray, cfg, *,
     y = y4.reshape(*xs.shape[:2], dm.d_inner)
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                 params["gate_norm"])
-    out = qlin(y, params["out_proj"], None, recipe)
+    out = policy.linear(LinearCtx("ssm_out", layer, n_layers), y,
+                        params["out_proj"])
     new_state = ({"ssm": final, "conv": new_tail} if return_state else None)
     return out, new_state
 
 
 def ssm_decode_step(params, u: jnp.ndarray, cfg, *,
-                    recipe: Optional[QuantRecipe], rules,
-                    state: Dict[str, jnp.ndarray]):
+                    policy=None, rules=None,
+                    state: Dict[str, jnp.ndarray] = None,
+                    layer=None, n_layers: int = 0):
     """Single-token recurrent update.  u: (B,1,d).  O(1) in context length --
     this is what makes long_500k tractable for SSM/hybrid archs."""
+    policy = as_policy(policy)
     dm = ssm_dims(cfg)
-    z, xbc, dt_raw = _in_projections(params, u, recipe)
+    z, xbc, dt_raw = _in_projections(
+        params, u, policy, LinearCtx("ssm_in", layer, n_layers))
     xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
                                  state["conv"])
     di, gn = dm.d_inner, dm.n_groups * dm.n_state
@@ -258,7 +263,8 @@ def ssm_decode_step(params, u: jnp.ndarray, cfg, *,
     y = y3.reshape(-1, 1, dm.d_inner).astype(u.dtype)
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                 params["gate_norm"])
-    out = qlin(y, params["out_proj"], None, recipe)
+    out = policy.linear(LinearCtx("ssm_out", layer, n_layers), y,
+                        params["out_proj"])
     return out, {"ssm": new_ssm, "conv": new_tail}
 
 

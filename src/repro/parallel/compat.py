@@ -1,0 +1,33 @@
+"""Version shims for the shard_map / axis-introspection APIs.
+
+``jax.shard_map`` (with the ``check_vma`` kwarg) is the modern spelling;
+older releases expose ``jax.experimental.shard_map.shard_map`` with
+``check_rep`` instead.  ``shard_map(...)`` here accepts the modern kwargs
+and translates for whichever implementation this environment provides.
+``axis_size(name)`` shims ``jax.lax.axis_size`` (newer) via the mesh-axis
+env lookup on older releases.
+"""
+from __future__ import annotations
+
+import jax
+
+
+if hasattr(jax.lax, "axis_size"):
+    def axis_size(name: str) -> int:
+        return jax.lax.axis_size(name)
+else:                                      # pragma: no cover - version path
+    def axis_size(name: str) -> int:
+        # psum of a concrete 1 over a mesh axis constant-folds to the static
+        # axis size on every release that predates jax.lax.axis_size
+        return jax.lax.psum(1, name)
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:                                      # pragma: no cover - version path
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)

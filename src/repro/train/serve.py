@@ -18,7 +18,11 @@ from repro.models.model_api import Model
 def greedy_generate(model: Model, params, batch: Dict, max_new_tokens: int,
                     *, recipe=None, rules=None, eos_id: Optional[int] = None,
                     max_seq: Optional[int] = None) -> jnp.ndarray:
-    """Returns (B, max_new_tokens) int32 generations."""
+    """Returns (B, max_new_tokens) int32 generations.
+
+    ``recipe`` accepts the full policy surface (None / QuantRecipe /
+    QuantPolicy / policy string) -- e.g. a per-layer int8 policy for
+    quantized serving."""
     prompt = batch["tokens"]
     b, s = prompt.shape
     total = (max_seq or (s + max_new_tokens))

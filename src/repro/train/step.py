@@ -1,9 +1,15 @@
 """pjit-able train / eval / serve step factories.
 
-``make_train_step`` closes over (model, recipe, opt config, sharding rules)
-and returns a pure function (state, batch, rng) -> (state, metrics) suitable
-for jax.jit with in/out shardings -- the same function is used by the CPU
-smoke tests, the real launcher, and the multi-pod dry-run.
+``make_train_step`` closes over (model, quantization policy, opt config,
+sharding rules) and returns a pure function (state, batch, rng) ->
+(state, metrics) suitable for jax.jit with in/out shardings -- the same
+function is used by the CPU smoke tests, the real launcher, and the
+multi-pod dry-run.
+
+The ``recipe`` argument of every factory accepts the full policy surface:
+None (fp), a legacy :class:`QuantRecipe`, a :class:`QuantPolicy`, or a
+policy string -- all normalized via ``as_policy``.  The normalized policy's
+``adam_m1``/``adam_m2`` feed the quantized optimizer states.
 """
 from __future__ import annotations
 
@@ -13,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qadam
-from repro.core.qconfig import QuantRecipe
+from repro.core.qpolicy import QuantPolicy, as_policy
 from repro.models.model_api import Model
 from repro.optim.adamw import (AdamState, OptConfig, adamw_update,
                                init_adam_state)
@@ -24,19 +30,20 @@ class TrainState(NamedTuple):
     opt: AdamState
 
 
-def init_train_state(model: Model, key: jax.Array,
-                     recipe: Optional[QuantRecipe],
+def init_train_state(model: Model, key: jax.Array, recipe,
                      opt_cfg: OptConfig) -> TrainState:
+    policy = as_policy(recipe)
     params = model.init_params(key, jnp.float32)
     return TrainState(params=params,
-                      opt=init_adam_state(params, recipe, opt_cfg))
+                      opt=init_adam_state(params, policy, opt_cfg))
 
 
-def make_train_step(model: Model, recipe: Optional[QuantRecipe],
-                    opt_cfg: OptConfig, rules=None, accum_steps: int = 1):
+def make_train_step(model: Model, recipe, opt_cfg: OptConfig, rules=None,
+                    accum_steps: int = 1):
     """Gradient step with optional microbatch accumulation (accum_steps > 1
     splits the leading batch dim; gradients are averaged -- communication for
     the DP reduction is deferred to the last microbatch by XLA)."""
+    policy = as_policy(recipe)
 
     def constrain_like_params(tree, ref):
         """Pin a params-shaped tree to the parameter shardings: gradients
@@ -58,7 +65,7 @@ def make_train_step(model: Model, recipe: Optional[QuantRecipe],
         compute_params = constrain_like_params(
             cast_params(params, jnp.bfloat16), params)
         loss, metrics = model.train_loss(compute_params, batch,
-                                         recipe=recipe, rules=rules, rng=rng)
+                                         policy=policy, rules=rules, rng=rng)
         return loss, metrics
 
     def grad_fn(params, batch, rng):
@@ -89,7 +96,7 @@ def make_train_step(model: Model, recipe: Optional[QuantRecipe],
             metrics = {"ce": loss, "loss": loss}
 
         new_params, new_opt, stats = adamw_update(
-            state.params, grads, state.opt, opt_cfg, recipe)
+            state.params, grads, state.opt, opt_cfg, policy)
         metrics = dict(metrics)
         metrics.update(stats)
         return TrainState(new_params, new_opt), metrics
@@ -97,9 +104,11 @@ def make_train_step(model: Model, recipe: Optional[QuantRecipe],
     return train_step
 
 
-def make_eval_step(model: Model, recipe: Optional[QuantRecipe], rules=None):
+def make_eval_step(model: Model, recipe, rules=None):
+    policy = as_policy(recipe)
+
     def eval_step(params, batch):
-        loss, metrics = model.train_loss(params, batch, recipe=recipe,
+        loss, metrics = model.train_loss(params, batch, policy=policy,
                                          rules=rules)
         return metrics
     return eval_step

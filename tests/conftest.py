@@ -1,0 +1,36 @@
+"""Shared test fixtures.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt): when it
+is absent, only the property-based tests skip -- the deterministic tests in
+the same modules still run (a plain ``pytest.importorskip`` at module level
+would throw those away too).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover - env-dependent
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Absorbs ``st.integers(...)``-style calls at decoration time."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed "
+                                     "(pip install -r requirements-dev.txt)")
+            def stub():
+                pass
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

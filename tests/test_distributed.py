@@ -78,9 +78,9 @@ def test_moe_shard_map_modes_match_local():
             rules = make_rules(mesh, "train", cfg=cfg)
             with mesh:
                 y_sh, aux_sh, z_sh = jax.jit(
-                    lambda p, xx: moe_apply(p, xx, cfg, recipe=None,
+                    lambda p, xx: moe_apply(p, xx, cfg, policy=None,
                                             rules=rules))(params, x)
-            y_loc, aux_loc, z_loc = moe_apply(params, x, cfg, recipe=None,
+            y_loc, aux_loc, z_loc = moe_apply(params, x, cfg, policy=None,
                                               rules=None)
             err = float(jnp.max(jnp.abs(y_sh - y_loc)))
             rel = err / (float(jnp.max(jnp.abs(y_loc))) + 1e-9)
@@ -94,6 +94,7 @@ def test_compressed_allreduce_close_to_exact():
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.parallel.compat import shard_map
         from repro.parallel.compress import int8_psum_flat
         mesh = jax.make_mesh((8,), ("d",))
         v = jax.random.normal(jax.random.PRNGKey(0), (8, 4096))
@@ -104,9 +105,9 @@ def test_compressed_allreduce_close_to_exact():
             return int8_psum_flat(mine, "d")[None, :]
 
         with mesh:
-            got = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("d", None),
-                                        out_specs=P("d", None),
-                                        check_vma=False))(v)
+            got = jax.jit(shard_map(body, mesh=mesh, in_specs=P("d", None),
+                                    out_specs=P("d", None),
+                                    check_vma=False))(v)
         # every rank's compressed sum approximates the true sum of all rows
         want = jnp.sum(v, axis=0)
         got0 = got[0]

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis, optional (see conftest)
 
 from repro.core.qconfig import Granularity, QuantSpec
 from repro.core.quantizer import fake_quant_nograd

@@ -5,6 +5,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.common import ACT_FNS, init_from_spec
+from repro.core.qpolicy import FP_POLICY, LinearCtx
 from repro.models.moe import _capacity, _local_moe, _route, moe_apply, moe_spec
 
 KEY = jax.random.PRNGKey(4)
@@ -12,7 +13,8 @@ KEY = jax.random.PRNGKey(4)
 
 def _brute_force(x2, params, cfg):
     """For every token: run its top-k experts densely, combine with gates."""
-    gates, top_e, _, _ = _route(x2, params["w_router"], cfg)
+    gates, top_e, _, _ = _route(x2, params["w_router"], cfg, FP_POLICY,
+                                LinearCtx("router"))
     act = ACT_FNS[cfg.act]
     outs = []
     for e in range(cfg.n_experts):
@@ -34,7 +36,8 @@ def test_local_dispatch_matches_brute_force_no_drops():
     t = 64
     x2 = jax.random.normal(KEY, (t, cfg.d_model)) * 0.5
     # capacity = all tokens -> nothing dropped -> exact match
-    y, aux, z = _local_moe(x2, params, cfg, None, capacity=t * cfg.top_k)
+    y, aux, z = _local_moe(x2, params, cfg, FP_POLICY, t * cfg.top_k,
+                           None, 0)
     want = _brute_force(x2, params, cfg)
     np.testing.assert_allclose(np.asarray(y), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
@@ -46,8 +49,9 @@ def test_capacity_drops_fall_back_to_zero():
     params = init_from_spec(KEY, moe_spec(cfg))
     t = 32
     x2 = jax.random.normal(KEY, (t, cfg.d_model)) * 0.5
-    y_small, _, _ = _local_moe(x2, params, cfg, None, capacity=1)
-    y_big, _, _ = _local_moe(x2, params, cfg, None, capacity=t * cfg.top_k)
+    y_small, _, _ = _local_moe(x2, params, cfg, FP_POLICY, 1, None, 0)
+    y_big, _, _ = _local_moe(x2, params, cfg, FP_POLICY, t * cfg.top_k,
+                             None, 0)
     # with capacity 1 most contributions are dropped -> smaller norm
     assert float(jnp.linalg.norm(y_small)) < float(jnp.linalg.norm(y_big))
     assert not bool(jnp.any(jnp.isnan(y_small)))
@@ -57,7 +61,7 @@ def test_moe_apply_single_device_path():
     cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
     params = init_from_spec(KEY, moe_spec(cfg))
     x = jax.random.normal(KEY, (2, 8, cfg.d_model)) * 0.5
-    y, aux, z = moe_apply(params, x, cfg, recipe=None, rules=None)
+    y, aux, z = moe_apply(params, x, cfg, policy=None, rules=None)
     assert y.shape == x.shape
     assert not bool(jnp.any(jnp.isnan(y)))
 
@@ -66,7 +70,8 @@ def test_router_gates_normalized():
     cfg = get_smoke_config("granite-moe-3b-a800m")
     params = init_from_spec(KEY, moe_spec(cfg))
     x2 = jax.random.normal(KEY, (16, cfg.d_model))
-    gates, top_e, _, _ = _route(x2, params["w_router"], cfg)
+    gates, top_e, _, _ = _route(x2, params["w_router"], cfg, FP_POLICY,
+                                LinearCtx("router"))
     np.testing.assert_allclose(np.asarray(jnp.sum(gates, -1)),
                                np.ones(16), rtol=1e-5)
     assert int(jnp.max(top_e)) < cfg.n_experts
@@ -77,7 +82,7 @@ def test_quantized_experts():
     cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
     params = init_from_spec(KEY, moe_spec(cfg))
     x = jax.random.normal(KEY, (2, 8, cfg.d_model)) * 0.5
-    y_fp, _, _ = moe_apply(params, x, cfg, recipe=None, rules=None)
-    y_q, _, _ = moe_apply(params, x, cfg, recipe=paper_recipe(), rules=None)
+    y_fp, _, _ = moe_apply(params, x, cfg, policy=None, rules=None)
+    y_q, _, _ = moe_apply(params, x, cfg, policy=paper_recipe(), rules=None)
     delta = float(jnp.max(jnp.abs(y_fp - y_q)))
     assert 0 < delta < 0.5 * float(jnp.max(jnp.abs(y_fp)) + 1e-6)

@@ -1,0 +1,301 @@
+"""QuantPolicy API: role/depth resolution, from_recipe seed-equivalence,
+kernel-backend dispatch + fallback, string codecs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (Granularity, LinearCtx, QuantPolicy, QuantRecipe,
+                        QuantSpec, get_recipe, paper_recipe, parse_policy,
+                        parse_recipe, quantized_linear)
+from repro.core.qlinear import int8_backend_supported
+from repro.core.qpolicy import PolicyRule, as_policy
+from repro.models import build_model
+from repro.optim import OptConfig
+from repro.train import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _xw(m=8, k=32, n=16, batch=(3,)):
+    kx, kw = jax.random.split(KEY)
+    x = jax.random.normal(kx, (*batch, m, k))
+    w = jax.random.normal(kw, (k, n)) * 0.2
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# recipe string codec
+# ---------------------------------------------------------------------------
+
+def test_parse_recipe_roundtrip_presets():
+    for name in ("fp", "paper", "paper_wag8", "beyond"):
+        r = get_recipe(name)
+        assert parse_recipe(r.describe_compact()) == r
+
+
+def test_parse_recipe_components():
+    r = parse_recipe("w8c,a8t,g8t,m1:4c")
+    assert r.weights == QuantSpec(8, Granularity.PER_CHANNEL)
+    assert r.acts == QuantSpec(8, Granularity.PER_TOKEN)
+    assert r.grads == QuantSpec(8, Granularity.PER_TOKEN)
+    assert r.adam_m1 == QuantSpec(4, Granularity.PER_CHANNEL)
+    # '+' separator (for embedding in policy strings) and flags
+    r2 = parse_recipe("w4n+m2:8c-asym-b128-sqrt")
+    assert r2.weights == QuantSpec(4, Granularity.PER_TENSOR)
+    assert r2.adam_m2 == QuantSpec(8, Granularity.PER_CHANNEL,
+                                   symmetric=False, block_size=128,
+                                   sqrt_domain=True)
+    # get_recipe falls through to the codec
+    assert get_recipe("w8c+a8t") == paper_recipe()
+
+
+def test_parse_recipe_errors():
+    with pytest.raises(ValueError):
+        parse_recipe("w8q")            # bad granularity code
+    with pytest.raises(ValueError):
+        parse_recipe("w8c,w4c")        # duplicate component
+    with pytest.raises(KeyError):
+        get_recipe("not_a_preset_or_spec!")
+
+
+# ---------------------------------------------------------------------------
+# role / depth resolution
+# ---------------------------------------------------------------------------
+
+def test_rule_precedence_first_match_wins():
+    fp8 = QuantRecipe(weights=QuantSpec(8, Granularity.PER_CHANNEL))
+    fp4 = QuantRecipe(weights=QuantSpec(4, Granularity.PER_CHANNEL))
+    pol = QuantPolicy(rules=(PolicyRule(role="mlp_up", recipe=fp4),
+                             PolicyRule(role="*", recipe=fp8)),
+                      default=None)
+    assert pol.resolve("mlp_up").recipe == fp4          # specific beats later *
+    assert pol.resolve("attn_qkv").recipe == fp8        # wildcard
+    # unmatched (no wildcard) falls to the default
+    pol2 = QuantPolicy(rules=(PolicyRule(role="embed"),), default=fp8)
+    assert pol2.resolve("embed").recipe is None
+    assert pol2.resolve("mlp_down").recipe == fp8
+
+
+def test_depth_indexed_resolution():
+    pol = parse_policy("block[0:2].*=fp,block[-1:].*=fp,*=w8c+a8t")
+    n = 6
+    assert pol.resolve("mlp_up", 0, n).recipe is None
+    assert pol.resolve("mlp_up", 1, n).recipe is None
+    assert pol.resolve("mlp_up", 2, n).recipe == paper_recipe()
+    assert pol.resolve("mlp_up", n - 1, n).recipe is None    # negative index
+    # depth-bounded rules never match depth-less call sites
+    assert pol.resolve("shared_proj", None, n).recipe == paper_recipe()
+    assert pol.depth_sensitive("mlp_up")
+    # block[:] stays depth-bounded: catches every block, not embed/lm_head
+    every = parse_policy("block[:].*=w4c,*=w8c+a8t")
+    assert every.resolve("mlp_up", 0, n).recipe.weights.bits == 4
+    assert every.resolve("embed").recipe is None
+
+
+def test_parse_policy_seeds_paper_scope_exclusions():
+    """A bare wildcard quantizes block linears only (from_recipe parity);
+    naming a role explicitly -- or 'emb' in the recipe -- lifts it."""
+    pol = parse_policy("*=w8c+a8t")
+    for role in ("embed", "lm_head", "router", "patch_proj"):
+        assert pol.resolve(role).recipe is None, role
+    for role in ("attn_qkv", "mlp_down", "ssm_in", "frame_proj",
+                 "shared_proj"):
+        assert pol.resolve(role).recipe == paper_recipe(), role
+    # explicit rule wins over the seeded exclusion
+    pol2 = parse_policy("embed=w8c,*=w8c+a8t")
+    assert pol2.resolve("embed").recipe is not None
+    assert pol2.resolve("lm_head").recipe is None
+    # 'emb' flag in the wildcard recipe lifts embed/lm_head (not router)
+    pol3 = parse_policy("*=w8c+a8t+emb")
+    assert pol3.resolve("embed").recipe is not None
+    assert pol3.resolve("lm_head").recipe is not None
+    assert pol3.resolve("router").recipe is None
+
+
+def test_parse_policy_backend_and_describe_roundtrip():
+    pol = parse_policy("embed=fp,block[0:2].*=fp,*=w8c+a8t@int8_pallas")
+    assert pol.resolve("mlp_up", 3, 4).backend == "int8_pallas"
+    assert pol.resolve("mlp_up", 0, 4).recipe is None
+    assert pol.adam_m1 is None and pol.default == paper_recipe()
+    re_parsed = parse_policy(pol.describe())
+    assert re_parsed.describe() == pol.describe()
+    with pytest.raises(ValueError):
+        parse_policy("not_a_role=w8c")
+    with pytest.raises(ValueError):
+        parse_policy("*=w8c@no_such_backend")
+
+
+def test_rules_inherit_policy_backend_regardless_of_order():
+    """A role rule placed BEFORE the wildcard (as first-match-wins requires)
+    still runs on the wildcard's backend unless it names its own."""
+    pol = parse_policy("mlp_down=w8c+a8n,*=w8c+a8t@int8_pallas")
+    assert pol.resolve("mlp_down").backend == "int8_pallas"
+    assert pol.resolve("mlp_up").backend == "int8_pallas"
+    pol2 = parse_policy("mlp_down=w8c+a8n@fake_quant,*=w8c+a8t@int8_pallas")
+    assert pol2.resolve("mlp_down").backend == "fake_quant"
+
+
+def test_moment_specs_outside_default_are_rejected():
+    """m1:/m2: only take effect on the depth-less '*' entry; anywhere else
+    they would silently run fp moments -- reject loudly instead."""
+    with pytest.raises(ValueError, match="optimizer-moment"):
+        parse_policy("block[2:10].*=w8c+a8t+m2:8c-b128-sqrt")
+    with pytest.raises(ValueError, match="optimizer-moment"):
+        parse_policy("mlp_up=w8c+m1:4c,*=w8c+a8t")
+    # ...but the wildcard itself carries them fine
+    pol = parse_policy("*=w8c+a8t+m1:4c")
+    assert pol.adam_m1 is not None
+
+
+# ---------------------------------------------------------------------------
+# from_recipe seed-path equivalence
+# ---------------------------------------------------------------------------
+
+def test_from_recipe_linear_bitwise_matches_quantized_linear():
+    x, w = _xw()
+    r = paper_recipe()
+    pol = QuantPolicy.from_recipe(r)
+    for role in ("attn_qkv", "attn_out", "mlp_up", "mlp_down", "ssm_in",
+                 "ssm_out", "frame_proj", "shared_proj"):
+        y = pol.linear(LinearCtx(role, layer=2, n_layers=4), x, w)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(
+            quantized_linear(x, w, r)))
+    # excluded roles are plain fp matmuls (seed scoping)
+    for role in ("embed", "lm_head", "router", "patch_proj"):
+        y = pol.linear(LinearCtx(role), x, w)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))
+
+
+def test_from_recipe_train_loss_bit_identical_on_smoke_gpt2():
+    """model.train_loss(recipe=R) == model.train_loss(policy=from_recipe(R))
+    bit-for-bit over train steps (the facade wraps recipes identically)."""
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    recipe = paper_recipe()
+    pol = QuantPolicy.from_recipe(recipe)
+    opt = OptConfig(lr=3e-3, warmup_steps=2, total_steps=6)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0,
+                                          cfg.vocab_size)}
+    s_r = init_train_state(model, KEY, recipe, opt)
+    s_p = init_train_state(model, KEY, pol, opt)
+    step_r = jax.jit(make_train_step(model, recipe, opt))
+    step_p = jax.jit(make_train_step(model, pol, opt))
+    for _ in range(3):
+        s_r, m_r = step_r(s_r, batch, None)
+        s_p, m_p = step_p(s_p, batch, None)
+        assert float(m_r["ce"]) == float(m_p["ce"])
+    l_r, _ = model.train_loss(s_r.params, batch, recipe=recipe)
+    l_p, _ = model.train_loss(s_p.params, batch, policy=pol)
+    assert float(l_r) == float(l_p)
+
+
+def test_fp_policy_is_plain_matmul():
+    x, w = _xw()
+    for pol in (as_policy(None), QuantPolicy.from_recipe(None),
+                as_policy(QuantRecipe())):
+        y = pol.linear(LinearCtx("mlp_up", layer=1, n_layers=2), x, w)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))
+
+
+# ---------------------------------------------------------------------------
+# kernel backends
+# ---------------------------------------------------------------------------
+
+def test_int8_backend_matches_fake_quant_reference():
+    x, w = _xw(m=64, k=96, n=48, batch=())
+    r = paper_recipe()
+    assert int8_backend_supported(r)
+    pol_int8 = QuantPolicy(default=r, backend="int8_pallas")
+    pol_fake = QuantPolicy(default=r)
+    ctx = LinearCtx("mlp_up")
+    y_i = pol_int8.linear(ctx, x, w)
+    y_f = pol_fake.linear(ctx, x, w)
+    np.testing.assert_allclose(np.asarray(y_i), np.asarray(y_f),
+                               rtol=1e-3, atol=1e-4)
+    # backward: identical Fig-1 residual math on both paths
+    gi = jax.grad(lambda a: jnp.sum(pol_int8.linear(ctx, a, w) ** 2))(x)
+    gf = jax.grad(lambda a: jnp.sum(pol_fake.linear(ctx, a, w) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(gf),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_int8_backend_falls_back_when_unsupported():
+    x, w = _xw()
+    # 4-bit weights are outside the int8 kernel contract -> fake_quant path
+    r4 = QuantRecipe(weights=QuantSpec(4, Granularity.PER_CHANNEL),
+                     acts=QuantSpec(8, Granularity.PER_TOKEN))
+    assert not int8_backend_supported(r4)
+    pol = QuantPolicy(default=r4, backend="int8_pallas")
+    y = pol.linear(LinearCtx("mlp_up"), x, w)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(
+        quantized_linear(x, w, r4)))
+    # weight-only recipes need the acts quantized too for real-int8 compute
+    assert not int8_backend_supported(
+        QuantRecipe(weights=QuantSpec(8, Granularity.PER_CHANNEL)))
+
+
+def test_depth_switch_under_scan_matches_static_resolution():
+    """Traced layer index inside lax.scan selects per-layer quantization."""
+    x, w = _xw()
+    pol = parse_policy("block[0:1].*=fp,*=w8c+a8t")
+    n = 3
+
+    def body(carry, li):
+        y = pol.linear(LinearCtx("mlp_up", layer=li, n_layers=n), x, w)
+        return carry, y
+
+    _, ys = jax.lax.scan(body, None, jnp.arange(n, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(ys[0]), np.asarray(x @ w))
+    # scan-compiled branches fuse differently than the eager reference:
+    # allow float-ulp noise, but the fp<->quantized gap is orders larger
+    want_q = np.asarray(quantized_linear(x, w, paper_recipe()))
+    np.testing.assert_allclose(np.asarray(ys[1]), want_q, rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ys[2]), want_q, rtol=1e-5,
+                               atol=1e-5)
+    assert float(jnp.max(jnp.abs(ys[1] - x @ w))) > 1e-3
+
+
+def test_mixed_policy_smoke_training_with_int8_blocks():
+    """Acceptance: fp embed/lm_head + int8_pallas W8A8 blocks trains 20 smoke
+    steps without divergence."""
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    pol = parse_policy("embed=fp,lm_head=fp,*=w8c+a8t@int8_pallas")
+    opt = OptConfig(lr=3e-3, warmup_steps=5, total_steps=20)
+    state = init_train_state(model, KEY, pol, opt)
+    step = jax.jit(make_train_step(model, pol, opt))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 65), 0,
+                                          cfg.vocab_size)}
+    first = None
+    for i in range(20):
+        state, m = step(state, batch, None)
+        ce = float(m["ce"])
+        assert np.isfinite(ce) and ce < 30, (i, ce)
+        first = first if first is not None else ce
+    assert ce < first, (first, ce)       # it actually learns
+
+
+def test_embed_quantization_via_include_embeddings():
+    """include_embeddings routes the table/head through weight qdq; the
+    default policy leaves them fp (loss changes only in the former case)."""
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0,
+                                          cfg.vocab_size)}
+    r = paper_recipe()
+    import dataclasses
+    r_emb = dataclasses.replace(r, include_embeddings=True)
+    l_plain, _ = model.train_loss(params, batch, recipe=r)
+    l_emb, _ = model.train_loss(params, batch, recipe=r_emb)
+    assert float(l_plain) != float(l_emb)
+    # 2-bit embed quantization must hurt much more than 8-bit (sanity that
+    # the embed role really is quantized, not just perturbed elsewhere)
+    r2 = dataclasses.replace(
+        r, include_embeddings=True,
+        weights=QuantSpec(2, Granularity.PER_CHANNEL))
+    l2, _ = model.train_loss(params, batch, recipe=r2)
+    assert abs(float(l2) - float(l_plain)) > abs(float(l_emb) - float(l_plain))

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis, optional (see conftest)
 
 from repro.core.qconfig import Granularity, QuantSpec, RoundMode
 from repro.core.quantizer import (compute_scale_zero, dequantize_int,

@@ -13,6 +13,13 @@ def _compile(f, *specs):
     return jax.jit(f).lower(*specs).compile()
 
 
+def _cost(compiled):
+    """compiled.cost_analysis() returns a one-element list of dicts on some
+    jax releases and a bare dict on others."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 def test_flops_exact_no_loop():
     x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
     w = jax.ShapeDtypeStruct((256, 512), jnp.float32)
@@ -36,7 +43,7 @@ def test_flops_loop_multiplied():
     expected = 7 * 2 * 64 ** 3
     assert abs(counts["flops"] - expected) / expected < 0.05
     # XLA's own analysis counts the body once -- the bug we work around
-    assert c.cost_analysis()["flops"] < expected / 2
+    assert _cost(c)["flops"] < expected / 2
 
 
 def test_nested_loops_multiply():
@@ -62,7 +69,7 @@ def test_bytes_match_xla_convention_no_loop():
     w = jax.ShapeDtypeStruct((512, 2048), jnp.bfloat16)
     c = _compile(lambda a, b: jnp.sum(jax.nn.gelu(a @ b)), x, w)
     counts = count_module(c.as_text(), 1)
-    xla = c.cost_analysis()["bytes accessed"]
+    xla = _cost(c)["bytes accessed"]
     assert abs(counts["bytes"] - xla) / xla < 0.15
 
 

@@ -57,12 +57,12 @@ def test_layer_decode_streaming_equals_full():
     b, s = 2, 12
     u = jax.random.normal(KEY, (b, s, cfg.d_model)) * 0.5
 
-    full, _ = ssm_apply(params, u, cfg, recipe=None, rules=None)
+    full, _ = ssm_apply(params, u, cfg, policy=None, rules=None)
 
     state = init_ssm_state(cfg, b, jnp.float32)
     outs = []
     for t in range(s):
-        y, state = ssm_decode_step(params, u[:, t:t + 1], cfg, recipe=None,
+        y, state = ssm_decode_step(params, u[:, t:t + 1], cfg, policy=None,
                                    rules=None, state=state)
         outs.append(y)
     streamed = jnp.concatenate(outs, axis=1)
