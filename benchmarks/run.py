@@ -170,6 +170,17 @@ def table_memory_and_linear_share() -> None:
                     f"activation_fraction={act / (act + st):.3f}")
 
 
+def bench_serve() -> None:
+    """Engine serving throughput + KV residency, fp vs int8 policies."""
+    from benchmarks.serve_throughput import POLICIES, bench_engine
+    for pol in POLICIES:
+        r = bench_engine(pol, slots=4, prompt_len=32, new_tokens=16)
+        row(f"serve::{pol}", 0.0,
+            f"prefill_tok_s={r['prefill_tok_s']:.1f};"
+            f"decode_tok_s={r['decode_tok_s']:.1f};"
+            f"kv_bytes={r['kv_bytes']};params_bytes={r['params_bytes']}")
+
+
 def table_roofline() -> None:
     """Dry-run roofline MFUs (train cells, single pod)."""
     from benchmarks.roofline import load
@@ -190,6 +201,7 @@ def main() -> None:
     bench_kernels()
     bench_policy_backends()
     bench_train_steps()
+    bench_serve()
     table_paper_results()
     table_memory_and_linear_share()
     table_roofline()

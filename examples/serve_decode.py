@@ -1,10 +1,13 @@
-"""Serving example: batched prefill + greedy decode with a quantized model.
+"""Serving example: the quantized inference engine on a freshly-trained
+mini GPT-2.
 
-Loads the latest checkpoint written by train_quantized_gpt2.py (or trains a
-tiny model on the fly) and serves a batch of prompts, measuring per-token
-decode latency.
+Trains a tiny model, then serves a mixed bag of requests through
+``repro.infer.Engine``: weights are quantized ONCE into stored int8 payloads
+(per the policy), the KV cache optionally stores int8, and requests of
+different lengths share the fixed decode slots via continuous batching.
 
-    PYTHONPATH=src python examples/serve_decode.py --tokens 32
+    PYTHONPATH=src python examples/serve_decode.py --tokens 32 \
+        --policy 'kv_cache=a8t,*=w8c+a8t'
 """
 import argparse
 import time
@@ -13,58 +16,79 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import paper_recipe
 from repro.data import Loader, SyntheticCorpus
+from repro.infer import Engine, Request, SamplingParams, params_nbytes
 from repro.models import build_model
 from repro.optim import OptConfig
-from repro.train import greedy_generate, init_train_state, make_train_step
+from repro.train import init_train_state, make_train_step
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="decode slots (max concurrent requests)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--policy", default="*=w8c+a8t",
+                    help="QuantPolicy string; try 'kv_cache=a8t,*=w8c+a8t' "
+                         "for the int8 KV cache, '*=fp' for the fp baseline")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--warm-steps", type=int, default=80,
                     help="quick pre-train so generations are non-random")
     args = ap.parse_args()
 
     cfg = get_smoke_config("gpt2-small")
     model = build_model(cfg)
-    recipe = paper_recipe()
     corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
     opt = OptConfig(lr=3e-3, warmup_steps=5, total_steps=args.warm_steps)
-    state = init_train_state(model, jax.random.PRNGKey(0), recipe, opt)
-    step = jax.jit(make_train_step(model, recipe, opt))
+    state = init_train_state(model, jax.random.PRNGKey(0), args.policy, opt)
+    step = jax.jit(make_train_step(model, args.policy, opt))
     loader = Loader(corpus, cfg, batch_size=args.batch,
                     seq_len=args.prompt_len)
     for i in range(args.warm_steps):
         state, _ = step(state, next(loader), None)
 
-    prompts = next(loader)["tokens"][:, :args.prompt_len]
-    t0 = time.perf_counter()
-    gen = greedy_generate(model, state.params, {"tokens": prompts},
-                          args.tokens, recipe=recipe)
-    gen = np.asarray(jax.block_until_ready(gen))
-    dt = time.perf_counter() - t0
-    print(f"generated {gen.shape} in {dt:.2f}s "
-          f"({dt / args.tokens * 1e3:.1f} ms/token batched x{args.batch})")
-    print("sample:", gen[0][:16].tolist())
+    engine = Engine(
+        model, state.params, args.policy,
+        max_slots=args.batch,
+        max_seq=args.prompt_len + args.tokens + 1,
+        sampling=SamplingParams(temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p))
+    print(f"engine: policy [{engine.policy.describe()}] "
+          f"params {params_nbytes(engine.params) / 1e6:.2f} MB "
+          f"kv-state {engine.kv_cache_nbytes() / 1e6:.2f} MB")
 
-    # quality probe: continuation CE of generated vs random tokens under the
-    # corpus's own bigram statistics
+    # a mixed bag: 2x slots requests with varied prompt lengths, so slots
+    # turn over and admission backfills (continuous batching)
+    prompts = np.asarray(next(loader)["tokens"])
+    rng = np.random.RandomState(0)
+    for i in range(2 * args.batch):
+        plen = int(rng.randint(args.prompt_len // 4, args.prompt_len + 1))
+        engine.submit(Request(tokens=prompts[i % args.batch, :plen].tolist(),
+                              max_new_tokens=args.tokens))
+    t0 = time.perf_counter()
+    responses = engine.run()
+    dt = time.perf_counter() - t0
+    gen_tokens = sum(len(r.tokens) for r in responses)
+    print(f"served {len(responses)} requests / {gen_tokens} tokens "
+          f"in {dt:.2f}s ({gen_tokens / dt:.1f} tok/s on {args.batch} slots)")
+    print("sample:", responses[0].tokens[:16])
+
+    # quality probe: continuation consistency under the corpus's own bigram
+    # statistics (higher = learned the corpus transitions)
     succ = corpus.succ
     def hit_rate(seq):
-        hits = 0
-        for a, b in zip(seq[:-1], seq[1:]):
-            hits += int(b in succ[a])
-        return hits / (len(seq) - 1)
-    model_rate = np.mean([hit_rate(g) for g in gen])
-    rand = np.random.RandomState(0).randint(0, cfg.vocab_size,
-                                            gen.shape)
-    rand_rate = np.mean([hit_rate(g) for g in rand])
-    print(f"bigram-consistency: model={model_rate:.2f} random={rand_rate:.2f}"
-          f"  (higher = learned the corpus transitions)")
+        if len(seq) < 2:
+            return 0.0
+        return sum(int(b in succ[a]) for a, b in zip(seq[:-1], seq[1:])) \
+            / (len(seq) - 1)
+    model_rate = np.mean([hit_rate(r.tokens) for r in responses])
+    rand_rate = np.mean([hit_rate(list(rng.randint(0, cfg.vocab_size,
+                                                   args.tokens)))
+                         for _ in responses])
+    print(f"bigram-consistency: model={model_rate:.2f} random={rand_rate:.2f}")
 
 
 if __name__ == "__main__":

@@ -3,6 +3,7 @@ from repro.core.qconfig import (Granularity, QuantRecipe, QuantSpec, RoundMode,
                                 beyond_paper_recipe, fp_baseline, get_recipe,
                                 paper_recipe, paper_recipe_wag8, parse_recipe,
                                 parse_spec, PRESETS)
+from repro.core.qadam import QState
 from repro.core.qlinear import (int8_backend_supported, int8_quantized_linear,
                                 quantized_linear)
 from repro.core.qpolicy import (FP_POLICY, KERNEL_BACKENDS, LinearCtx,
@@ -16,7 +17,8 @@ __all__ = [
     "Granularity", "QuantRecipe", "QuantSpec", "RoundMode",
     "beyond_paper_recipe", "fp_baseline", "get_recipe", "paper_recipe",
     "paper_recipe_wag8", "parse_recipe", "parse_spec", "PRESETS",
-    "quantized_linear", "int8_backend_supported", "int8_quantized_linear",
+    "QState", "quantized_linear", "int8_backend_supported",
+    "int8_quantized_linear",
     "FP_POLICY", "KERNEL_BACKENDS", "LinearCtx", "PolicyRule", "QuantPolicy",
     "ROLES", "as_policy", "parse_policy", "register_backend",
     "compute_scale_zero", "dequantize_int", "fake_quant", "fake_quant_nograd",

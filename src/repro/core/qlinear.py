@@ -48,23 +48,29 @@ def _qlinear_fwd(x, w, key, recipe):
 def _qlinear_bwd(recipe, res, g):
     xq, wq, key, x_shape = res
 
+    # Independent subkeys per backward path: when both grads_dx and grads are
+    # stochastic, the dW rounding noise must be uncorrelated with the dx
+    # noise (and neither path may consume the caller's parent key raw).
+    k_dx = k_dw = None
+    if key is not None:
+        key_dx, key_dw = jax.random.split(key)
+        if (recipe.grads_dx is not None
+                and recipe.grads_dx.round_mode is RoundMode.STOCHASTIC):
+            k_dx = key_dx
+        if (recipe.grads is not None
+                and recipe.grads.round_mode is RoundMode.STOCHASTIC):
+            k_dw = key_dw
+
     # --- dx path: real-valued output gradient (paper Fig. 1). -------------
     g_dx = g
     if recipe.grads_dx is not None:                      # instability ablation
-        k = None
-        if key is not None:
-            key, k = jax.random.split(key)
-            k = k if recipe.grads_dx.round_mode.value == "stochastic" else None
-        g_dx = fake_quant_nograd(g, recipe.grads_dx, k)
+        g_dx = fake_quant_nograd(g, recipe.grads_dx, k_dx)
     dx = jnp.matmul(g_dx, wq.T).reshape(x_shape)
 
     # --- dW path: quantized output gradient. ------------------------------
     g_dw = g
     if recipe.grads is not None:
-        k = None
-        if key is not None and recipe.grads.round_mode.value == "stochastic":
-            k = key
-        g_dw = fake_quant_nograd(g, recipe.grads, k)
+        g_dw = fake_quant_nograd(g, recipe.grads, k_dw)
     g2 = _flat2d(g_dw)
     x2 = _flat2d(xq)
     dw = jax.lax.dot_general(

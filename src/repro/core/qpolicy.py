@@ -37,18 +37,22 @@ import jax
 import jax.numpy as jnp
 import numpy as _np
 
-from repro.core.qconfig import QuantRecipe, QuantSpec, get_recipe
+from repro.core.qadam import QState
+from repro.core.qconfig import (Granularity, QuantRecipe, QuantSpec,
+                                RoundMode, get_recipe)
 from repro.core.qlinear import (int8_backend_supported, int8_quantized_linear,
                                 quantized_linear)
-from repro.core.quantizer import fake_quant
+from repro.core.quantizer import fake_quant, maybe_fake_quant
 
 # Layer roles understood by the model zoo.  ``embed`` / ``lm_head`` govern the
 # (weight-only) quantization of the embedding table and output head;
 # ``patch_proj`` / ``frame_proj`` are the VLM / audio input adapters;
-# ``shared_proj`` is the zamba2 shared-block down-projection.
+# ``shared_proj`` is the zamba2 shared-block down-projection.  ``kv_cache``
+# governs the *storage* precision of the decode KV cache (int8 payload +
+# per-head-per-position scales, dequant-on-read) -- fp unless a rule names it.
 ROLES = ("embed", "lm_head", "attn_qkv", "attn_out", "mlp_up", "mlp_down",
          "router", "ssm_in", "ssm_out", "shared_proj", "frame_proj",
-         "patch_proj")
+         "patch_proj", "kv_cache")
 
 
 # ---------------------------------------------------------------------------
@@ -79,9 +83,37 @@ register_backend("int8_pallas", int8_quantized_linear,
                  supports=int8_backend_supported)
 
 
+def _prepared_int8_ok(recipe: Optional[QuantRecipe], w: QState) -> bool:
+    """Can the real-int8 MXU kernel consume this prepared weight directly?
+    Needs the full W8A8 contract (symmetric, nearest, unblocked) and a plain
+    2-D payload (stacked / per-expert payloads run the dequant matmul)."""
+    return (int8_backend_supported(recipe) and w.q.ndim == 2
+            and w.q.dtype == jnp.int8)
+
+
+def _prepared_matmul(resolved: "Resolved", x: jnp.ndarray, w: QState,
+                     key) -> jnp.ndarray:
+    """Serving path: the weight arrives as a stored integer payload + scales
+    (quantized ONCE at engine construction -- see ``repro.infer.prepare``), so
+    the trace contains *no* weight quantize step (no absmax reduce, no round).
+    Activations still follow the resolved recipe."""
+    recipe = resolved.recipe
+    a_spec = recipe.acts if recipe is not None else None
+    if (resolved.backend == "int8_pallas" and a_spec is not None
+            and _prepared_int8_ok(recipe, w)):
+        from repro.kernels.ops import int8_prepared_linear   # lazy: pallas
+        return int8_prepared_linear(x, w.q, w.scale, a_spec,
+                                    out_dtype=x.dtype)
+    xq = maybe_fake_quant(x, a_spec, key)
+    wd = ((w.q.astype(jnp.float32) + w.zero) * w.scale).astype(x.dtype)
+    return jnp.matmul(xq, wd)
+
+
 def _dispatch(resolved: "Resolved", x: jnp.ndarray, w: jnp.ndarray,
               key) -> jnp.ndarray:
     recipe = resolved.recipe
+    if isinstance(w, QState):
+        return _prepared_matmul(resolved, x, w, key)
     if recipe is None or not recipe.any_linear_quant:
         return jnp.matmul(x, w)
     try:
@@ -196,7 +228,8 @@ class QuantPolicy:
         rules = ()
         if not (recipe is not None and recipe.include_embeddings):
             rules += (PolicyRule(role="embed"), PolicyRule(role="lm_head"))
-        rules += (PolicyRule(role="patch_proj"), PolicyRule(role="router"))
+        rules += (PolicyRule(role="patch_proj"), PolicyRule(role="router"),
+                  PolicyRule(role="kv_cache"))
         return cls(rules=rules, default=recipe, backend=backend)
 
     # -- optimizer-moment pass-through (duck-types a QuantRecipe) ----------
@@ -222,6 +255,31 @@ class QuantPolicy:
         """Could resolution of ``role`` depend on the layer index?"""
         return any(r.depth_bounded for r in self.rules
                    if r.role in ("*", role))
+
+    def kv_spec(self) -> Optional[QuantSpec]:
+        """Storage spec for the decode KV cache (role ``kv_cache``), or None
+        for fp storage.  The spec is read from the resolved recipe's ``acts``
+        component (falling back to ``weights`` -- cache entries are cached
+        activations): ``kv_cache=a8t`` stores int8 K/V with one scale per
+        (position, head) row.  Per-channel scales cannot key a (B,S,K,1)
+        sidecar buffer and asymmetric/blockwise/stochastic codecs are not
+        plumbed through the cache write, so those specs are rejected."""
+        res = self.resolve("kv_cache")
+        r = res.recipe
+        if r is None:
+            return None
+        spec = r.acts if r.acts is not None else r.weights
+        if spec is None:
+            return None
+        if (spec.granularity is Granularity.PER_CHANNEL
+                or not spec.symmetric or spec.block_size
+                or spec.sqrt_domain
+                or spec.round_mode is not RoundMode.NEAREST):
+            raise ValueError(
+                f"kv_cache spec [{spec.describe()}] unsupported: the cache "
+                "codec is symmetric nearest-rounded per-token (one scale per "
+                "position x head) or per-tensor (per write-block)")
+        return spec
 
     # -- dispatch ----------------------------------------------------------
 
@@ -355,9 +413,10 @@ def _parse_value(spec: str) -> Tuple[Optional[QuantRecipe], Optional[str]]:
     return recipe, backend
 
 
-#: Roles the paper scopes out of block-linear quantization; parse_policy
-#: pins them fp unless a rule names them explicitly (same as from_recipe).
-_DEFAULT_FP_ROLES = ("embed", "lm_head", "patch_proj", "router")
+#: Roles the paper scopes out of block-linear quantization (plus the KV-cache
+#: storage role, which is opt-in); parse_policy pins them fp unless a rule
+#: names them explicitly (same as from_recipe).
+_DEFAULT_FP_ROLES = ("embed", "lm_head", "patch_proj", "router", "kv_cache")
 
 
 def parse_policy(text: str, backend: str = "fake_quant") -> QuantPolicy:

@@ -43,7 +43,9 @@ def _reduce_axes(ndim: int, granularity: Granularity) -> Optional[Tuple[int, ...
     raise ValueError(granularity)
 
 
-def compute_scale_zero(x: jnp.ndarray, spec: QuantSpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def compute_scale_zero(x: jnp.ndarray, spec: QuantSpec,
+                       axes: Optional[Tuple[int, ...]] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Return (scale, zero_point) with keepdims-shaped leading axes.
 
     Symmetric (paper default): s = absmax / P, z = 0.
@@ -51,8 +53,13 @@ def compute_scale_zero(x: jnp.ndarray, spec: QuantSpec) -> Tuple[jnp.ndarray, jn
     z = round(min / s) - N, so min -> N and max -> P.  (The paper's prose
     formula wastes half the signed range; we use the standard full-range
     affine mapping which is what its asymmetric experiment intends.)
+
+    ``axes`` overrides the granularity-derived reduction axes -- used where
+    leading batch/stack dims must each keep their own grid (prepared stacked
+    weights, per-slot KV write blocks) so the scale formula lives here once.
     """
-    axes = _reduce_axes(x.ndim, spec.granularity)
+    if axes is None:
+        axes = _reduce_axes(x.ndim, spec.granularity)
     xf = x.astype(jnp.float32)
     if spec.symmetric:
         absmax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True)

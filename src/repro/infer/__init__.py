@@ -1,0 +1,9 @@
+"""Policy-driven quantized inference: prepared weights, int8 KV cache,
+continuous batching.  See ``repro.infer.engine`` for the architecture."""
+from repro.infer.engine import ENGINE_FAMILIES, Engine, Request, Response
+from repro.infer.prepare import params_nbytes, prepare_params, quantize_weight
+from repro.infer.sampling import SamplingParams, sample
+
+__all__ = ["ENGINE_FAMILIES", "Engine", "Request", "Response",
+           "params_nbytes", "prepare_params", "quantize_weight",
+           "SamplingParams", "sample"]

@@ -1,0 +1,261 @@
+"""Policy-driven quantized inference engine with continuous batching.
+
+``Engine(model, params, policy)`` owns a fixed pool of decode *slots* (rows
+of one batched KV cache / SSM state).  Requests are admitted into free slots
+as they open -- a finished sequence's slot is reused on the very next step
+instead of waiting for the whole batch (continuous batching) -- and every
+admitted request decodes in lock-step through one jitted per-token step.
+
+The quantization story mirrors training's :class:`QuantPolicy`, not a
+parallel config surface:
+
+* **prepared weights** -- at construction the policy is resolved per
+  role/depth and every quantized weight is encoded ONCE into an int8 payload
+  + scales (``repro.infer.prepare``); the jitted decode step consumes stored
+  integers and contains zero weight-quantization ops;
+* **int8 KV cache** -- a policy rule on the ``kv_cache`` role (e.g.
+  ``"kv_cache=a8t,*=w8c"``) switches cache storage to int8 payloads with
+  per-(position, head) scales, dequantized on read;
+* **sampling** -- one :class:`SamplingParams` (greedy / temperature / top-k /
+  top-p) is shared by all requests in the batch and baked into the step.
+
+Per-slot positions: decode runs with a (B,) position vector, so each slot
+writes its own cache row and masks its own history -- a request's tokens are
+independent of which (or how many) neighbours share the batch (asserted by
+``tests/test_infer.py::test_batch_invariance``).
+
+Prompts are right-padded to bucketed lengths for prefill (bounded compile
+count); causal masking makes the pad tail invisible and ``last_pos`` indexes
+the real last-token logits.  Scope: decoder-only families (``dense``,
+``moe``, ``ssm``, ``hybrid``) on a single host; encoder-decoder and VLM
+serving stay on the legacy ``greedy_generate`` loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qpolicy import as_policy
+from repro.infer.prepare import prepare_params
+from repro.infer.sampling import SamplingParams, sample
+
+ENGINE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``eos_id`` stops the sequence when sampled
+    (the eos token is not included in the response's tokens -- this applies
+    to the very first sampled token too)."""
+    tokens: Sequence[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    request_id: Optional[int] = None         # assigned by submit()
+
+
+@dataclasses.dataclass
+class Response:
+    request_id: int
+    prompt: List[int]
+    tokens: List[int]                        # generated, eos excluded
+    finish_reason: str                       # "eos" | "length"
+
+
+@dataclasses.dataclass
+class _Running:
+    req: Request
+    slot: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+
+class Engine:
+    """See module docstring.  ``submit`` enqueues, ``run`` drains the queue
+    and returns the finished :class:`Response` list; ``generate`` is the
+    batch-array convenience used by the ``greedy_generate`` compatibility
+    shim."""
+
+    def __init__(self, model, params, policy=None, *,
+                 max_slots: int = 8, max_seq: int = 256,
+                 sampling: SamplingParams = SamplingParams(),
+                 prepare_weights: bool = True, seed: int = 0,
+                 prefill_bucket: int = 16):
+        cfg = model.cfg
+        if cfg.family not in ENGINE_FAMILIES:
+            raise ValueError(
+                f"Engine serves decoder-only families {ENGINE_FAMILIES}; "
+                f"{cfg.family!r} uses train.serve.greedy_generate")
+        self.model = model
+        self.cfg = cfg
+        self.policy = as_policy(policy)
+        self.sampling = sampling
+        self.max_slots = int(max_slots)
+        self.max_seq = int(max_seq)
+        self.prefill_bucket = int(prefill_bucket)
+        self.params = (prepare_params(cfg, params, self.policy)
+                       if prepare_weights else params)
+        self._dtype = jnp.dtype(cfg.dtype)
+        self._state = model.init_decode_state(
+            self.max_slots, self.max_seq, 0, self._dtype, policy=self.policy)
+
+        self._queue: deque = deque()
+        self._free: List[int] = list(range(self.max_slots))
+        self._running: Dict[int, _Running] = {}
+        self._done: List[Response] = []
+        self._pos = np.zeros((self.max_slots,), np.int32)
+        self._last_tok = np.zeros((self.max_slots,), np.int32)
+        self._next_id = 0
+        self._key = jax.random.PRNGKey(seed)
+
+        def _prefill(params, toks, last_pos):
+            return self.model.prefill(params, {"tokens": toks},
+                                      policy=self.policy,
+                                      max_seq=self.max_seq,
+                                      last_pos=last_pos)
+
+        def _decode(params, state, tok, pos, key):
+            logits, state = self.model.decode(params, state, tok, pos,
+                                              policy=self.policy)
+            return sample(logits, self.sampling, key), state
+
+        def _scatter(state, new, slots):
+            return jax.tree_util.tree_map(
+                lambda buf, n: buf.at[:, slots].set(n.astype(buf.dtype)),
+                state, new)
+
+        self._prefill_jit = jax.jit(_prefill)
+        self._decode_jit = jax.jit(_decode)
+        self._scatter_jit = jax.jit(_scatter)
+
+    # -- public API --------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        toks = [int(t) for t in req.tokens]
+        if not toks:
+            raise ValueError("empty prompt")
+        if len(toks) > self.max_seq - 1:
+            raise ValueError(f"prompt length {len(toks)} needs at least one "
+                             f"decode row in max_seq={self.max_seq}")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req = dataclasses.replace(req, tokens=toks,
+                                  request_id=self._next_id)
+        self._next_id += 1
+        self._queue.append(req)
+        return req.request_id
+
+    def run(self) -> List[Response]:
+        """Drain the queue: admit-on-free until every submitted request has a
+        response.  Returns responses in request_id order."""
+        self._admit()
+        while self._running:
+            self._step()
+            self._admit()
+        done, self._done = self._done, []
+        return sorted(done, key=lambda r: r.request_id)
+
+    def generate(self, prompts, max_new_tokens: int,
+                 eos_id: Optional[int] = None) -> jnp.ndarray:
+        """Uniform-batch convenience matching the ``greedy_generate``
+        contract: (B, max_new_tokens) int32, eos-padded after the stop."""
+        prompts = np.asarray(prompts)
+        ids = [self.submit(Request(tokens=row.tolist(),
+                                   max_new_tokens=max_new_tokens,
+                                   eos_id=eos_id))
+               for row in prompts]
+        by_id = {r.request_id: r for r in self.run()}
+        pad = eos_id if eos_id is not None else 0
+        out = np.full((len(ids), max_new_tokens), pad, np.int32)
+        for i, rid in enumerate(ids):
+            t = by_id[rid].tokens
+            if eos_id is None and len(t) < max_new_tokens:
+                raise ValueError(
+                    f"request {rid} truncated at {len(t)}/{max_new_tokens} "
+                    f"tokens (cache rows exhausted: max_seq={self.max_seq}); "
+                    "grow max_seq or pass eos_id")
+            out[i, :len(t)] = t
+        return jnp.asarray(out)
+
+    def kv_cache_nbytes(self) -> int:
+        """Resident bytes of the decode state (KV caches + SSM states)."""
+        return sum(int(x.size) * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(self._state))
+
+    # -- scheduler internals -----------------------------------------------
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _bucket_len(self, n: int) -> int:
+        b = self.prefill_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.max_seq)
+
+    def _admit(self) -> None:
+        while self._queue and self._free:
+            reqs: List[Request] = []
+            while self._queue and len(reqs) < len(self._free):
+                reqs.append(self._queue.popleft())
+            groups: Dict[int, List[Request]] = {}
+            for r in reqs:
+                groups.setdefault(self._bucket_len(len(r.tokens)),
+                                  []).append(r)
+            for lb, group in groups.items():
+                self._admit_group(lb, group)
+
+    def _admit_group(self, lb: int, group: List[Request]) -> None:
+        n = len(group)
+        slots = [self._free.pop(0) for _ in range(n)]
+        toks = np.zeros((n, lb), np.int32)
+        last = np.zeros((n,), np.int32)
+        for i, r in enumerate(group):
+            toks[i, :len(r.tokens)] = r.tokens
+            last[i] = len(r.tokens) - 1
+        logits, new_state = self._prefill_jit(
+            self.params, jnp.asarray(toks), jnp.asarray(last))
+        self._state = self._scatter_jit(self._state, new_state,
+                                        jnp.asarray(slots, jnp.int32))
+        first = np.asarray(sample(logits, self.sampling, self._next_key()))
+        for i, r in enumerate(group):
+            st = _Running(req=r, slot=slots[i])
+            self._running[slots[i]] = st
+            self._pos[slots[i]] = len(r.tokens)
+            self._last_tok[slots[i]] = int(first[i])
+            # the FIRST sampled token goes through the same eos/length
+            # bookkeeping as every later one
+            self._record(st, int(first[i]))
+
+    def _step(self) -> None:
+        tok = jnp.asarray(self._last_tok[:, None])
+        pos = jnp.asarray(self._pos)
+        nxt, self._state = self._decode_jit(self.params, self._state, tok,
+                                            pos, self._next_key())
+        nxt = np.asarray(nxt)
+        for slot in list(self._running):
+            self._pos[slot] += 1
+            self._last_tok[slot] = int(nxt[slot])
+            st = self._running[slot]
+            self._record(st, int(nxt[slot]))
+            if slot in self._running and self._pos[slot] >= self.max_seq:
+                self._finish(st, "length")       # cache rows exhausted
+
+    def _record(self, st: _Running, tok: int) -> None:
+        if st.req.eos_id is not None and tok == st.req.eos_id:
+            self._finish(st, "eos")
+            return
+        st.tokens.append(tok)
+        if len(st.tokens) >= st.req.max_new_tokens:
+            self._finish(st, "length")
+
+    def _finish(self, st: _Running, reason: str) -> None:
+        del self._running[st.slot]
+        self._free.append(st.slot)
+        self._done.append(Response(request_id=st.req.request_id,
+                                   prompt=list(st.req.tokens),
+                                   tokens=st.tokens, finish_reason=reason))

@@ -1,0 +1,133 @@
+"""Prepared weights: resolve the QuantPolicy once and quantize each weight
+into a stored integer payload + scales at engine construction time.
+
+Training-style quantized serving re-runs fake quantize->dequantize on every
+weight at every decode step -- an absmax reduce, a round, a clip, and two
+multiplies per matmul per token.  At inference the weights never change, so
+the engine quantizes them ONCE here, into :class:`~repro.core.qadam.QState`
+containers (the same payload+scale+zero triple the quantized optimizer
+states use).  ``QuantPolicy.linear`` recognizes a ``QState`` weight and runs
+the dequant-read matmul (or the real-int8 Pallas kernel when the policy's
+backend is ``int8_pallas`` and the recipe fits the W8A8 contract) -- the
+jitted decode step contains no weight quantization ops at all, which
+``tests/test_infer.py`` asserts by counting ``round-nearest`` HLO ops.
+
+Scale layout: quantization reduces over the *input* axis (axis -2) for
+per-channel specs, so a stacked block weight (L, d_in, d_out) gets scales
+(L, 1, d_out) and the layer scan / MoE expert vmap slice payload and scales
+together.  This matches the in-trace ``fake_quant`` grid on each 2-D slice
+exactly, so prepared decode is bit-equivalent to fake-quant decode.
+
+Weights stay raw (fp) when:
+
+* the role resolves to fp (embed / lm-head / router stay fp by default);
+* the policy is depth-banded such that layers of one stacked tensor resolve
+  to different specs (a scanned weight must be uniformly typed);
+* the spec uses a blockwise / sqrt-domain codec (no flat payload layout).
+
+Stochastic-rounding weight specs are prepared with nearest rounding:
+"quantize once" has no noise stream to resample.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qadam import QState, state_nbytes
+from repro.core.qconfig import Granularity, QuantSpec
+from repro.core.qpolicy import QuantPolicy, Resolved, as_policy
+from repro.core.quantizer import compute_scale_zero, storage_dtype
+
+# weight-leaf name -> role, per enclosing module key
+_ATTN_ROLES = {"wq": "attn_qkv", "wk": "attn_qkv", "wv": "attn_qkv",
+               "wo": "attn_out"}
+_MLP_ROLES = {"w_gate": "mlp_up", "w_up": "mlp_up", "w_fc1": "mlp_up",
+              "w_down": "mlp_down", "w_fc2": "mlp_down"}
+# the router is skipped: its call site casts the weight (fp by default)
+_MOE_ROLES = {"w_gate": "mlp_up", "w_up": "mlp_up", "w_down": "mlp_down"}
+_SSM_ROLES = {"in_z": "ssm_in", "in_x": "ssm_in", "in_bc": "ssm_in",
+              "in_dt": "ssm_in", "out_proj": "ssm_out"}
+_MODULE_TABLES = {"attn": _ATTN_ROLES, "cross_attn": _ATTN_ROLES,
+                  "mlp": _MLP_ROLES, "moe": _MOE_ROLES, "ssm": _SSM_ROLES}
+
+
+def quantize_weight(w: jnp.ndarray, spec: QuantSpec) -> QState:
+    """Quantize one weight (possibly stacked: (L, ...) scan dim and/or (E,
+    ...) expert dim ahead of the (d_in, d_out) core) into payload + scales.
+    Reduction runs over the trailing matmul axes only, so every leading index
+    gets its own scale grid -- identical to in-trace fake_quant per slice
+    (same ``compute_scale_zero`` formula, explicit axes)."""
+    xf = w.astype(jnp.float32)
+    if spec.granularity is Granularity.PER_CHANNEL:
+        axes = (-2,)
+    elif spec.granularity is Granularity.PER_TENSOR:
+        axes = (-2, -1)
+    else:                                    # PER_TOKEN: one scale per in-row
+        axes = (-1,)
+    scale, zero = compute_scale_zero(xf, spec, axes=axes)
+    q = jnp.clip(jnp.round(xf / scale) - zero, spec.qmin, spec.qmax)
+    return QState(q.astype(storage_dtype(spec.bits)), scale, zero)
+
+
+def _preparable_spec(res: Optional[Resolved]) -> Optional[QuantSpec]:
+    if res is None or res.recipe is None:
+        return None
+    spec = res.recipe.weights
+    if spec is None or spec.block_size or spec.sqrt_domain:
+        return None
+    return spec
+
+
+def prepare_params(cfg, params: Dict[str, Any], policy) -> Dict[str, Any]:
+    """Return a copy of ``params`` with every weight the policy quantizes
+    replaced by its stored-integer :class:`QState`.  The result is consumed
+    by the unchanged model code: ``policy.linear`` dispatches on the leaf
+    type, ``cast_params`` passes QState through."""
+    policy = as_policy(policy)
+    n_layers = cfg.n_layers
+    # quantize what the model would have quantized: the carrier-precision
+    # (bf16 AMP) view of the weight, so the grid matches in-trace fake_quant
+    # bit-exactly (scales come from the cast values)
+    carrier = jnp.dtype(cfg.dtype)
+
+    def resolve_uniform(role: str, depthful: bool) -> Optional[Resolved]:
+        if not depthful:
+            return policy.resolve(role)
+        rs = [policy.resolve(role, i, n_layers) for i in range(n_layers)]
+        return rs[0] if all(r == rs[0] for r in rs) else None
+
+    def prep(w, role: str, depthful: bool):
+        spec = _preparable_spec(resolve_uniform(role, depthful))
+        return w if spec is None else quantize_weight(w.astype(carrier), spec)
+
+    def prep_module(key: str, sub: Dict[str, Any], depthful: bool):
+        table = _MODULE_TABLES.get(key)
+        if table is None:
+            return sub
+        return {k: (prep(v, table[k], depthful) if k in table else v)
+                for k, v in sub.items()}
+
+    out = dict(params)
+    if "blocks" in out:
+        out["blocks"] = {k: prep_module(k, v, True)
+                         for k, v in out["blocks"].items()}
+    if "shared" in out:                      # zamba2: depth-less shared block
+        shared = {k: prep_module(k, v, False)
+                  for k, v in out["shared"].items()}
+        shared["proj"] = prep(out["shared"]["proj"], "shared_proj", False)
+        out["shared"] = shared
+    if "patch_proj" in out:
+        out["patch_proj"] = prep(out["patch_proj"], "patch_proj", False)
+    return out
+
+
+def params_nbytes(params: Dict[str, Any]) -> int:
+    """Resident bytes of a (possibly prepared) parameter tree."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QState)):
+        total += state_nbytes(leaf) if isinstance(leaf, QState) else \
+            int(leaf.size) * leaf.dtype.itemsize
+    return total

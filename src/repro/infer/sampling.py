@@ -1,0 +1,67 @@
+"""Token sampling surface shared by every request in an engine batch.
+
+One :class:`SamplingParams` (a frozen dataclass, so it hashes into jit
+static args) configures the whole decode batch: greedy when ``temperature ==
+0``, otherwise temperature-scaled categorical with optional top-k and
+nucleus (top-p) truncation.  ``sample`` runs inside the jitted decode step;
+rows of a batch draw independent tokens from one per-step key.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """temperature == 0 -> greedy (argmax; top_k / top_p ignored).
+    top_k == 0 and top_p == 1.0 disable their truncations."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def _top_k_mask(logits: jnp.ndarray, k: int) -> jnp.ndarray:
+    kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
+    return jnp.where(logits >= kth, logits, _NEG)
+
+
+def _top_p_mask(logits: jnp.ndarray, p: float) -> jnp.ndarray:
+    """Nucleus truncation: keep the smallest prefix of descending-probability
+    tokens whose cumulative mass reaches ``p`` (the top-1 token always
+    survives)."""
+    desc = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < p                 # mass *before* this token < p
+    kth = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1, keepdims=True)
+    return jnp.where(logits >= kth, logits, _NEG)
+
+
+def sample(logits: jnp.ndarray, sp: SamplingParams,
+           key: jax.Array) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32 next tokens."""
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k:
+        l = _top_k_mask(l, min(sp.top_k, l.shape[-1]))
+    if sp.top_p < 1.0:
+        l = _top_p_mask(l, sp.top_p)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)

@@ -93,6 +93,32 @@ def int8_linear(x: jnp.ndarray, w: jnp.ndarray, a_spec: QuantSpec,
     return out[:m, :n].reshape(*shape[:-1], n)
 
 
+def int8_prepared_linear(x: jnp.ndarray, wq: jnp.ndarray,
+                         w_scale: jnp.ndarray, a_spec: QuantSpec,
+                         out_dtype=None,
+                         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Real-int8 linear consuming a *pre-quantized* weight: ``wq`` (K, N)
+    int8 payload and ``w_scale`` (1, N) fp32 (quantized once at engine
+    construction, ``repro.infer.prepare``).  Only the activations are
+    quantized in-trace, so the decode step's HLO carries no weight absmax /
+    round -- the serving half of the paper's W8A8 recipe."""
+    interp = _auto_interpret(interpret)
+    out_dtype = out_dtype or x.dtype
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    xq, row_scale, _ = quantize_int(x2, a_spec)     # zero == 0 (symmetric)
+    row_scale = jnp.broadcast_to(row_scale.astype(jnp.float32),
+                                 (x2.shape[0], 1))
+    col_scale = jnp.broadcast_to(w_scale.astype(jnp.float32).reshape(1, -1),
+                                 (1, wq.shape[1]))
+    m, n = xq.shape[0], wq.shape[1]
+    out = _mm.int8_matmul(_pad_to(xq, 128, 128), _pad_to(wq, 128, 128),
+                          _pad_to(row_scale, 128, 1),
+                          _pad_to(col_scale, 1, 128),
+                          out_dtype=out_dtype, interpret=interp)
+    return out[:m, :n].reshape(*shape[:-1], n)
+
+
 @partial(jax.jit, static_argnames=("out_dtype", "interpret"))
 def int8_quantized_matmul(x: jnp.ndarray, w: jnp.ndarray,
                           out_dtype=jnp.bfloat16,

@@ -14,7 +14,10 @@ import jax.numpy as jnp
 
 from jax.ad_checkpoint import checkpoint_name
 
+from repro.core.qconfig import Granularity
 from repro.core.qpolicy import LinearCtx, as_policy
+from repro.core.quantizer import (compute_scale_zero, quantize_int,
+                                  storage_dtype)
 from repro.models.common import ParamSpec, constrain, rmsnorm, rope
 
 
@@ -43,13 +46,55 @@ def attn_spec(cfg, d_in: Optional[int] = None) -> Dict[str, ParamSpec]:
     return spec
 
 
-def init_cache(cfg, batch: int, max_seq: int, dtype, d_in: Optional[int] = None
-               ) -> Dict[str, jnp.ndarray]:
+def init_cache(cfg, batch: int, max_seq: int, dtype, d_in: Optional[int] = None,
+               kv_spec=None) -> Dict[str, jnp.ndarray]:
+    """KV cache buffers for one layer.  ``kv_spec`` (a symmetric QuantSpec,
+    from ``policy.kv_spec()``) switches storage to integer payloads plus fp32
+    per-(position, head) scale sidecars -- dequantized on read, so the
+    resident cache is ~1/2 (bf16) to ~1/4 (fp32) the size."""
     k, hd = cfg.n_kv_heads, cfg.head_dim
+    if kv_spec is not None:
+        qdt = storage_dtype(kv_spec.bits)
+        return {
+            "k": jnp.zeros((batch, max_seq, k, hd), qdt),
+            "v": jnp.zeros((batch, max_seq, k, hd), qdt),
+            "k_scale": jnp.zeros((batch, max_seq, k, 1), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_seq, k, 1), jnp.float32),
+        }
     return {
         "k": jnp.zeros((batch, max_seq, k, hd), dtype),
         "v": jnp.zeros((batch, max_seq, k, hd), dtype),
     }
+
+
+def _kv_quant(t: jnp.ndarray, spec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize new K/V rows (B, s, K, hd) for cache storage.  Per-token
+    specs give one scale per (batch, position, head); per-tensor specs give
+    one scale per *slot's* write block (never reducing over the batch axis:
+    a request's stored precision must not depend on its batch neighbours)."""
+    if spec.granularity is Granularity.PER_TENSOR:
+        xf = t.astype(jnp.float32)
+        scale, _ = compute_scale_zero(xf, spec, axes=(1, 2, 3))  # (B,1,1,1)
+        q = jnp.clip(jnp.round(xf / scale), spec.qmin,
+                     spec.qmax).astype(storage_dtype(spec.bits))
+    else:
+        q, scale, _ = quantize_int(t, spec)
+    scale = jnp.broadcast_to(scale.astype(jnp.float32), t.shape[:-1] + (1,))
+    return q, scale
+
+
+def _cache_update(buf: jnp.ndarray, rows: jnp.ndarray,
+                  offset) -> jnp.ndarray:
+    """Write ``rows`` (B, s, ...) into ``buf`` (B, S_max, ...) at ``offset``:
+    a scalar (all rows at one position -- the uniform-batch path) or a (B,)
+    vector of per-slot positions (continuous batching)."""
+    off = jnp.asarray(offset)
+    if off.ndim == 0:
+        return jax.lax.dynamic_update_slice(
+            buf, rows, (0, off) + (0,) * (buf.ndim - 2))
+    def one(b, r, o):
+        return jax.lax.dynamic_update_slice(b, r, (o,) + (0,) * (b.ndim - 1))
+    return jax.vmap(one)(buf, rows, off)
 
 
 MAX_DENSE_Q = 1024        # q-chunk length for the memory-bounded path
@@ -87,8 +132,10 @@ def _attend_block(qg, k, v, mask_b) -> jnp.ndarray:
                         preferred_element_type=jnp.float32)
     scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
     if mask_b is not None:
-        if mask_b.ndim == 2:
+        if mask_b.ndim == 2:                 # (Sq, Skv) shared across batch
             mask_b = mask_b[None, None, None]
+        elif mask_b.ndim == 3:               # (B, Sq, Skv) per-slot masks
+            mask_b = mask_b[:, None, None]
         scores = jnp.where(mask_b, scores, jnp.asarray(-1e30, scores.dtype))
     probs = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
@@ -234,22 +281,41 @@ def attn_apply(params, x: jnp.ndarray, cfg, *,
     if cfg.pos == "rope" and kv_source is None:
         q = rope(q, positions, cfg.rope_theta)
         kv_pos = positions if cache is None else (
-            cache_offset + jnp.arange(s)[None, :])
+            jnp.asarray(cache_offset).reshape(-1, 1) + jnp.arange(s)[None, :])
         k = rope(k, kv_pos, cfg.rope_theta)
     elif cfg.pos == "rope":
         q = rope(q, positions, cfg.rope_theta)
 
     new_cache = None
     if cache is not None:
-        # decode / incremental: write rows at cache_offset, attend over buffer
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, cache_offset, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, cache_offset, 0, 0))
-        ck = constrain(ck, rules, "batch", "kv_seq", "kv", None)
-        cv = constrain(cv, rules, "batch", "kv_seq", "kv", None)
-        new_cache = {"k": ck, "v": cv}
-        k, v = ck, cv
+        # decode / incremental: write rows at cache_offset (scalar, or (B,)
+        # per-slot offsets under continuous batching), attend over buffer
+        if "k_scale" in cache:
+            # int8 KV storage (role ``kv_cache``): quantize the new rows,
+            # store payload + per-(position, head) scales, dequant the whole
+            # buffer for the attention read
+            kv_spec = policy.kv_spec()
+            kq, ks = _kv_quant(k, kv_spec)
+            vq, vs = _kv_quant(v, kv_spec)
+            new_cache = {
+                "k": _cache_update(cache["k"], kq, cache_offset),
+                "v": _cache_update(cache["v"], vq, cache_offset),
+                "k_scale": _cache_update(cache["k_scale"], ks, cache_offset),
+                "v_scale": _cache_update(cache["v_scale"], vs, cache_offset),
+            }
+            k = (new_cache["k"].astype(jnp.float32)
+                 * new_cache["k_scale"]).astype(x.dtype)
+            v = (new_cache["v"].astype(jnp.float32)
+                 * new_cache["v_scale"]).astype(x.dtype)
+        else:
+            ck = _cache_update(cache["k"], k.astype(cache["k"].dtype),
+                               cache_offset)
+            cv = _cache_update(cache["v"], v.astype(cache["v"].dtype),
+                               cache_offset)
+            ck = constrain(ck, rules, "batch", "kv_seq", "kv", None)
+            cv = constrain(cv, rules, "batch", "kv_seq", "kv", None)
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
 
     ctx = _gqa_attend(q, k, v, mask, rules,
                       impl=getattr(cfg, "attention_impl", "xla"))

@@ -90,12 +90,18 @@ def constrain(x: jnp.ndarray, rules, *logical_axes) -> jnp.ndarray:
 
 def cast_params(params: PyTree, dtype) -> PyTree:
     """Carrier-precision cast (bf16 AMP): float leaves only; int payloads and
-    anything already matching pass through."""
+    anything already matching pass through.  Prepared quantized weights
+    (``QState`` payload + fp32 scale sidecars, see ``repro.infer.prepare``)
+    are opaque: casting their scales to bf16 would change the dequant grid."""
+    from repro.core.qadam import QState
     def cast(x):
+        if isinstance(x, QState):
+            return x
         if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype != dtype:
             return x.astype(dtype)
         return x
-    return jax.tree_util.tree_map(cast, params)
+    return jax.tree_util.tree_map(
+        cast, params, is_leaf=lambda x: isinstance(x, QState))
 
 
 # ---------------------------------------------------------------------------

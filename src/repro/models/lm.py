@@ -313,12 +313,14 @@ def lm_loss(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
 # Serving: prefill + decode
 # ---------------------------------------------------------------------------
 
-def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype):
-    """Stacked decode state for the whole stack."""
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype,
+                kv_spec=None):
+    """Stacked decode state for the whole stack.  ``kv_spec`` (from
+    ``policy.kv_spec()``) selects int8 KV storage; fp is the default."""
     caches = None
     ssm_states = None
     if cfg.family in ("dense", "moe", "vlm"):
-        one = init_cache(cfg, batch, max_seq, dtype)
+        one = init_cache(cfg, batch, max_seq, dtype, kv_spec=kv_spec)
         caches = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), one)
     elif cfg.family == "ssm":
@@ -327,7 +329,7 @@ def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype):
             lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), one)
     elif cfg.family == "hybrid":
         groups = cfg.n_layers // cfg.hybrid_attn_every
-        one = init_cache(cfg, batch, max_seq, dtype)
+        one = init_cache(cfg, batch, max_seq, dtype, kv_spec=kv_spec)
         caches = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (groups,) + x.shape).copy(), one)
         s_one = init_ssm_state(cfg, batch, dtype)
@@ -338,9 +340,16 @@ def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype):
 
 
 def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
-               policy=None, rules=None, max_seq: Optional[int] = None):
+               policy=None, rules=None, max_seq: Optional[int] = None,
+               last_pos=None):
     """Process the full prompt; returns (last_logits (B,V), caches, ssm_states).
-    Cache buffers sized to max_seq (defaults to prompt length)."""
+    Cache buffers sized to max_seq (defaults to prompt length).
+
+    ``last_pos`` selects which position's logits are returned: None (default)
+    takes the final row; a scalar or per-row (B,) index supports right-padded
+    prompts (the serving engine pads prompts to bucketed lengths -- causal
+    masking makes the pad tail invisible to positions <= last_pos).  Indices
+    are into the full hidden sequence (VLM callers account for patch rows)."""
     policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
@@ -368,7 +377,8 @@ def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
         mask_full = {"kind": "causal"}
     h = constrain(h, rules, "batch", "seq", None)
 
-    caches, ssm_states = init_caches(cfg, b, max_seq, dtype)
+    caches, ssm_states = init_caches(cfg, b, max_seq, dtype,
+                                     kv_spec=policy.kv_spec())
     mask = None
     if cfg.family != "ssm":
         mask = mask_full
@@ -377,19 +387,34 @@ def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
         mask=mask, caches=caches, cache_offset=0, ssm_states=ssm_states,
         emb0=h)
     h = apply_norm(h, params["final_norm"], cfg.norm)
-    logits = logits_chunk(params, h[:, -1:, :], cfg, policy)[:, 0, :]
+    if last_pos is None:
+        hc = h[:, -1:, :]
+    else:
+        lp = jnp.asarray(last_pos, jnp.int32)
+        if lp.ndim == 0:
+            hc = jax.lax.dynamic_slice_in_dim(h, lp, 1, axis=1)
+        else:                                    # (B,) per-row last indices
+            hc = h[jnp.arange(b)[:, None], lp[:, None], :]
+    logits = logits_chunk(params, hc, cfg, policy)[:, 0, :]
     return logits, caches, ssm_states
 
 
 def lm_decode(params, caches, ssm_states, token: jnp.ndarray,
               pos: jnp.ndarray, cfg: ArchConfig, *, policy=None, rules=None):
-    """One-token decode.  token: (B,1) int32; pos: scalar int32 (number of
-    tokens already in the cache).  Returns (logits (B,V), caches, ssm_states)."""
+    """One-token decode.  token: (B,1) int32; pos: the number of tokens
+    already in the cache -- a scalar int32 (uniform batch, the legacy path)
+    or a (B,) vector of per-slot positions (continuous batching: each slot
+    writes its cache row and masks its history independently).
+    Returns (logits (B,V), caches, ssm_states)."""
     policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
     b = token.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        positions = pos[:, None]                            # (B, 1)
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
     h = embed_tokens(params, token, cfg, positions=positions, dtype=dtype,
                      policy=policy)
 
@@ -397,7 +422,11 @@ def lm_decode(params, caches, ssm_states, token: jnp.ndarray,
     if cfg.family != "ssm":
         max_seq = (jax.tree_util.tree_leaves(caches)[0].shape
                    [2])                                     # (L,B,S,K,hd)
-        mask = (jnp.arange(max_seq) <= pos)[None, :]        # (1, max_seq)
+        if pos.ndim == 1:                                   # (B, 1, max_seq)
+            mask = (jnp.arange(max_seq)[None, None, :]
+                    <= pos[:, None, None])
+        else:
+            mask = (jnp.arange(max_seq) <= pos)[None, :]    # (1, max_seq)
     h, caches, ssm_states, _, _ = run_stack(
         params, h, cfg, policy=policy, rules=rules, positions=positions,
         mask=mask, caches=caches, cache_offset=pos, ssm_states=ssm_states,

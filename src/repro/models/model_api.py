@@ -27,9 +27,9 @@ class Model(NamedTuple):
     init_params: Callable            # (key, dtype=f32) -> params
     axes: Any                        # logical-axes tree matching params
     train_loss: Callable             # (params, batch, *, recipe/policy, rules, rng)
-    prefill: Callable                # (params, batch, *, recipe/policy, rules) -> (logits, state)
-    decode: Callable                 # (params, state, token, pos, *, recipe/policy, rules)
-    init_decode_state: Callable      # (batch, max_seq, dtype) -> state tree
+    prefill: Callable                # (params, batch, *, recipe/policy, rules, max_seq, last_pos) -> (logits, state)
+    decode: Callable                 # (params, state, token, pos, *, recipe/policy, rules); pos: scalar or (B,)
+    init_decode_state: Callable      # (batch, max_seq, enc_len, dtype, policy) -> state tree
 
 
 def _pick(policy, recipe):
@@ -47,7 +47,10 @@ def build_model(cfg: ArchConfig) -> Model:
                                   rules=rules, rng=rng)
 
         def prefill(params, batch, *, recipe=None, policy=None, rules=None,
-                    max_seq=None):
+                    max_seq=None, last_pos=None):
+            if last_pos is not None:
+                raise NotImplementedError(
+                    "last_pos (bucketed-prompt prefill) is decoder-only")
             logits, cache = ed.encdec_prefill(params, batch, cfg,
                                               policy=_pick(policy, recipe),
                                               rules=rules, max_seq=max_seq)
@@ -59,7 +62,9 @@ def build_model(cfg: ArchConfig) -> Model:
                                     policy=_pick(policy, recipe), rules=rules)
 
         def init_decode_state(batch: int, max_seq: int, enc_len: int,
-                              dtype=jnp.bfloat16):
+                              dtype=jnp.bfloat16, policy=None):
+            if policy is not None and as_policy(policy).kv_spec() is not None:
+                raise NotImplementedError("int8 KV cache is decoder-only")
             kh, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
             kv = lambda s: {"k": jnp.zeros((L, batch, s, kh, hd), dtype),
                             "v": jnp.zeros((L, batch, s, kh, hd), dtype)}
@@ -74,10 +79,11 @@ def build_model(cfg: ArchConfig) -> Model:
                               rng=rng)
 
         def prefill(params, batch, *, recipe=None, policy=None, rules=None,
-                    max_seq=None):
+                    max_seq=None, last_pos=None):
             logits, caches, ssm = lm.lm_prefill(params, batch, cfg,
                                                 policy=_pick(policy, recipe),
-                                                rules=rules, max_seq=max_seq)
+                                                rules=rules, max_seq=max_seq,
+                                                last_pos=last_pos)
             return logits, {"caches": caches, "ssm": ssm}
 
         def decode(params, state, token, pos, *, recipe=None, policy=None,
@@ -88,8 +94,11 @@ def build_model(cfg: ArchConfig) -> Model:
             return logits, {"caches": caches, "ssm": ssm}
 
         def init_decode_state(batch: int, max_seq: int, enc_len: int = 0,
-                              dtype=jnp.bfloat16):
-            caches, ssm = lm.init_caches(cfg, batch, max_seq, dtype)
+                              dtype=jnp.bfloat16, policy=None):
+            kv_spec = as_policy(policy).kv_spec() if policy is not None \
+                else None
+            caches, ssm = lm.init_caches(cfg, batch, max_seq, dtype,
+                                         kv_spec=kv_spec)
             return {"caches": caches, "ssm": ssm}
 
     def init_params(key, dtype=jnp.float32):

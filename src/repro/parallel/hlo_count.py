@@ -325,6 +325,23 @@ def count_module(hlo: str, n_devices: int = 256) -> Dict[str, float]:
     return out
 
 
+def count_ops(hlo: str, prefix: str) -> int:
+    """Static count of instructions whose op name starts with ``prefix``,
+    across every computation (fusion bodies, loop bodies, the entry).  Not
+    loop-multiplied -- this answers "does the compiled program contain op X
+    at all", e.g. asserting a prepared-weights decode step holds zero
+    ``round-nearest`` ops (no in-trace weight quantization)."""
+    comps = parse_module(hlo)
+    n = 0
+    for name, instrs in comps.items():
+        if name == "__entry__":          # alias of the ENTRY computation
+            continue
+        for ins in instrs:
+            if ins.op.startswith(prefix):
+                n += 1
+    return n
+
+
 def top_contributors(hlo: str, n_devices: int = 256, top: int = 20):
     """Debug: (multiplied) byte contributions per instruction, descending."""
     comps = parse_module(hlo)

@@ -1,9 +1,10 @@
 from repro.train.loop import LoopConfig, Trainer
-from repro.train.serve import greedy_generate
+from repro.train.serve import greedy_generate, greedy_generate_reference
 from repro.train.step import (TrainState, batch_shardings, init_train_state,
                               make_eval_step, make_train_step,
                               state_shardings)
 
-__all__ = ["LoopConfig", "Trainer", "greedy_generate", "TrainState",
-           "batch_shardings", "init_train_state", "make_eval_step",
-           "make_train_step", "state_shardings"]
+__all__ = ["LoopConfig", "Trainer", "greedy_generate",
+           "greedy_generate_reference", "TrainState", "batch_shardings",
+           "init_train_state", "make_eval_step", "make_train_step",
+           "state_shardings"]

@@ -1,13 +1,13 @@
-"""Batched serving: prefill + greedy decode with per-sequence stopping.
-
-The decode loop is a jitted ``lax.while_loop``-free simple fori over steps
-(fixed budget) -- production serving would wrap this in a scheduler; here it
-backs the examples, serving tests, and serve-shape dry-runs.
+"""Batched serving: ``greedy_generate`` is now a thin compatibility shim
+over :class:`repro.infer.Engine` (prepared weights, per-slot positions,
+admit-on-free scheduling).  Families the engine does not serve yet
+(encoder-decoder, VLM) and sharded serving (``rules``) fall back to the
+legacy jitted fori loop, kept here as :func:`greedy_generate_reference` --
+it is also the parity oracle for the engine tests.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,32 @@ def greedy_generate(model: Model, params, batch: Dict, max_new_tokens: int,
 
     ``recipe`` accepts the full policy surface (None / QuantRecipe /
     QuantPolicy / policy string) -- e.g. a per-layer int8 policy for
-    quantized serving."""
+    quantized serving.  Decoder-only unsharded calls route through the
+    inference engine, so quantized weights are prepared once (stored int8
+    payloads) instead of fake-quantized at every decode step."""
+    from repro.infer import ENGINE_FAMILIES, Engine
+
+    prompt = batch["tokens"]
+    b, s = prompt.shape
+    total = (max_seq or (s + max_new_tokens))
+
+    if (rules is None and model.cfg.family in ENGINE_FAMILIES
+            and set(batch) == {"tokens"}):
+        eng = Engine(model, params, recipe, max_slots=b, max_seq=total)
+        return eng.generate(prompt, max_new_tokens, eos_id=eos_id)
+    return greedy_generate_reference(model, params, batch, max_new_tokens,
+                                     recipe=recipe, rules=rules,
+                                     eos_id=eos_id, max_seq=max_seq)
+
+
+def greedy_generate_reference(model: Model, params, batch: Dict,
+                              max_new_tokens: int, *, recipe=None, rules=None,
+                              eos_id: Optional[int] = None,
+                              max_seq: Optional[int] = None) -> jnp.ndarray:
+    """Legacy fixed-budget fori loop (scheduler-free).  Every emitted token
+    -- including the first, sampled from the prefill logits -- passes the
+    eos done-mask before emission: once a sequence emits ``eos_id``, every
+    later position is ``eos_id``."""
     prompt = batch["tokens"]
     b, s = prompt.shape
     total = (max_seq or (s + max_new_tokens))
@@ -36,12 +61,13 @@ def greedy_generate(model: Model, params, batch: Dict, max_new_tokens: int,
 
     def step(carry, i):
         state, tok, done = carry
+        # consult the done mask BEFORE emitting (covers the first token)
+        if eos_id is not None:
+            tok = jnp.where(done[:, None], jnp.full_like(tok, eos_id), tok)
+            done = done | (tok[:, 0] == eos_id)
         logits, state = model.decode(params, state, tok, base_pos + i,
                                      recipe=recipe, rules=rules)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        if eos_id is not None:
-            done = done | (tok[:, 0] == eos_id)
-            nxt = jnp.where(done[:, None], jnp.full_like(nxt, eos_id), nxt)
         return (state, nxt, done), tok[:, 0]
 
     done0 = jnp.zeros((b,), bool)

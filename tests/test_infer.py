@@ -1,0 +1,334 @@
+"""Inference-engine tests: prepared weights, int8 KV cache, continuous
+batching, sampling, and the serving compatibility shim.
+
+The parity and HLO assertions run the gpt2-small smoke config with a float32
+carrier: in f32 the prepared-weights dequant grid is bit-identical to
+in-trace fake quantization, so greedy outputs must match the legacy loop
+exactly (bf16 carriers agree only to rounding noise -- fusion order differs
+between the two graphs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (QState, QuantPolicy, QuantRecipe, QuantSpec,
+                        Granularity, RoundMode, as_policy, paper_recipe,
+                        parse_policy)
+from repro.infer import (Engine, Request, SamplingParams, params_nbytes,
+                         prepare_params, sample)
+from repro.models import build_model
+from repro.train import greedy_generate, greedy_generate_reference
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(dtype="float32"):
+    cfg = dataclasses.replace(get_smoke_config("gpt2-small"), dtype=dtype)
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def gpt2():
+    return _setup()
+
+
+# ---------------------------------------------------------------------------
+# Prepared weights
+# ---------------------------------------------------------------------------
+
+def test_prepare_quantizes_policy_scoped_roles(gpt2):
+    cfg, model, params = gpt2
+    prep = prepare_params(cfg, params, "*=w8c")
+    wq = prep["blocks"]["attn"]["wq"]
+    assert isinstance(wq, QState)
+    assert wq.q.dtype == jnp.int8
+    # stacked layout: per-layer per-out-channel scales
+    assert wq.q.shape == params["blocks"]["attn"]["wq"].shape
+    assert wq.scale.shape == (cfg.n_layers, 1, wq.q.shape[-1])
+    # fp-scoped roles stay raw
+    assert not isinstance(prep["embed"], QState)
+    assert params_nbytes(prep) < params_nbytes(params)
+
+
+def test_prepare_skips_depth_banded_stacks(gpt2):
+    cfg, model, params = gpt2
+    prep = prepare_params(cfg, params, "block[0:1].*=fp,*=w8c")
+    # mixed-depth resolution -> the stacked weight cannot be uniformly typed
+    assert not isinstance(prep["blocks"]["attn"]["wq"], QState)
+
+
+def test_prepared_matches_fake_quant_grid(gpt2):
+    """Dequantized prepared weights == in-trace fake_quant, bit-exact."""
+    from repro.core import fake_quant_nograd
+    cfg, model, params = gpt2
+    prep = prepare_params(cfg, params, "*=w8c")
+    w = params["blocks"]["attn"]["wq"]
+    qs = prep["blocks"]["attn"]["wq"]
+    spec = QuantSpec(8, Granularity.PER_CHANNEL)
+    for layer in (0, cfg.n_layers - 1):
+        ref = fake_quant_nograd(w[layer], spec)
+        deq = ((qs.q[layer].astype(jnp.float32) + qs.zero[layer])
+               * qs.scale[layer]).astype(w.dtype)
+        assert jnp.array_equal(ref, deq)
+
+
+def test_prepared_decode_has_no_weight_quant_ops(gpt2):
+    """Acceptance criterion: with an int8 weight policy the jitted decode
+    step contains ZERO quantize ops (no rounds) -- weights enter as stored
+    integer payloads + scales.  The legacy qdq path keeps its rounds."""
+    from repro.parallel.hlo_count import count_ops
+    cfg, model, params = gpt2
+    policy = as_policy("*=w8c")
+    prep = prepare_params(cfg, params, policy)
+    state = model.init_decode_state(2, 16, 0, jnp.float32)
+    tok = jnp.ones((2, 1), jnp.int32)
+    pos = jnp.full((2,), 4, jnp.int32)
+
+    def dec(p, s, t, q):
+        return model.decode(p, s, t, q, policy=policy)
+
+    prepared = jax.jit(dec).lower(prep, state, tok, pos).compile().as_text()
+    legacy = jax.jit(dec).lower(params, state, tok, pos).compile().as_text()
+    assert count_ops(prepared, "round-nearest") == 0
+    assert count_ops(legacy, "round-nearest") > 0
+
+
+def test_engine_parity_with_legacy_greedy(gpt2):
+    """Engine greedy decode == legacy fori-loop, fp and W8A8 policies."""
+    cfg, model, params = gpt2
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0,
+                                cfg.vocab_size)
+    for recipe in (None, paper_recipe(), "*=w8c"):
+        ref = greedy_generate_reference(model, params, {"tokens": prompt}, 6,
+                                        recipe=recipe, max_seq=14)
+        eng = greedy_generate(model, params, {"tokens": prompt}, 6,
+                              recipe=recipe, max_seq=14)
+        assert np.array_equal(np.asarray(ref), np.asarray(eng)), recipe
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache
+# ---------------------------------------------------------------------------
+
+def test_int8_kv_cache_logit_tolerance(gpt2):
+    """int8-KV decode tracks fp-KV decode within the documented tolerance
+    (|logit diff| < 0.5 on the untrained f32 smoke config; see README) while
+    actually quantizing (nonzero difference, smaller cache)."""
+    cfg, model, params = gpt2
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    pf = as_policy("*=w8c")
+    pq = as_policy("kv_cache=a8t,*=w8c")
+    l1, s1 = model.prefill(params, {"tokens": prompt}, policy=pf, max_seq=16)
+    l2, s2 = model.prefill(params, {"tokens": prompt}, policy=pq, max_seq=16)
+    tok = jnp.argmax(l1, -1)[:, None].astype(jnp.int32)
+    d1, _ = model.decode(params, s1, tok, jnp.int32(12), policy=pf)
+    d2, _ = model.decode(params, s2, tok, jnp.int32(12), policy=pq)
+    diff = float(jnp.max(jnp.abs(d1 - d2)))
+    assert 0.0 < diff < 0.5, diff
+    # storage really is int8 + scale sidecars, and smaller than fp
+    kc = s2["caches"]
+    assert kc["k"].dtype == jnp.int8 and "k_scale" in kc
+    int8_bytes = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree_util.tree_leaves(s2))
+    fp_bytes = sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(s1))
+    assert int8_bytes < fp_bytes
+
+
+def test_kv_cache_role_fp_by_default():
+    # legacy recipes / wildcard policies must NOT quantize the cache
+    assert QuantPolicy.from_recipe(paper_recipe()).kv_spec() is None
+    assert parse_policy("*=w8c+a8t").kv_spec() is None
+    spec = parse_policy("kv_cache=a8t,*=w8c").kv_spec()
+    assert spec is not None and spec.bits == 8
+    with pytest.raises(ValueError):
+        parse_policy("kv_cache=a8c,*=fp").kv_spec()   # per-channel scales
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+def test_batch_invariance(gpt2):
+    """A request's greedy tokens are identical whether it runs alone or
+    shares slots with neighbours of different lengths."""
+    cfg, model, params = gpt2
+    req = [5, 6, 7, 8]
+
+    eng = Engine(model, params, "*=w8c", max_slots=4, max_seq=32, seed=3)
+    eng.submit(Request(tokens=req, max_new_tokens=6))
+    alone = eng.run()[0].tokens
+
+    eng = Engine(model, params, "*=w8c", max_slots=4, max_seq=32, seed=9)
+    ids = [eng.submit(Request(tokens=list(t), max_new_tokens=6))
+           for t in ([1, 2], req, [9, 10, 11], [3, 1, 4, 1, 5], [2, 7, 1, 8])]
+    crowded = {r.request_id: r.tokens for r in eng.run()}[ids[1]]
+    assert alone == crowded
+
+
+def test_batch_invariance_per_tensor_kv(gpt2):
+    """Per-tensor KV specs scale per *slot* write block -- a request's
+    stored precision (hence tokens) never depends on batch neighbours."""
+    cfg, model, params = gpt2
+    req = [5, 6, 7, 8]
+    pol = "kv_cache=a8n,*=fp"
+    eng = Engine(model, params, pol, max_slots=3, max_seq=24)
+    eng.submit(Request(tokens=req, max_new_tokens=5))
+    alone = eng.run()[0].tokens
+    eng = Engine(model, params, pol, max_slots=3, max_seq=24)
+    ids = [eng.submit(Request(tokens=list(t), max_new_tokens=5))
+           for t in ([200, 201], req, [9, 10, 11])]
+    crowded = {r.request_id: r.tokens for r in eng.run()}[ids[1]]
+    assert alone == crowded
+
+
+def test_generate_raises_on_cache_truncation(gpt2):
+    """generate() must not fabricate pad tokens when the cache runs out."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=10)
+    with pytest.raises(ValueError, match="truncated"):
+        eng.generate(np.arange(8)[None, :] % cfg.vocab_size, 8)
+
+
+def test_slot_turnover_and_finish_reasons(gpt2):
+    """More requests than slots: admit-on-free recycles slots; eos and
+    length finishes are reported; responses come back in submit order."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=2, max_seq=32)
+    probe = Engine(model, params, max_slots=1, max_seq=32)
+    probe.submit(Request(tokens=[1, 2, 3], max_new_tokens=1))
+    eos = probe.run()[0].tokens[0]           # force an eos hit on request 0
+
+    ids = [eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=5,
+                              eos_id=eos))]
+    for t in ([4, 5], [6, 7, 8, 9], [2, 2], [3, 1]):
+        ids.append(eng.submit(Request(tokens=list(t), max_new_tokens=4)))
+    out = eng.run()
+    assert [r.request_id for r in out] == sorted(ids)
+    by_id = {r.request_id: r for r in out}
+    assert by_id[ids[0]].finish_reason == "eos"
+    assert by_id[ids[0]].tokens == []        # eos was the FIRST sampled token
+    for rid in ids[1:]:
+        assert by_id[rid].finish_reason == "length"
+        assert len(by_id[rid].tokens) == 4
+
+
+def test_first_token_eos_regression(gpt2):
+    """Regression (legacy path): the first sampled token honours eos_id --
+    when the prefill argmax is the eos, the whole row is eos."""
+    cfg, model, params = gpt2
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    free = greedy_generate_reference(model, params, {"tokens": prompt}, 5,
+                                     max_seq=13)
+    eos = int(free[0, 0])
+    for fn in (greedy_generate_reference, greedy_generate):
+        out = np.asarray(fn(model, params, {"tokens": prompt}, 5,
+                            eos_id=eos, max_seq=13))
+        assert (out[0] == eos).all(), out[0]
+        # rows stopping mid-way pad with eos after the stop
+        row = out[1]
+        stops = np.where(row == eos)[0]
+        if stops.size:
+            assert (row[stops[0]:] == eos).all()
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "granite-moe-3b-a800m"])
+def test_engine_other_families(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    eng = Engine(model, params, "*=w8c", max_slots=2, max_seq=24)
+    eng.submit(Request(tokens=[1, 2, 3, 4], max_new_tokens=4))
+    eng.submit(Request(tokens=[5, 6], max_new_tokens=3))
+    out = eng.run()
+    assert [len(r.tokens) for r in out] == [4, 3]
+
+
+def test_engine_rejects_unsupported(gpt2):
+    cfg, model, params = gpt2
+    enc = build_model(get_smoke_config("seamless-m4t-medium"))
+    with pytest.raises(ValueError):
+        Engine(enc, None)
+    eng = Engine(model, params, max_slots=1, max_seq=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(tokens=[], max_new_tokens=1))
+    with pytest.raises(ValueError):
+        eng.submit(Request(tokens=list(range(8)), max_new_tokens=1))
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+def test_sampling_params():
+    logits = jnp.asarray([[0.0, 3.0, 1.0, 2.0], [5.0, 0.0, 1.0, 0.5]])
+    key = jax.random.PRNGKey(0)
+    assert sample(logits, SamplingParams(), key).tolist() == [1, 0]
+    # top_k=1 at any temperature is greedy
+    t = sample(logits, SamplingParams(temperature=2.0, top_k=1), key)
+    assert t.tolist() == [1, 0]
+    # tiny top_p keeps only the argmax nucleus
+    t = sample(logits, SamplingParams(temperature=1.0, top_p=1e-6), key)
+    assert t.tolist() == [1, 0]
+    # temperature sampling stays within top-k support
+    sp = SamplingParams(temperature=1.0, top_k=2)
+    draws = {int(sample(logits, sp, jax.random.PRNGKey(i))[0])
+             for i in range(32)}
+    assert draws <= {1, 3}
+    # top_k beyond the vocab clamps instead of raising
+    t = sample(logits, SamplingParams(temperature=1.0, top_k=50), key)
+    assert all(0 <= int(v) < logits.shape[-1] for v in t)
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+
+
+def test_engine_temperature_sampling(gpt2):
+    """Stochastic sampling produces valid tokens and differs across seeds."""
+    cfg, model, params = gpt2
+    outs = []
+    for seed in (0, 1):
+        eng = Engine(model, params, max_slots=1, max_seq=24, seed=seed,
+                     sampling=SamplingParams(temperature=1.0, top_k=50))
+        eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=8))
+        outs.append(eng.run()[0].tokens)
+    assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
+    assert outs[0] != outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Backward-path stochastic-rounding keys (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_qlinear_bwd_independent_stochastic_keys():
+    """With both gradient paths stochastic, the dx and dW noise streams are
+    independent (derived subkeys), and seeded runs stay deterministic."""
+    from repro.core.qlinear import quantized_linear
+    spec = QuantSpec(8, Granularity.PER_TOKEN, round_mode=RoundMode.STOCHASTIC)
+    recipe = QuantRecipe(grads=spec, grads_dx=spec)
+    x = jnp.eye(64) * 0.773
+    w = jnp.eye(64)
+
+    def loss(x, w, key):
+        return jnp.sum(quantized_linear(x, w, recipe, key) * _G)
+
+    _G = jax.random.normal(jax.random.PRNGKey(7), (64, 64)) * 0.371
+    key = jax.random.PRNGKey(0)
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w, key)
+    dx2, dw2 = jax.grad(loss, argnums=(0, 1))(x, w, key)
+    assert jnp.array_equal(dx, dx2) and jnp.array_equal(dw, dw2)
+    # w == I and x == 0.773*I (weights/acts unquantized here), so
+    # dx == qdq_dx(G) and dw == 0.773 * qdq_dw(G): a shared key would make
+    # the two quantized-G draws coincide elementwise
+    assert not jnp.allclose(dx, dw / 0.773, atol=1e-6)
+    # different parent keys -> different noise
+    dx3, _ = jax.grad(loss, argnums=(0, 1))(x, w, jax.random.PRNGKey(1))
+    assert not jnp.array_equal(dx, dx3)
