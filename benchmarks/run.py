@@ -126,6 +126,19 @@ def bench_train_steps() -> None:
             "mini gpt2 b8 s128")
 
 
+def bench_train_throughput() -> None:
+    """Training fast paths: fp vs fake-quant vs int8-fwd vs int8-fwd+bwd
+    (step time, tokens/s, residual + optimizer-state bytes)."""
+    from benchmarks.train_throughput import PATHS, bench_path
+    for name, pol in PATHS:
+        r = bench_path(name, pol, steps=2, batch=4, seq=64)
+        row(f"train::{name}", r["us_per_step"],
+            f"tok_s={r['tokens_per_s']:.1f};"
+            f"residual_bytes={r['residual_bytes_linear']};"
+            f"opt_bytes={r['opt_state_bytes']};"
+            f"kernel={r['kernel_path']}")
+
+
 def table_paper_results() -> None:
     """Tables 2-5 / Figs 9-13 derived metrics (valid-CE delta vs baseline)."""
     from benchmarks.paper_tables import CONFIGS, load_all, run_config
@@ -201,6 +214,7 @@ def main() -> None:
     bench_kernels()
     bench_policy_backends()
     bench_train_steps()
+    bench_train_throughput()
     bench_serve()
     table_paper_results()
     table_memory_and_linear_share()

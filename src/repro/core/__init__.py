@@ -4,8 +4,8 @@ from repro.core.qconfig import (Granularity, QuantRecipe, QuantSpec, RoundMode,
                                 paper_recipe, paper_recipe_wag8, parse_recipe,
                                 parse_spec, PRESETS)
 from repro.core.qadam import QState
-from repro.core.qlinear import (int8_backend_supported, int8_quantized_linear,
-                                quantized_linear)
+from repro.core.qlinear import (int8_backend_supported, int8_bwd_supported,
+                                int8_quantized_linear, quantized_linear)
 from repro.core.qpolicy import (FP_POLICY, KERNEL_BACKENDS, LinearCtx,
                                 PolicyRule, QuantPolicy, ROLES, as_policy,
                                 parse_policy, register_backend)
@@ -18,7 +18,7 @@ __all__ = [
     "beyond_paper_recipe", "fp_baseline", "get_recipe", "paper_recipe",
     "paper_recipe_wag8", "parse_recipe", "parse_spec", "PRESETS",
     "QState", "quantized_linear", "int8_backend_supported",
-    "int8_quantized_linear",
+    "int8_bwd_supported", "int8_quantized_linear",
     "FP_POLICY", "KERNEL_BACKENDS", "LinearCtx", "PolicyRule", "QuantPolicy",
     "ROLES", "as_policy", "parse_policy", "register_backend",
     "compute_scale_zero", "dequantize_int", "fake_quant", "fake_quant_nograd",

@@ -11,9 +11,22 @@ STE everywhere: the w / x cotangents pass straight through their quantizers.
 
 ``grads_dx`` in the recipe turns on the paper's instability ablation where the
 dx path also sees quantized gradients.
+
+Two implementations share these semantics:
+
+* the fake-quant reference (fp einsums over qdq'd tensors -- the paper's
+  simulation methodology), and
+* the real-int8 Pallas path (:func:`int8_quantized_linear`): the forward
+  quantizes each operand ONCE into int8 payload + scales, runs the W8A8 MXU
+  kernel, and threads the payloads through as custom_vjp residuals (~4x less
+  residual memory than qdq'd fp copies).  When the recipe also carries an
+  in-contract G8 spec (:func:`int8_bwd_supported`) both backward matmuls run
+  on transposed int8 kernels against the stored payloads; otherwise the
+  backward dequantizes-on-read and replays the reference vjp bit-exactly.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import Optional
 
@@ -21,12 +34,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.qadam import QState
 from repro.core.qconfig import Granularity, QuantRecipe, RoundMode
-from repro.core.quantizer import fake_quant_nograd, maybe_fake_quant
+from repro.core.quantizer import (dequantize_int, fake_quant_nograd,
+                                  maybe_fake_quant, quantize_int)
 
 
 def _flat2d(a: jnp.ndarray) -> jnp.ndarray:
     return a.reshape(-1, a.shape[-1])
+
+
+def _train_fake_quant(x: jnp.ndarray, spec, key=None) -> jnp.ndarray:
+    """``fake_quant_nograd`` with the hot symmetric 2-D cases routed through
+    the fused Pallas kernel (one HBM round trip instead of three -- see
+    kernels/qdq.py).  The route engages where the kernel actually compiles
+    (TPU); under interpret mode (CPU) the reference einsum is both the oracle
+    and the faster path.  ``REPRO_FUSED_FQ=1/0`` forces the choice either way
+    (tests pin ``1`` to exercise the routed path off-TPU)."""
+    force = os.environ.get("REPRO_FUSED_FQ", "")
+    fused = (force == "1") if force in ("0", "1") \
+        else jax.default_backend() == "tpu"
+    if fused and key is None:
+        from repro.kernels import ops              # lazy: pallas import
+        if ops.fused_fake_quant_eligible(spec, x):
+            return ops.fused_fake_quant(x, spec)
+    return fake_quant_nograd(x, spec, key)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3,))
@@ -39,8 +71,8 @@ def _qlinear(x: jnp.ndarray, w: jnp.ndarray, key, recipe: QuantRecipe):
 def _qlinear_fwd(x, w, key, recipe):
     # Error injection happens here; the *quantized* tensors are the residuals
     # (they are what the matmul actually consumed).
-    xq = fake_quant_nograd(x, recipe.acts) if recipe.acts is not None else x
-    wq = fake_quant_nograd(w, recipe.weights) if recipe.weights is not None else w
+    xq = _train_fake_quant(x, recipe.acts) if recipe.acts is not None else x
+    wq = _train_fake_quant(w, recipe.weights) if recipe.weights is not None else w
     y = jnp.matmul(xq, wq)
     return y, (xq, wq, key, x.shape)
 
@@ -64,13 +96,13 @@ def _qlinear_bwd(recipe, res, g):
     # --- dx path: real-valued output gradient (paper Fig. 1). -------------
     g_dx = g
     if recipe.grads_dx is not None:                      # instability ablation
-        g_dx = fake_quant_nograd(g, recipe.grads_dx, k_dx)
+        g_dx = _train_fake_quant(g, recipe.grads_dx, k_dx)
     dx = jnp.matmul(g_dx, wq.T).reshape(x_shape)
 
     # --- dW path: quantized output gradient. ------------------------------
     g_dw = g
     if recipe.grads is not None:
-        g_dw = fake_quant_nograd(g, recipe.grads, k_dw)
+        g_dw = _train_fake_quant(g, recipe.grads, k_dw)
     g2 = _flat2d(g_dw)
     x2 = _flat2d(xq)
     dw = jax.lax.dot_general(
@@ -96,10 +128,14 @@ def quantized_linear(x: jnp.ndarray, w: jnp.ndarray, recipe: Optional[QuantRecip
 
 
 # ---------------------------------------------------------------------------
-# Real-int8 forward backend: the Pallas W8A8 kernel replaces the fake-quant
-# einsum on the forward; the backward keeps the exact Fig-1 semantics above
-# (the kernel's integer payloads match fake_quant_nograd bit-exactly, so the
-# qdq residuals are what the MXU actually consumed).
+# Real-int8 backend: the Pallas W8A8 kernel replaces the fake-quant einsum on
+# the forward, each operand is quantized exactly ONCE and threaded through as
+# an int8 QState residual (payload + scales, ~4x smaller than the qdq'd fp
+# copies), and -- when the recipe carries an in-contract G8 spec -- both
+# backward matmuls run on the transposed int8 kernels against those stored
+# payloads.  Out-of-contract backwards dequantize-on-read and replay the
+# reference Fig-1 vjp (dequantize_int reproduces fake_quant_nograd
+# bit-exactly: same scale, round, clip, cast).
 # ---------------------------------------------------------------------------
 
 _INT8_GRANS_W = (Granularity.PER_CHANNEL, Granularity.PER_TENSOR)
@@ -125,6 +161,29 @@ def int8_backend_supported(recipe: Optional[QuantRecipe]) -> bool:
             and a.granularity in _INT8_GRANS_A)
 
 
+def int8_bwd_supported(recipe: Optional[QuantRecipe]) -> bool:
+    """True when the backward is expressible as the transposed int8 kernels'
+    contract: the forward contract plus a symmetric 8-bit nearest-rounded
+    PER_TOKEN gradient spec and no dx-path ablation.
+
+    The hardware path necessarily quantizes the output gradient on *both*
+    backward matmuls (an int8 dot needs two int8 operands); the paper's
+    Fig-1 semantics of a real-valued dx-path gradient survive only up to
+    that 8-bit per-token rounding of g (with the weight scales folded in).
+    Recipes outside this contract -- no G spec (fp dW path), stochastic
+    rounding, ``grads_dx`` ablations, coarser granularities -- fall back to
+    the reference vjp on dequantized residuals.
+    """
+    if not int8_backend_supported(recipe):
+        return False
+    g = recipe.grads
+    return (g is not None and recipe.grads_dx is None
+            and g.bits == 8 and g.symmetric
+            and g.block_size == 0 and not g.sqrt_domain
+            and g.round_mode is RoundMode.NEAREST
+            and g.granularity is Granularity.PER_TOKEN)
+
+
 def _int8_forward(x, w, recipe):
     from repro.kernels.ops import int8_linear    # lazy: pallas import
     return int8_linear(x, w, recipe.acts, recipe.weights, out_dtype=x.dtype)
@@ -136,21 +195,51 @@ def _qlinear_int8(x: jnp.ndarray, w: jnp.ndarray, key, recipe: QuantRecipe):
 
 
 def _qlinear_int8_fwd(x, w, key, recipe):
-    y = _int8_forward(x, w, recipe)
-    # residuals: same qdq grid the kernel quantized onto
-    xq = fake_quant_nograd(x, recipe.acts)
-    wq = fake_quant_nograd(w, recipe.weights)
-    return y, (xq, wq, key, x.shape)
+    from repro.kernels.ops import int8_payload_linear   # lazy: pallas import
+    x2 = _flat2d(x)
+    xq, x_scale, _ = quantize_int(x2, recipe.acts)      # zero == 0 (symmetric)
+    wq, w_scale, _ = quantize_int(w, recipe.weights)
+    y = int8_payload_linear(xq, x_scale, wq, w_scale, out_dtype=x.dtype)
+    y = y.reshape(*x.shape[:-1], w.shape[-1])
+    # Residuals are the int8 payloads the MXU actually consumed -- stored as
+    # QState (the optimizer-state / prepared-weight container) plus 0-size
+    # dtype carriers so the backward can emit exactly-typed cotangents.
+    zero = jnp.zeros((), jnp.float32)
+    res = (QState(xq, x_scale, zero), QState(wq, w_scale, zero), key, x.shape,
+           jnp.zeros((0,), x.dtype), jnp.zeros((0,), w.dtype))
+    return y, res
 
 
-_qlinear_int8.defvjp(_qlinear_int8_fwd, _qlinear_bwd)
+def _qlinear_int8_bwd(recipe, res, g):
+    xs, ws, key, x_shape, x_proto, w_proto = res
+    if int8_bwd_supported(recipe):
+        from repro.kernels.ops import int8_bwd_dw, int8_bwd_dx   # lazy
+        g2 = _flat2d(g)
+        dx = int8_bwd_dx(g2, ws.q, ws.scale,
+                         out_dtype=x_proto.dtype).reshape(x_shape)
+        dw = int8_bwd_dw(xs.q, xs.scale, g2, out_dtype=w_proto.dtype)
+        key_ct = (None if key is None
+                  else np.zeros(key.shape, dtype=jax.dtypes.float0))
+        return dx, dw, key_ct
+    # Out-of-contract recipe (fp dW path, stochastic g, grads_dx ablation,
+    # coarse granularity): dequantize-on-read and replay the reference vjp.
+    xq = dequantize_int(xs.q, xs.scale, xs.zero, recipe.acts,
+                        dtype=x_proto.dtype)
+    wq = dequantize_int(ws.q, ws.scale, ws.zero, recipe.weights,
+                        dtype=w_proto.dtype)
+    return _qlinear_bwd(recipe, (xq, wq, key, x_shape), g)
+
+
+_qlinear_int8.defvjp(_qlinear_int8_fwd, _qlinear_int8_bwd)
 
 
 def int8_quantized_linear(x: jnp.ndarray, w: jnp.ndarray, recipe: QuantRecipe,
                           key: Optional[jax.Array] = None) -> jnp.ndarray:
-    """W8A8 linear with real integer compute on the forward (TPU MXU path;
-    interpret-mode on CPU).  Caller must check :func:`int8_backend_supported`;
-    unsupported recipes should route to :func:`quantized_linear` instead."""
+    """W8A8 linear with real integer compute (TPU MXU path; interpret-mode on
+    CPU): always on the forward, and on both backward matmuls too when
+    :func:`int8_bwd_supported` accepts the recipe.  Caller must check
+    :func:`int8_backend_supported`; unsupported recipes should route to
+    :func:`quantized_linear` instead."""
     if not int8_backend_supported(recipe):
         raise ValueError(
             f"recipe [{recipe.describe() if recipe else 'fp'}] is outside the "

@@ -40,8 +40,8 @@ import numpy as _np
 from repro.core.qadam import QState
 from repro.core.qconfig import (Granularity, QuantRecipe, QuantSpec,
                                 RoundMode, get_recipe)
-from repro.core.qlinear import (int8_backend_supported, int8_quantized_linear,
-                                quantized_linear)
+from repro.core.qlinear import (int8_backend_supported, int8_bwd_supported,
+                                int8_quantized_linear, quantized_linear)
 from repro.core.quantizer import fake_quant, maybe_fake_quant
 
 # Layer roles understood by the model zoo.  ``embed`` / ``lm_head`` govern the
@@ -64,23 +64,29 @@ class KernelBackend(NamedTuple):
 
     ``fn(x, w, recipe, key) -> y`` computes the forward (and owns its custom
     VJP); ``supports(recipe)`` gates eligibility -- unsupported recipes fall
-    back to the ``fake_quant`` reference automatically.
+    back to the ``fake_quant`` reference automatically.  ``bwd_supports``
+    reports whether the backend's backward also runs real quantized compute
+    for the recipe (capability metadata -- the backend's own vjp is expected
+    to apply the same predicate and degrade gracefully on its own).
     """
     fn: Callable
     supports: Callable
+    bwd_supports: Callable = lambda recipe: False
 
 
 KERNEL_BACKENDS: Dict[str, KernelBackend] = {}
 
 
 def register_backend(name: str, fn: Callable,
-                     supports: Callable = lambda recipe: True) -> None:
-    KERNEL_BACKENDS[name] = KernelBackend(fn, supports)
+                     supports: Callable = lambda recipe: True,
+                     bwd_supports: Callable = lambda recipe: False) -> None:
+    KERNEL_BACKENDS[name] = KernelBackend(fn, supports, bwd_supports)
 
 
 register_backend("fake_quant", quantized_linear)
 register_backend("int8_pallas", int8_quantized_linear,
-                 supports=int8_backend_supported)
+                 supports=int8_backend_supported,
+                 bwd_supports=int8_bwd_supported)
 
 
 def _prepared_int8_ok(recipe: Optional[QuantRecipe], w: QState) -> bool:
@@ -255,6 +261,26 @@ class QuantPolicy:
         """Could resolution of ``role`` depend on the layer index?"""
         return any(r.depth_bounded for r in self.rules
                    if r.role in ("*", role))
+
+    def effective_backend(self, role: str, layer: Optional[int] = None,
+                          n_layers: int = 0) -> Tuple[str, Tuple[str, ...]]:
+        """``(backend_name, caps)`` that :meth:`linear` will actually run for
+        this role, with the registry fallback applied.  ``caps`` lists which
+        passes execute real quantized kernels: ``('fwd', 'bwd')`` for the
+        full int8 training path, ``('fwd',)`` for int8-forward-only, ``()``
+        for the fake-quant reference einsum; backend name ``'fp'`` means a
+        plain matmul (no quantization resolved)."""
+        res = self.resolve(role, layer, n_layers)
+        recipe = res.recipe
+        if recipe is None or not recipe.any_linear_quant:
+            return "fp", ()
+        name, be = res.backend, KERNEL_BACKENDS[res.backend]
+        if not be.supports(recipe):
+            name, be = "fake_quant", KERNEL_BACKENDS["fake_quant"]
+        if name == "fake_quant":
+            return name, ()
+        caps = ("fwd", "bwd") if be.bwd_supports(recipe) else ("fwd",)
+        return name, caps
 
     def kv_spec(self) -> Optional[QuantSpec]:
         """Storage spec for the decode KV cache (role ``kv_cache``), or None

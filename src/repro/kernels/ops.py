@@ -13,10 +13,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.qconfig import Granularity, QuantSpec
+from repro.core.qconfig import Granularity, QuantSpec, RoundMode
 from repro.core.quantizer import quantize_int
 from repro.kernels import int8_matmul as _mm
 from repro.kernels import qdq as _qdq
+
+_EPS = 1e-12
 
 
 def _auto_interpret(flag: Optional[bool]) -> bool:
@@ -31,6 +33,17 @@ def _pad_to(x: jnp.ndarray, mult_r: int, mult_c: int) -> jnp.ndarray:
     if pr or pc:
         x = jnp.pad(x, ((0, pr), (0, pc)))
     return x
+
+
+def fused_fake_quant_eligible(spec: Optional[QuantSpec],
+                              x: jnp.ndarray) -> bool:
+    """Can :func:`fused_fake_quant` stand in for
+    ``core.quantizer.fake_quant_nograd`` on this call?  The kernel covers the
+    hot training shapes: 2-D+ inputs, symmetric nearest-rounded specs with no
+    block-wise / sqrt-domain codec."""
+    return (spec is not None and x.ndim >= 2 and spec.symmetric
+            and spec.block_size == 0 and not spec.sqrt_domain
+            and spec.round_mode is RoundMode.NEAREST)
 
 
 @partial(jax.jit, static_argnames=("spec", "interpret"))
@@ -60,6 +73,28 @@ def fused_fake_quant(x: jnp.ndarray, spec: QuantSpec,
     return out[:r, :c].reshape(shape)
 
 
+def int8_payload_linear(xq: jnp.ndarray, x_scale: jnp.ndarray,
+                        wq: jnp.ndarray, w_scale: jnp.ndarray,
+                        out_dtype=jnp.bfloat16,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Rank-1-dequant int8 matmul on *pre-quantized* operands: ``xq`` (M, K)
+    int8 + per-token/per-tensor ``x_scale``, ``wq`` (K, N) int8 + per-channel/
+    per-tensor ``w_scale``.  The shared core of the spec-driven, prepared and
+    custom-vjp forward entries -- padding to MXU blocks, scale broadcast to
+    the kernel's (M,1) x (1,N) layout, and the output slice live here once."""
+    interp = _auto_interpret(interpret)
+    m, n = xq.shape[0], wq.shape[1]
+    row_scale = jnp.broadcast_to(x_scale.astype(jnp.float32).reshape(-1, 1),
+                                 (m, 1))
+    col_scale = jnp.broadcast_to(w_scale.astype(jnp.float32).reshape(1, -1),
+                                 (1, n))
+    out = _mm.int8_matmul(_pad_to(xq, 128, 128), _pad_to(wq, 128, 128),
+                          _pad_to(row_scale, 128, 1),
+                          _pad_to(col_scale, 1, 128),
+                          out_dtype=out_dtype, interpret=interp)
+    return out[:m, :n]
+
+
 def int8_linear(x: jnp.ndarray, w: jnp.ndarray, a_spec: QuantSpec,
                 w_spec: QuantSpec, out_dtype=None,
                 interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -73,24 +108,14 @@ def int8_linear(x: jnp.ndarray, w: jnp.ndarray, a_spec: QuantSpec,
     construction.  Caller gates eligibility (symmetric 8-bit, no blocking)
     -- see ``core.qlinear.int8_backend_supported``.
     """
-    interp = _auto_interpret(interpret)
     out_dtype = out_dtype or x.dtype
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     xq, row_scale, _ = quantize_int(x2, a_spec)     # zero == 0 (symmetric)
     wq, col_scale, _ = quantize_int(w, w_spec)
-    # per-tensor scales arrive (1, 1); the kernel wants rank-1 (M,1) x (1,N)
-    row_scale = jnp.broadcast_to(row_scale.astype(jnp.float32),
-                                 (x2.shape[0], 1))
-    col_scale = jnp.broadcast_to(col_scale.astype(jnp.float32),
-                                 (1, w.shape[1]))
-
-    m, n = xq.shape[0], wq.shape[1]
-    out = _mm.int8_matmul(_pad_to(xq, 128, 128), _pad_to(wq, 128, 128),
-                          _pad_to(row_scale, 128, 1),
-                          _pad_to(col_scale, 1, 128),
-                          out_dtype=out_dtype, interpret=interp)
-    return out[:m, :n].reshape(*shape[:-1], n)
+    out = int8_payload_linear(xq, row_scale, wq, col_scale,
+                              out_dtype=out_dtype, interpret=interpret)
+    return out.reshape(*shape[:-1], w.shape[1])
 
 
 def int8_prepared_linear(x: jnp.ndarray, wq: jnp.ndarray,
@@ -102,21 +127,70 @@ def int8_prepared_linear(x: jnp.ndarray, wq: jnp.ndarray,
     construction, ``repro.infer.prepare``).  Only the activations are
     quantized in-trace, so the decode step's HLO carries no weight absmax /
     round -- the serving half of the paper's W8A8 recipe."""
-    interp = _auto_interpret(interpret)
     out_dtype = out_dtype or x.dtype
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     xq, row_scale, _ = quantize_int(x2, a_spec)     # zero == 0 (symmetric)
-    row_scale = jnp.broadcast_to(row_scale.astype(jnp.float32),
-                                 (x2.shape[0], 1))
-    col_scale = jnp.broadcast_to(w_scale.astype(jnp.float32).reshape(1, -1),
-                                 (1, wq.shape[1]))
-    m, n = xq.shape[0], wq.shape[1]
-    out = _mm.int8_matmul(_pad_to(xq, 128, 128), _pad_to(wq, 128, 128),
-                          _pad_to(row_scale, 128, 1),
-                          _pad_to(col_scale, 1, 128),
-                          out_dtype=out_dtype, interpret=interp)
-    return out[:m, :n].reshape(*shape[:-1], n)
+    out = int8_payload_linear(xq, row_scale, wq, w_scale,
+                              out_dtype=out_dtype, interpret=interpret)
+    return out.reshape(*shape[:-1], wq.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Training backward: both matmuls on the int8 MXU path, consuming the stored
+# forward payloads.  The scale algebra that keeps the epilogues rank-1:
+#
+#   dx[m,k] = sum_n g[m,n] * (w_int[k,n]*sw[n])     fold sw into g, quantize
+#           ~= sh[m] * sum_n hq[m,n] * w_int[k,n]   h = g*sw per-TOKEN (sh)
+#   dW[k,n] = sum_m (x_int[m,k]*sx[m]) * g[m,n]     fold sx into g, quantize
+#           ~= sh[n] * sum_m x_int[m,k] * hq[m,n]   h = g*sx per-CHANNEL (sh)
+#
+# Folding the counterpart operand's dequant scale into the fp gradient moves
+# every scale off the contracted axis, so the int32 accumulators dequantize
+# with one broadcast multiply -- and the int8 residual payloads are consumed
+# exactly as stored.  The absmax reduce runs outside (one fused XLA pass over
+# g, nothing materialized); round/clip/cast run inside the kernel grid.
+# ---------------------------------------------------------------------------
+
+def int8_bwd_dx(g: jnp.ndarray, wq: jnp.ndarray, w_scale: jnp.ndarray,
+                out_dtype=None,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """dx = qdq_token(g * w_scale) @ wq^T.  g: fp (M, N); wq: int8 (K, N)
+    stored forward payload; w_scale: fp32 per-channel (1, N) or per-tensor
+    (1, 1) -> (M, K) out_dtype."""
+    interp = _auto_interpret(interpret)
+    out_dtype = out_dtype or g.dtype
+    m, n = g.shape
+    k = wq.shape[0]
+    fold = jnp.broadcast_to(w_scale.astype(jnp.float32).reshape(1, -1),
+                            (1, n))
+    absmax = jnp.max(jnp.abs(g.astype(jnp.float32)) * fold, axis=1,
+                     keepdims=True)
+    q_scale = jnp.maximum(absmax, _EPS) / 127.0
+    out = _mm.int8_matmul_nt(_pad_to(g, 128, 128), _pad_to(wq, 128, 128),
+                             _pad_to(fold, 1, 128), _pad_to(q_scale, 128, 1),
+                             out_dtype=out_dtype, interpret=interp)
+    return out[:m, :k]
+
+
+def int8_bwd_dw(xq: jnp.ndarray, x_scale: jnp.ndarray, g: jnp.ndarray,
+                out_dtype=jnp.float32,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """dW = xq^T @ qdq_channel(g * x_scale).  xq: int8 (M, K) stored forward
+    payload; x_scale: fp32 per-token (M, 1) or per-tensor (1, 1); g: fp
+    (M, N) -> (K, N) out_dtype."""
+    interp = _auto_interpret(interpret)
+    m, n = g.shape
+    k = xq.shape[1]
+    fold = jnp.broadcast_to(x_scale.astype(jnp.float32).reshape(-1, 1),
+                            (m, 1))
+    absmax = jnp.max(jnp.abs(g.astype(jnp.float32)) * fold, axis=0,
+                     keepdims=True)
+    q_scale = jnp.maximum(absmax, _EPS) / 127.0
+    out = _mm.int8_matmul_tn(_pad_to(xq, 128, 128), _pad_to(g, 128, 128),
+                             _pad_to(fold, 128, 1), _pad_to(q_scale, 1, 128),
+                             out_dtype=out_dtype, interpret=interp)
+    return out[:k, :n]
 
 
 @partial(jax.jit, static_argnames=("out_dtype", "interpret"))

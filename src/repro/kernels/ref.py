@@ -22,10 +22,39 @@ def qdq_scaled_ref(x: jnp.ndarray, scale: jnp.ndarray,
     return (q * sf).astype(x.dtype)
 
 
+def _guard_ref(scale: jnp.ndarray) -> jnp.ndarray:
+    """Mirror of the kernels' 0-scale padding guard."""
+    return jnp.where(scale == 0.0, 1.0, scale.astype(jnp.float32))
+
+
 def int8_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, row_scale: jnp.ndarray,
                     col_scale: jnp.ndarray, out_dtype=jnp.bfloat16
                     ) -> jnp.ndarray:
     acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32),
                      preferred_element_type=jnp.int32)
-    return (acc.astype(jnp.float32) * row_scale.astype(jnp.float32)
-            * col_scale.astype(jnp.float32)).astype(out_dtype)
+    return (acc.astype(jnp.float32) * _guard_ref(row_scale)
+            * _guard_ref(col_scale)).astype(out_dtype)
+
+
+def int8_matmul_nt_ref(g: jnp.ndarray, w: jnp.ndarray,
+                       fold_scale: jnp.ndarray, q_scale: jnp.ndarray,
+                       out_dtype=jnp.float32) -> jnp.ndarray:
+    """dx = qdq_token(g * fold) @ w^T; w is the int8 forward payload."""
+    qs = _guard_ref(q_scale)
+    h = g.astype(jnp.float32) * fold_scale.astype(jnp.float32)
+    hq = jnp.clip(jnp.round(h / qs), -128, 127).astype(jnp.int32)
+    acc = jnp.matmul(hq, w.astype(jnp.int32).T,
+                     preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * qs).astype(out_dtype)
+
+
+def int8_matmul_tn_ref(x: jnp.ndarray, g: jnp.ndarray,
+                       fold_scale: jnp.ndarray, q_scale: jnp.ndarray,
+                       out_dtype=jnp.float32) -> jnp.ndarray:
+    """dW = x^T @ qdq_channel(g * fold); x is the int8 forward payload."""
+    qs = _guard_ref(q_scale)
+    h = g.astype(jnp.float32) * fold_scale.astype(jnp.float32)
+    hq = jnp.clip(jnp.round(h / qs), -128, 127).astype(jnp.int32)
+    acc = jnp.matmul(x.astype(jnp.int32).T, hq,
+                     preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * qs).astype(out_dtype)

@@ -69,6 +69,9 @@ def main():
     print(f"arch={cfg.name} devices={mesh.devices.size} "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"policy=[{recipe.describe()}] batch={batch} seq={seq}")
+    from repro.train.step import train_path_summary
+    print(f"train-path: "
+          f"{train_path_summary(recipe, getattr(cfg, 'n_layers', 0))}")
 
     opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
                     total_steps=args.steps, state_storage=args.state_storage)

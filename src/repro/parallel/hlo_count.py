@@ -325,20 +325,30 @@ def count_module(hlo: str, n_devices: int = 256) -> Dict[str, float]:
     return out
 
 
-def count_ops(hlo: str, prefix: str) -> int:
+def count_ops(hlo: str, prefix: str,
+              result_type: Optional[str] = None) -> int:
     """Static count of instructions whose op name starts with ``prefix``,
     across every computation (fusion bodies, loop bodies, the entry).  Not
     loop-multiplied -- this answers "does the compiled program contain op X
     at all", e.g. asserting a prepared-weights decode step holds zero
-    ``round-nearest`` ops (no in-trace weight quantization)."""
+    ``round-nearest`` ops (no in-trace weight quantization).
+
+    ``result_type`` additionally filters on the instruction's result dtype
+    prefix, e.g. ``count_ops(hlo, "dot", result_type="s32")`` counts integer
+    matmuls (int8 x int8 dots accumulate to s32) -- the training fast path's
+    "real int8 compute in the backward" assertion."""
     comps = parse_module(hlo)
     n = 0
     for name, instrs in comps.items():
         if name == "__entry__":          # alias of the ENTRY computation
             continue
         for ins in instrs:
-            if ins.op.startswith(prefix):
-                n += 1
+            if not ins.op.startswith(prefix):
+                continue
+            if (result_type is not None and not
+                    ins.type_str.strip().lstrip("(").startswith(result_type)):
+                continue
+            n += 1
     return n
 
 

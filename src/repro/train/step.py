@@ -30,6 +30,48 @@ class TrainState(NamedTuple):
     opt: AdamState
 
 
+#: Block-linear roles summarized by :func:`train_path_summary` (the matmuls
+#: that dominate a train step; kv_cache/embed/lm_head are serving or
+#: depth-less concerns).
+_SUMMARY_ROLES = ("attn_qkv", "attn_out", "mlp_up", "mlp_down",
+                  "ssm_in", "ssm_out")
+
+
+def _path_desc(backend: str, caps) -> str:
+    if backend == "fp":
+        return "fp"
+    if not caps:
+        return "fake_quant(fwd=qdq,bwd=qdq,res=fp)"
+    bwd = "int8" if "bwd" in caps else "qdq"
+    return f"{backend}(fwd=int8,bwd={bwd},res=int8)"
+
+
+def train_path_summary(recipe, n_layers: int = 0) -> str:
+    """One-line description of the kernel path each block-linear role's train
+    step actually runs: effective backend after fallback, which passes hit
+    real quantized compute, and the custom-vjp residual codec.  Printed by
+    the launcher and reported by benchmarks/train_throughput.py.
+
+    Depth-banded policies resolve per layer: pass ``n_layers`` to enumerate
+    the distinct per-depth paths ('/'-joined); without it the summary can
+    only flag the role as depth-banded rather than misreport one band."""
+    policy = as_policy(recipe)
+    groups: Dict[str, list] = {}
+    for role in _SUMMARY_ROLES:
+        if policy.depth_sensitive(role):
+            if n_layers:
+                descs = sorted({_path_desc(*policy.effective_backend(
+                    role, i, n_layers)) for i in range(n_layers)})
+                desc = "/".join(descs)
+            else:
+                desc = "depth-banded(pass n_layers)"
+        else:
+            desc = _path_desc(*policy.effective_backend(role))
+        groups.setdefault(desc, []).append(role)
+    return " ".join(f"{'+'.join(roles)}={desc}"
+                    for desc, roles in groups.items())
+
+
 def init_train_state(model: Model, key: jax.Array, recipe,
                      opt_cfg: OptConfig) -> TrainState:
     policy = as_policy(recipe)

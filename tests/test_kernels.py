@@ -100,6 +100,126 @@ def test_int8_matmul_batched_input():
     assert rel < 0.05, rel
 
 
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (130, 257, 90),
+                                   (64, 300, 100)])
+def test_int8_matmul_nt_matches_ref(m, k, n):
+    """dx-path kernel (fused g-quant prologue) vs the pure-jnp oracle."""
+    from repro.kernels.int8_matmul import int8_matmul_nt
+    rng = np.random.RandomState(3)
+    g = jnp.asarray(rng.randn(m, n).astype(np.float32))
+    wq = jnp.asarray(rng.randint(-128, 128, (k, n)), jnp.int8)
+    fold = jnp.asarray(rng.rand(1, n).astype(np.float32) + 0.01)
+    qs = jnp.maximum(jnp.max(jnp.abs(g) * fold, axis=1, keepdims=True),
+                     1e-12) / 127.0
+    pad_r, pad_c = (-m) % 128, (-n) % 128
+    pk = (-k) % 128
+    gp = jnp.pad(g, ((0, pad_r), (0, pad_c)))
+    got = int8_matmul_nt(gp, jnp.pad(wq, ((0, pk), (0, pad_c))),
+                         jnp.pad(fold, ((0, 0), (0, pad_c))),
+                         jnp.pad(qs, ((0, pad_r), (0, 0))),
+                         out_dtype=jnp.float32, interpret=True)[:m, :k]
+    want = ref.int8_matmul_nt_ref(g, wq, fold, qs, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (130, 257, 90),
+                                   (100, 64, 300)])
+def test_int8_matmul_tn_matches_ref(m, k, n):
+    """dW-path kernel (fused g-quant prologue) vs the pure-jnp oracle."""
+    from repro.kernels.int8_matmul import int8_matmul_tn
+    rng = np.random.RandomState(4)
+    xq = jnp.asarray(rng.randint(-128, 128, (m, k)), jnp.int8)
+    g = jnp.asarray(rng.randn(m, n).astype(np.float32))
+    fold = jnp.asarray(rng.rand(m, 1).astype(np.float32) + 0.01)
+    qs = jnp.maximum(jnp.max(jnp.abs(g) * fold, axis=0, keepdims=True),
+                     1e-12) / 127.0
+    pm, pk, pn = (-m) % 128, (-k) % 128, (-n) % 128
+    got = int8_matmul_tn(jnp.pad(xq, ((0, pm), (0, pk))),
+                         jnp.pad(g, ((0, pm), (0, pn))),
+                         jnp.pad(fold, ((0, pm), (0, 0))),
+                         jnp.pad(qs, ((0, 0), (0, pn))),
+                         out_dtype=jnp.float32, interpret=True)[:k, :n]
+    want = ref.int8_matmul_tn_ref(xq, g, fold, qs, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_zero_scale_padding_guard():
+    """0-scale rows/cols (zero-padding of ragged shapes) must not emit
+    NaN/Inf from the quant prologue's division or the dequant epilogue."""
+    from repro.kernels.int8_matmul import int8_matmul, int8_matmul_nt
+    rng = np.random.RandomState(5)
+    # forward epilogue: one all-zero scale row / col
+    x = jnp.asarray(rng.randint(-128, 128, (128, 128)), jnp.int8)
+    w = jnp.asarray(rng.randint(-128, 128, (128, 128)), jnp.int8)
+    rs = jnp.asarray(rng.rand(128, 1).astype(np.float32)).at[7, 0].set(0.0)
+    cs = jnp.asarray(rng.rand(1, 128).astype(np.float32)).at[0, 9].set(0.0)
+    out = int8_matmul(x, w, rs, cs, out_dtype=jnp.float32, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    # nt prologue: a 0 q_scale row divides g/0 without the guard
+    g = jnp.asarray(rng.randn(128, 128).astype(np.float32))
+    fold = jnp.asarray(rng.rand(1, 128).astype(np.float32))
+    qs = jnp.maximum(jnp.max(jnp.abs(g) * fold, 1, keepdims=True),
+                     1e-12) / 127.0
+    qs = qs.at[3, 0].set(0.0)
+    out = int8_matmul_nt(g, w, fold, qs, out_dtype=jnp.float32,
+                         interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    # the dx/dW ops wrappers pad ragged shapes with exactly such 0 scales
+    dx = ops.int8_bwd_dx(g[:100, :90], w[:60, :90],
+                         jnp.abs(fold[:, :90]) + 0.01)
+    dw = ops.int8_bwd_dw(x[:100, :60], jnp.asarray(rng.rand(100, 1),
+                                                   jnp.float32),
+                         g[:100, :90])
+    assert np.isfinite(np.asarray(dx, np.float32)).all()
+    assert np.isfinite(np.asarray(dw)).all()
+    assert dx.shape == (100, 60) and dw.shape == (60, 90)
+
+
+def test_fused_fake_quant_routing(monkeypatch):
+    """REPRO_FUSED_FQ=1 routes eligible training-path qdq calls through the
+    fused Pallas kernel; the reference stays the oracle."""
+    from repro.core.qconfig import QuantRecipe, RoundMode
+    from repro.core.qlinear import _train_fake_quant, quantized_linear
+    x = jax.random.normal(KEY, (96, 257)) * 2
+    spec = QuantSpec(8, Granularity.PER_CHANNEL)
+    monkeypatch.setenv("REPRO_FUSED_FQ", "1")
+    got = _train_fake_quant(x, spec)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(fake_quant_nograd(x, spec)),
+                               rtol=1e-5, atol=1e-5)
+    assert ops.fused_fake_quant_eligible(spec, x)
+    # ineligible specs keep the reference: stochastic (needs a key stream)...
+    sr = QuantSpec(8, Granularity.PER_TOKEN, round_mode=RoundMode.STOCHASTIC)
+    assert not ops.fused_fake_quant_eligible(sr, x)
+    # ...asymmetric, blockwise, and 1-D inputs
+    assert not ops.fused_fake_quant_eligible(
+        QuantSpec(8, Granularity.PER_TOKEN, symmetric=False), x)
+    assert not ops.fused_fake_quant_eligible(
+        QuantSpec(8, Granularity.PER_TOKEN, block_size=64), x)
+    assert not ops.fused_fake_quant_eligible(
+        QuantSpec(8, Granularity.PER_TOKEN), x[0])
+    # end-to-end: routed fwd+bwd of the fake-quant linear matches unrouted
+    r = QuantRecipe(weights=QuantSpec(8, Granularity.PER_CHANNEL),
+                    acts=QuantSpec(8, Granularity.PER_TOKEN),
+                    grads=QuantSpec(8, Granularity.PER_TOKEN))
+    w = jax.random.normal(KEY, (257, 64)) * 0.2
+
+    def loss(xx, ww):
+        return jnp.sum(quantized_linear(xx, ww, r) ** 2)
+
+    dx_f, dw_f = jax.grad(loss, argnums=(0, 1))(x, w)
+    monkeypatch.setenv("REPRO_FUSED_FQ", "0")
+    dx_r, dw_r = jax.grad(loss, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(dx_f), np.asarray(dx_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dw_f), np.asarray(dw_r),
+                               rtol=1e-4, atol=1e-4)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 300), st.integers(1, 300), st.integers(2, 8))
 def test_property_qdq_row_any_shape(rows, cols, bits):
