@@ -183,6 +183,19 @@ def table_memory_and_linear_share() -> None:
                     f"activation_fraction={act / (act + st):.3f}")
 
 
+def bench_opt_update() -> None:
+    """Optimizer fast paths: fp vs fake vs int8-loop vs int8-fused AdamW
+    (opt_ms, analytic HBM bytes, optimizer-state bytes)."""
+    from benchmarks.opt_update import PATHS, bench_path
+    for name, recipe_str, storage, fused in PATHS:
+        r = bench_path(name, recipe_str, storage, fused, steps=1)
+        row(f"opt::{name}", r["us_per_step"],
+            f"opt_ms={r['opt_ms']:.2f};"
+            f"hbm_bytes={r['hbm_bytes_per_step']};"
+            f"opt_bytes={r['opt_state_bytes']};"
+            f"path={r['kernel_path']}")
+
+
 def bench_serve() -> None:
     """Engine serving throughput + KV residency, fp vs int8 policies."""
     from benchmarks.serve_throughput import POLICIES, bench_engine
@@ -215,6 +228,7 @@ def main() -> None:
     bench_policy_backends()
     bench_train_steps()
     bench_train_throughput()
+    bench_opt_update()
     bench_serve()
     table_paper_results()
     table_memory_and_linear_share()

@@ -111,13 +111,17 @@ def run(steps: int, batch: int, seq: int) -> list:
 
 
 def smoke() -> None:
-    """CI gate: every path trains, and the int8 paths actually compress."""
+    """CI gate: every path trains, and the quantized paths actually compress
+    (the fake-quant reference stores int8 QState residuals too now -- both
+    compare against the fp path's raw fp32 operands)."""
     rows = run(steps=2, batch=2, seq=32)
     by = {r["path"]: r for r in rows}
     for r in rows:
         assert np.isfinite(r["final_ce"]), r
     assert by["int8_fwd_bwd"]["residual_bytes_linear"] < \
-        by["fake_quant"]["residual_bytes_linear"] / 3.5, by
+        by["fp"]["residual_bytes_linear"] / 3.5, by
+    assert by["fake_quant"]["residual_bytes_linear"] < \
+        by["fp"]["residual_bytes_linear"] / 3.5, by
     assert by["int8_fwd"]["residual_bytes_linear"] == \
         by["int8_fwd_bwd"]["residual_bytes_linear"], by
     assert "bwd=int8" in by["int8_fwd_bwd"]["kernel_path"], by

@@ -21,12 +21,12 @@ sqrt_domain=True)`` which quantizes sqrt(m2) blockwise.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.qconfig import QuantSpec
+from repro.core.qconfig import QuantSpec, RoundMode
 from repro.core.quantizer import (dequantize_int, fake_quant_nograd,
                                   quantize_int)
 
@@ -88,3 +88,62 @@ def state_nbytes(state: Any) -> int:
     if isinstance(state, QState):
         return sum(int(x.size) * x.dtype.itemsize for x in state)
     return int(state.size) * state.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# Blockwise layout helpers + fused-kernel eligibility (kernels/opt_update.py).
+#
+# Codec invariant the fused AdamW path leans on: for a blockwise spec, encode
+# flattens the tensor, zero-pads the tail to a block multiple, and stores
+#   q     : (nblocks, block_size)  int8
+#   scale : (nblocks, 1)           fp32   one quantization block per row
+#   zero  : (nblocks, 1)           fp32   (zeros when symmetric)
+# so per-leaf states of equal block_size concatenate along rows into one
+# kernel bucket and split back without re-laying-out anything.
+# ---------------------------------------------------------------------------
+
+def blockwise_state_shapes(shape, spec: QuantSpec
+                           ) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """((nblocks, block_size), (nblocks, 1)) for a blockwise-encoded tensor
+    of ``shape`` -- the payload / sidecar layout contract above."""
+    n = 1
+    for d in shape:
+        n *= d
+    nblocks = -(-n // spec.block_size)
+    return (nblocks, spec.block_size), (nblocks, 1)
+
+
+def flatten_blocks(x: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Flatten to the (nblocks, block_size) codec layout, zero-padding the
+    tail block (identical to the quantizer's internal blocked view)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block_size)
+
+
+def unflatten_blocks(blocks: jnp.ndarray, shape) -> jnp.ndarray:
+    """Inverse of :func:`flatten_blocks`: strip tail padding, restore shape."""
+    n = 1
+    for d in shape:
+        n *= d
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def fused_spec_eligible(spec: Optional[QuantSpec]) -> bool:
+    """Can kernels/opt_update.py hold this moment codec in-register?  The
+    kernel covers the blockwise int8-storage family: block_size > 0 (row-
+    aligned scales), <= 8 bits (int8 payload), nearest rounding (no key
+    stream inside the grid).  Symmetric/asymmetric and sqrt-domain are all
+    in-contract."""
+    return (spec is not None and spec.block_size > 0 and spec.bits <= 8
+            and spec.round_mode is RoundMode.NEAREST)
+
+
+def fused_pair_eligible(m1_spec: Optional[QuantSpec],
+                        m2_spec: Optional[QuantSpec]) -> bool:
+    """Both moments must be kernel-eligible with a SHARED block size (grad
+    and param tiles are laid out once per bucket)."""
+    return (fused_spec_eligible(m1_spec) and fused_spec_eligible(m2_spec)
+            and m1_spec.block_size == m2_spec.block_size)

@@ -15,7 +15,9 @@ dx path also sees quantized gradients.
 Two implementations share these semantics:
 
 * the fake-quant reference (fp einsums over qdq'd tensors -- the paper's
-  simulation methodology), and
+  simulation methodology; symmetric nearest codecs store their custom-vjp
+  residuals as int8 QState payloads and dequantize-on-read, ~4x less residual
+  memory with bit-identical values, no kernel dependency), and
 * the real-int8 Pallas path (:func:`int8_quantized_linear`): the forward
   quantizes each operand ONCE into int8 payload + scales, runs the W8A8 MXU
   kernel, and threads the payloads through as custom_vjp residuals (~4x less
@@ -61,6 +63,44 @@ def _train_fake_quant(x: jnp.ndarray, spec, key=None) -> jnp.ndarray:
     return fake_quant_nograd(x, spec, key)
 
 
+def residual_compressible(spec) -> bool:
+    """Can the custom-vjp residual for this operand be stored as an int8
+    ``QState`` (payload + scales) instead of the qdq'd fp copy?  Requires a
+    codec whose ``dequantize_int(quantize_int(x))`` reproduces
+    ``fake_quant_nograd(x)`` bit-exactly: symmetric (zero == 0 by
+    construction, so only scale multiplies on read), nearest rounding (no key
+    stream to replay), <= 8 bits (int8 payload), no sqrt domain.  Blockwise
+    codecs qualify -- the stored shape recovers the tail padding."""
+    return (spec is not None and spec.symmetric
+            and spec.round_mode is RoundMode.NEAREST
+            and spec.bits <= 8 and not spec.sqrt_domain)
+
+
+def _encode_residual(t: jnp.ndarray, spec):
+    """(value the matmul consumes, residual to store).  Compressible specs
+    pay the quantize ONCE and keep the int8 payload (~4x smaller residual --
+    the PR-3 trick, no kernel dependency); everything else stores the qdq'd
+    fp tensor as before."""
+    if spec is None:
+        return t, t
+    if residual_compressible(spec):
+        q, scale, zero = quantize_int(t, spec)
+        deq = dequantize_int(q, scale, zero, spec, shape=t.shape,
+                             dtype=t.dtype)
+        return deq, QState(q, scale, zero)
+    tq = _train_fake_quant(t, spec)
+    return tq, tq
+
+
+def _decode_residual(res, spec, shape, dtype) -> jnp.ndarray:
+    """Dequantize-on-read: recover the exact tensor the forward matmul
+    consumed from either residual representation."""
+    if isinstance(res, QState):
+        return dequantize_int(res.q, res.scale, res.zero, spec, shape=shape,
+                              dtype=dtype)
+    return res
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(3,))
 def _qlinear(x: jnp.ndarray, w: jnp.ndarray, key, recipe: QuantRecipe):
     xq = maybe_fake_quant(x, recipe.acts)
@@ -69,17 +109,26 @@ def _qlinear(x: jnp.ndarray, w: jnp.ndarray, key, recipe: QuantRecipe):
 
 
 def _qlinear_fwd(x, w, key, recipe):
-    # Error injection happens here; the *quantized* tensors are the residuals
-    # (they are what the matmul actually consumed).
-    xq = _train_fake_quant(x, recipe.acts) if recipe.acts is not None else x
-    wq = _train_fake_quant(w, recipe.weights) if recipe.weights is not None else w
-    y = jnp.matmul(xq, wq)
-    return y, (xq, wq, key, x.shape)
+    # Error injection happens here; the residuals hold the *quantized*
+    # tensors (they are what the matmul actually consumed) -- as int8
+    # QState payloads when the codec allows, qdq'd fp copies otherwise.
+    xv, xr = _encode_residual(x, recipe.acts)
+    wv, wr = _encode_residual(w, recipe.weights)
+    y = jnp.matmul(xv, wv)
+    return y, (xr, wr, key, x.shape, w.shape,
+               jnp.zeros((0,), x.dtype), jnp.zeros((0,), w.dtype))
 
 
 def _qlinear_bwd(recipe, res, g):
-    xq, wq, key, x_shape = res
+    xr, wr, key, x_shape, w_shape, x_proto, w_proto = res
+    xq = _decode_residual(xr, recipe.acts, x_shape, x_proto.dtype)
+    wq = _decode_residual(wr, recipe.weights, w_shape, w_proto.dtype)
+    return _qlinear_bwd_core(recipe, xq, wq, key, x_shape, g)
 
+
+def _qlinear_bwd_core(recipe, xq, wq, key, x_shape, g):
+    """Reference Fig-1 vjp over the (dequantized) forward operands -- shared
+    by the fake-quant path and the int8 path's out-of-contract fallback."""
     # Independent subkeys per backward path: when both grads_dx and grads are
     # stochastic, the dW rounding noise must be uncorrelated with the dx
     # noise (and neither path may consume the caller's parent key raw).
@@ -227,7 +276,7 @@ def _qlinear_int8_bwd(recipe, res, g):
                         dtype=x_proto.dtype)
     wq = dequantize_int(ws.q, ws.scale, ws.zero, recipe.weights,
                         dtype=w_proto.dtype)
-    return _qlinear_bwd(recipe, (xq, wq, key, x_shape), g)
+    return _qlinear_bwd_core(recipe, xq, wq, key, x_shape, g)
 
 
 _qlinear_int8.defvjp(_qlinear_int8_fwd, _qlinear_int8_bwd)

@@ -12,12 +12,21 @@ against ref.py (tests/test_kernels.py sweeps shapes/dtypes/bits).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_ROWS = 256
+
+
+def default_block_rows() -> int:
+    """Tile row count used when the caller passes none.  ``REPRO_OPT_BLOCK``
+    overrides it here and in kernels/opt_update.py -- one knob, read at call
+    time, for block-size autotune sweeps across both VPU kernel families."""
+    v = os.environ.get("REPRO_OPT_BLOCK", "")
+    return int(v) if v else DEFAULT_BLOCK_ROWS
 
 
 def _qdq_row_kernel(x_ref, o_ref, *, qmax: int):
@@ -40,12 +49,12 @@ def _qdq_scaled_kernel(x_ref, scale_ref, o_ref, *, qmax: int):
 
 
 def qdq_row(x: jnp.ndarray, bits: int = 8,
-            block_rows: int = DEFAULT_BLOCK_ROWS,
+            block_rows: int = 0,
             interpret: bool = False) -> jnp.ndarray:
     """x: (rows, features) -> fake-quantized, per-row scales."""
     rows, feat = x.shape
     qmax = 2 ** (bits - 1) - 1
-    block_rows = min(block_rows, rows)
+    block_rows = min(block_rows or default_block_rows(), rows)
     grid = (pl.cdiv(rows, block_rows),)
     return pl.pallas_call(
         functools.partial(_qdq_row_kernel, qmax=qmax),
@@ -58,13 +67,13 @@ def qdq_row(x: jnp.ndarray, bits: int = 8,
 
 
 def qdq_scaled(x: jnp.ndarray, scale: jnp.ndarray, bits: int = 8,
-               block_rows: int = DEFAULT_BLOCK_ROWS,
+               block_rows: int = 0,
                interpret: bool = False) -> jnp.ndarray:
     """x: (rows, features); scale: (1, features) per-channel or (1, 1)
     per-tensor."""
     rows, feat = x.shape
     qmax = 2 ** (bits - 1) - 1
-    block_rows = min(block_rows, rows)
+    block_rows = min(block_rows or default_block_rows(), rows)
     grid = (pl.cdiv(rows, block_rows),)
     scol = scale.shape[1]
     return pl.pallas_call(

@@ -66,15 +66,15 @@ def main():
     mesh = make_host_mesh(args.model_parallel)
     multi = mesh.devices.size > 1
     rules = make_rules(mesh, "train", cfg=cfg) if multi else None
+    opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                    total_steps=args.steps, state_storage=args.state_storage)
     print(f"arch={cfg.name} devices={mesh.devices.size} "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"policy=[{recipe.describe()}] batch={batch} seq={seq}")
     from repro.train.step import train_path_summary
-    print(f"train-path: "
-          f"{train_path_summary(recipe, getattr(cfg, 'n_layers', 0))}")
-
-    opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
-                    total_steps=args.steps, state_storage=args.state_storage)
+    summary = train_path_summary(recipe, getattr(cfg, "n_layers", 0),
+                                 opt_cfg=opt)
+    print(f"train-path: {summary}")
     state = init_train_state(model, jax.random.PRNGKey(0), recipe, opt)
     step_fn = make_train_step(model, recipe, opt, rules=rules,
                               accum_steps=args.accum)

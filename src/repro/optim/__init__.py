@@ -1,6 +1,8 @@
 from repro.optim.adamw import (AdamState, OptConfig, adamw_update,
-                               clip_by_global_norm, global_norm,
-                               init_adam_state, lr_schedule)
+                               clip_by_global_norm, fused_adam_enabled,
+                               global_norm, init_adam_state, lr_schedule,
+                               opt_path_desc)
 
 __all__ = ["AdamState", "OptConfig", "adamw_update", "clip_by_global_norm",
-           "global_norm", "init_adam_state", "lr_schedule"]
+           "fused_adam_enabled", "global_norm", "init_adam_state",
+           "lr_schedule", "opt_path_desc"]

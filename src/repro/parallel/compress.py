@@ -63,24 +63,20 @@ def compressed_allreduce(tree, mesh: Mesh, axis_name: str):
     """All-reduce (sum) a gradient pytree with int8 wire format.
 
     Inputs are replicated along ``axis_name`` holding per-shard partial
-    gradients conceptually; in the pjit world this is exposed for the
-    shard_map-based DP variant of the train step (see train/compressed.py)
-    and benchmarked for the collective-bound hillclimb cell.
+    gradients conceptually; exposed for shard_map-based DP train-step
+    variants and benchmarked for the collective-bound hillclimb cell
+    (tests/test_distributed.py pins parity against the fp ``psum``).
     """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     sizes = [x.size for x in leaves]
     flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
                             for x in leaves])
-    n = mesh.devices.size if axis_name is None else None
-    axis = axis_name
-
-    pad = (-flat.size) % jax.device_count() if axis is None else 0
 
     def body(v):
-        nn = axis_size(axis)
+        nn = axis_size(axis_name)
         padlen = (-v.size) % nn
         vp = jnp.pad(v, (0, padlen))
-        out = int8_psum_flat(vp, axis)
+        out = int8_psum_flat(vp, axis_name)
         return out[:v.size]
 
     out = shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),

@@ -22,7 +22,7 @@ from repro.core import qadam
 from repro.core.qpolicy import QuantPolicy, as_policy
 from repro.models.model_api import Model
 from repro.optim.adamw import (AdamState, OptConfig, adamw_update,
-                               init_adam_state)
+                               init_adam_state, opt_path_desc)
 
 
 class TrainState(NamedTuple):
@@ -37,16 +37,23 @@ _SUMMARY_ROLES = ("attn_qkv", "attn_out", "mlp_up", "mlp_down",
                   "ssm_in", "ssm_out")
 
 
-def _path_desc(backend: str, caps) -> str:
+def _path_desc(backend: str, caps, recipe=None) -> str:
     if backend == "fp":
         return "fp"
     if not caps:
-        return "fake_quant(fwd=qdq,bwd=qdq,res=fp)"
+        from repro.core.qlinear import residual_compressible
+        specs = [] if recipe is None else \
+            [s for s in (recipe.acts, recipe.weights) if s is not None]
+        compressed = [residual_compressible(s) for s in specs]
+        res = ("int8" if specs and all(compressed)
+               else "mixed" if any(compressed) else "fp")
+        return f"fake_quant(fwd=qdq,bwd=qdq,res={res})"
     bwd = "int8" if "bwd" in caps else "qdq"
     return f"{backend}(fwd=int8,bwd={bwd},res=int8)"
 
 
-def train_path_summary(recipe, n_layers: int = 0) -> str:
+def train_path_summary(recipe, n_layers: int = 0,
+                       opt_cfg: Optional[OptConfig] = None) -> str:
     """One-line description of the kernel path each block-linear role's train
     step actually runs: effective backend after fallback, which passes hit
     real quantized compute, and the custom-vjp residual codec.  Printed by
@@ -54,22 +61,31 @@ def train_path_summary(recipe, n_layers: int = 0) -> str:
 
     Depth-banded policies resolve per layer: pass ``n_layers`` to enumerate
     the distinct per-depth paths ('/'-joined); without it the summary can
-    only flag the role as depth-banded rather than misreport one band."""
+    only flag the role as depth-banded rather than misreport one band.
+
+    Pass ``opt_cfg`` to also report the optimizer update path (``opt=``
+    segment: fp/fake/int8 storage x fused-kernel vs reference loop)."""
     policy = as_policy(recipe)
     groups: Dict[str, list] = {}
     for role in _SUMMARY_ROLES:
         if policy.depth_sensitive(role):
             if n_layers:
-                descs = sorted({_path_desc(*policy.effective_backend(
-                    role, i, n_layers)) for i in range(n_layers)})
+                descs = sorted({_path_desc(
+                    *policy.effective_backend(role, i, n_layers),
+                    policy.resolve(role, i, n_layers).recipe)
+                    for i in range(n_layers)})
                 desc = "/".join(descs)
             else:
                 desc = "depth-banded(pass n_layers)"
         else:
-            desc = _path_desc(*policy.effective_backend(role))
+            desc = _path_desc(*policy.effective_backend(role),
+                              policy.resolve(role).recipe)
         groups.setdefault(desc, []).append(role)
-    return " ".join(f"{'+'.join(roles)}={desc}"
-                    for desc, roles in groups.items())
+    summary = " ".join(f"{'+'.join(roles)}={desc}"
+                       for desc, roles in groups.items())
+    if opt_cfg is not None:
+        summary += f" opt={opt_path_desc(policy, opt_cfg)}"
+    return summary
 
 
 def init_train_state(model: Model, key: jax.Array, recipe,
@@ -163,8 +179,10 @@ def make_eval_step(model: Model, recipe, rules=None):
 def state_shardings(rules, model: Model, state_shapes: TrainState):
     """NamedSharding tree matching a TrainState's structure.  Optimizer
     moments mirror their parameter's logical axes when shapes match (fp/fake
-    storage); int-codec QState subtrees shard payloads like the flat param
-    when the leading dim divides, else replicate (scale sidecars are tiny)."""
+    storage); int-codec QState subtrees carry the blockwise bucket layout
+    (nblocks, block_size) of kernels/opt_update.py and FSDP-shard their
+    leading block dim (payload AND scale/zero sidecars, so fused-kernel
+    buckets concatenate shard-aligned) when it divides, else replicate."""
     if rules is None:
         return None
     flat_p, p_treedef = jax.tree_util.tree_flatten(state_shapes.params)
@@ -178,9 +196,18 @@ def state_shardings(rules, model: Model, state_shapes: TrainState):
         out = []
         for p, ax, mstate in zip(flat_p, flat_ax, flat_m):
             if isinstance(mstate, qadam.QState):
+                # "embed" is the FSDP-mapped logical axis; sharding_for
+                # drops it when the block count does not divide.
                 out.append(qadam.QState(
-                    q=rules.replicated(), scale=rules.replicated(),
-                    zero=rules.replicated()))
+                    q=rules.sharding_for(mstate.q.shape,
+                                         ("embed",) + (None,)
+                                         * (len(mstate.q.shape) - 1)),
+                    scale=rules.sharding_for(mstate.scale.shape,
+                                             ("embed",) + (None,)
+                                             * (len(mstate.scale.shape) - 1)),
+                    zero=rules.sharding_for(mstate.zero.shape,
+                                            ("embed",) + (None,)
+                                            * (len(mstate.zero.shape) - 1))))
             elif tuple(mstate.shape) == tuple(p.shape):
                 out.append(rules.sharding_for(p.shape, ax))
             else:

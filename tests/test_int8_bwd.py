@@ -221,8 +221,13 @@ def test_train_path_summary_strings():
     # than misreporting one band (w4c layers really run the fallback)
     banded = "block[0:2].*=w4c+a8t,*=w8c+a8t+g8t@int8_pallas"
     s = train_path_summary(banded, n_layers=4)
-    assert "fake_quant(fwd=qdq,bwd=qdq,res=fp)/int8_pallas" in s
+    # w4c layers run the fake-quant fallback; its residuals are int8 QState
+    # payloads too (symmetric nearest codec -> dequantize-on-read)
+    assert "fake_quant(fwd=qdq,bwd=qdq,res=int8)/int8_pallas" in s
     assert "depth-banded" in train_path_summary(banded)
+    # asymmetric codecs keep fp residuals (zero-point breaks the exact
+    # int-roundtrip), so the summary reports them honestly
+    assert "res=fp" in train_path_summary("*=w8c-asym+a8t-asym")
 
 
 # ---------------------------------------------------------------------------
