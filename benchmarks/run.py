@@ -204,7 +204,21 @@ def bench_serve() -> None:
         row(f"serve::{pol}", 0.0,
             f"prefill_tok_s={r['prefill_tok_s']:.1f};"
             f"decode_tok_s={r['decode_tok_s']:.1f};"
-            f"kv_bytes={r['kv_bytes']};params_bytes={r['params_bytes']}")
+            f"kv_bytes={r['kv_bytes']};params_bytes={r['params_bytes']};"
+            f"kv_read_bytes={r['kv_read_bytes']};path={r['path']}")
+
+
+def bench_decode_attention() -> None:
+    """Decode-attention hot path: fp cache vs int8 dequant-on-read vs the
+    fused int8-KV kernel (per-step ms + analytic KV-bytes-read counter;
+    interpret mode off-TPU -- dispatch validation, not kernel-speed truth)."""
+    from benchmarks.serve_throughput import bench_decode_attn
+    for mode in ("fp", "dequant", "fused"):
+        r = bench_decode_attn(mode, slots=2, max_seq=64, kv_heads=2,
+                              groups=2, head_dim=32, iters=2)
+        row(f"decode_attn::{mode}", r["us_per_step"],
+            f"decode_attn_ms={r['decode_attn_ms']:.3f};"
+            f"kv_read_bytes={r['kv_read_bytes']}")
 
 
 def table_roofline() -> None:
@@ -230,6 +244,7 @@ def main() -> None:
     bench_train_throughput()
     bench_opt_update()
     bench_serve()
+    bench_decode_attention()
     table_paper_results()
     table_memory_and_linear_share()
     table_roofline()

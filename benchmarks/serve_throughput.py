@@ -1,5 +1,6 @@
-"""Serving throughput: engine prefill / decode tokens-per-second and KV-cache
-residency, fp vs prepared-int8 weights vs int8 KV (gpt2-small smoke config).
+"""Serving throughput: engine prefill / decode tokens-per-second, KV-cache
+residency, and the decode-attention hot path -- fp vs prepared-int8 weights
+vs int8 KV, dequant-on-read vs fused kernel (gpt2-small smoke config).
 
 Rows (CSV, matching benchmarks/run.py):
 
@@ -7,25 +8,38 @@ Rows (CSV, matching benchmarks/run.py):
     serve::<policy>::decode_tok_s    -- batched decode steps x slots / s
     serve::<policy>::kv_bytes        -- resident decode-state bytes
     serve::<policy>::params_bytes    -- resident (prepared) parameter bytes
+    decode_attn::<mode>              -- per-step decode-attention ms + the
+                                        analytic KV-bytes-read counter
+                                        (fp | dequant | fused)
 
 Usage:
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
+        [--decode-smoke] [--json] [--sweep]
 
-``--smoke`` runs one tiny engine pass and asserts sane output -- the CI
-serve-smoke gate.
+``--smoke`` runs one tiny engine pass and asserts sane output (the CI
+serve-smoke gate).  ``--decode-smoke`` is the decode-attention CI gate: it
+pins the fused kernel on (interpret mode), asserts fused-vs-dequant logit
+parity and that the fused path's analytic KV read is < 1/3 of the
+dequant-on-read bytes.  ``--sweep`` times the fused kernel across kv tile
+lengths (the ``REPRO_DECODE_BLOCK`` autotune hook, passed explicitly so
+each size retraces).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.infer import Engine, Request, params_nbytes
 
 POLICIES = ("*=fp", "*=w8c", "*=w8c+a8t", "kv_cache=a8t,*=w8c")
+
+SWEEP_BLOCKS = (64, 128, 256, 512)
 
 
 def build(policy: str, slots: int = 8, max_seq: int = 160):
@@ -60,14 +74,127 @@ def bench_engine(policy: str, *, slots: int = 8, prompt_len: int = 64,
         "decode_tok_s": total_decode / dt_decode,
         "kv_bytes": eng.kv_cache_nbytes(),
         "params_bytes": params_nbytes(eng.params),
+        "kv_read_bytes": eng.kv_decode_read_bytes(),
+        "path": eng.path_summary(),
     }
+
+
+# ---------------------------------------------------------------------------
+# Decode-attention micro-benchmark: one layer's attention read, three paths
+# ---------------------------------------------------------------------------
+
+def _decode_attn_inputs(slots: int, max_seq: int, kv_heads: int, groups: int,
+                        head_dim: int, seed: int = 0):
+    """Random ragged int8 cache + fp mirror + the step's fresh q/k/v rows
+    (the shared fixture from kernels/ref.py, lengths spread over the slots)."""
+    from repro.kernels.ref import decode_attn_inputs
+    lengths = [(i * 7 + 3) % (max_seq - 1) for i in range(slots)]
+    return decode_attn_inputs(slots, max_seq, kv_heads, groups, head_dim,
+                              lengths, seed)
+
+
+def _fp_attend(q, kf, vf, pos):
+    s_ = jnp.einsum("bkgh,btkh->bkgt", q, kf,
+                    preferred_element_type=jnp.float32)
+    s_ = s_ / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    t = jnp.arange(kf.shape[1])
+    s_ = jnp.where((t[None, :] <= pos[:, None])[:, None, None, :], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bkgt,btkh->bkgh", p, vf)
+
+
+def bench_decode_attn(mode: str, *, slots: int = 8, max_seq: int = 512,
+                      kv_heads: int = 4, groups: int = 4, head_dim: int = 64,
+                      iters: int = 10, block_k=None) -> dict:
+    """Per-step decode-attention time + the analytic KV-bytes-read counter
+    for one layer.  ``fp`` attends on an fp cache, ``dequant`` dequantizes
+    the whole int8 buffer (the reference), ``fused`` runs the Pallas kernel
+    (interpret mode off-TPU: dispatch validation, not kernel-speed truth)."""
+    from repro.kernels.decode_attn import decode_attention, decode_kv_read_bytes
+    from repro.kernels.ref import decode_attn_ref
+    q, kq, ks, vq, vs, kf, vf, nk, nv, pos = _decode_attn_inputs(
+        slots, max_seq, kv_heads, groups, head_dim)
+
+    if mode == "fp":
+        rows = jnp.arange(slots)
+        fn = jax.jit(lambda: _fp_attend(q, kf.at[rows, pos].set(nk),
+                                        vf.at[rows, pos].set(nv), pos))
+    elif mode == "dequant":
+        fn = jax.jit(lambda: decode_attn_ref(q, kq, ks, vq, vs,
+                                             nk, nv, pos)[0])
+    elif mode == "fused":
+        fn = jax.jit(lambda: decode_attention(q, kq, ks, vq, vs, nk, nv, pos,
+                                              block_k=block_k)[0])
+    else:
+        raise ValueError(mode)
+
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    ms = (time.perf_counter() - t0) / iters * 1e3
+    return {
+        "decode_attn_ms": ms,
+        "us_per_step": ms * 1e3,
+        "kv_read_bytes": decode_kv_read_bytes(
+            mode, slots, max_seq, kv_heads, head_dim, fp_bytes=4),
+    }
+
+
+def decode_smoke() -> None:
+    """CI gate: fused kernel parity vs the dequant oracle (interpret mode)
+    plus the memory-roofline claim on the analytic byte counters."""
+    from repro.kernels.decode_attn import decode_attention, decode_kv_read_bytes
+    from repro.kernels.ref import decode_attn_ref
+    q, kq, ks, vq, vs, _, _, nk, nv, pos = _decode_attn_inputs(
+        4, 32, 2, 3, 16)
+    ref, (rkq, rks, rvq, rvs) = decode_attn_ref(q, kq, ks, vq, vs,
+                                                nk, nv, pos)
+    out, fkq, fks, fvq, fvs = decode_attention(q, kq, ks, vq, vs, nk, nv,
+                                               pos, block_k=8,
+                                               interpret=True)
+    diff = float(jnp.max(jnp.abs(out - ref)))
+    assert diff < 1e-4, f"fused vs dequant logits diverge: {diff}"
+    assert jnp.array_equal(fkq, rkq) and jnp.array_equal(fvq, rvq), \
+        "fused scatter payload != reference"
+    fused = decode_kv_read_bytes("fused", 8, 2048, 8, 128, fp_bytes=2)
+    deq = decode_kv_read_bytes("dequant", 8, 2048, 8, 128, fp_bytes=2)
+    fp = decode_kv_read_bytes("fp", 8, 2048, 8, 128, fp_bytes=2)
+    assert fused * 3 < deq, (fused, deq)
+    assert fused < fp, (fused, fp)
+    # the engine reports the fused path when it is enabled
+    eng = build("kv_cache=a8t,*=w8c", slots=2, max_seq=24)
+    assert "int8-fused" in eng.path_summary(), eng.path_summary()
+    assert eng.kv_decode_read_bytes() < build("*=fp", slots=2, max_seq=24
+                                              ).kv_decode_read_bytes()
+    eng.submit(Request(tokens=[1, 2, 3, 4], max_new_tokens=4))
+    eng.submit(Request(tokens=[5, 6], max_new_tokens=3))
+    out_ = eng.run()
+    assert [len(r.tokens) for r in out_] == [4, 3], out_
+    print(f"decode-attn smoke ok: max|fused-dequant|={diff:.2e}, "
+          f"kv_read fused={fused} dequant={deq} fp={fp}, "
+          f"engine path [{eng.path_summary()}]")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny engine pass + sanity assertions (CI gate)")
+    ap.add_argument("--decode-smoke", action="store_true",
+                    help="fused decode-attention parity + KV-bytes gate (CI)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one JSON object instead of CSV rows")
+    ap.add_argument("--sweep", action="store_true",
+                    help="fused-kernel timing across kv tile lengths "
+                         "(REPRO_DECODE_BLOCK values)")
     args = ap.parse_args()
+
+    if args.decode_smoke:
+        import os
+        os.environ.setdefault("REPRO_FUSED_DECODE", "1")
+        decode_smoke()
+        return
 
     if args.smoke:
         eng = build("kv_cache=a8t,*=w8c", slots=2, max_seq=32)
@@ -80,16 +207,44 @@ def main() -> None:
         assert params_nbytes(eng.params) < params_nbytes(fp.params), \
             "prepared weights not smaller"
         print("serve smoke ok:", [(r.request_id, r.finish_reason) for r in out],
-              f"kv {eng.kv_cache_nbytes()}B vs fp {fp.kv_cache_nbytes()}B")
+              f"kv {eng.kv_cache_nbytes()}B vs fp {fp.kv_cache_nbytes()}B,",
+              f"path [{eng.path_summary()}]")
         return
 
-    print("name,us_per_call,derived")
+    if args.sweep:
+        rows = []
+        for blk in SWEEP_BLOCKS:
+            r = bench_decode_attn("fused", block_k=blk, iters=3)
+            rows.append({"block_k": blk, **r})
+        if args.json:
+            print(json.dumps(rows, indent=2))
+        else:
+            print("name,us_per_call,derived")
+            for r in rows:
+                print(f"decode_attn::fused::b{r['block_k']},"
+                      f"{r['us_per_step']:.1f},"
+                      f"kv_read_bytes={r['kv_read_bytes']}")
+        return
+
+    results = {}
     for pol in POLICIES:
-        r = bench_engine(pol)
+        results[pol] = bench_engine(pol)
+    attn = {mode: bench_decode_attn(mode, iters=3)
+            for mode in ("fp", "dequant", "fused")}
+    if args.json:
+        print(json.dumps({"engine": results, "decode_attn": attn}, indent=2))
+        return
+    print("name,us_per_call,derived")
+    for pol, r in results.items():
         print(f"serve::{pol}::prefill_tok_s,0.0,{r['prefill_tok_s']:.1f}")
         print(f"serve::{pol}::decode_tok_s,0.0,{r['decode_tok_s']:.1f}")
         print(f"serve::{pol}::kv_bytes,0.0,{r['kv_bytes']}")
         print(f"serve::{pol}::params_bytes,0.0,{r['params_bytes']}")
+        print(f"serve::{pol}::kv_read_bytes,0.0,{r['kv_read_bytes']}")
+    for mode, r in attn.items():
+        print(f"decode_attn::{mode},{r['us_per_step']:.1f},"
+              f"decode_attn_ms={r['decode_attn_ms']:.3f};"
+              f"kv_read_bytes={r['kv_read_bytes']}")
 
 
 if __name__ == "__main__":

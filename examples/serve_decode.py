@@ -59,6 +59,8 @@ def main():
     print(f"engine: policy [{engine.policy.describe()}] "
           f"params {params_nbytes(engine.params) / 1e6:.2f} MB "
           f"kv-state {engine.kv_cache_nbytes() / 1e6:.2f} MB")
+    print(f"engine: path [{engine.path_summary()}] "
+          f"kv-read/step {engine.kv_decode_read_bytes() / 1e6:.2f} MB")
 
     # a mixed bag: 2x slots requests with varied prompt lengths, so slots
     # turn over and admission backfills (continuous batching)

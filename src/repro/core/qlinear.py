@@ -210,6 +210,20 @@ def int8_backend_supported(recipe: Optional[QuantRecipe]) -> bool:
             and a.granularity in _INT8_GRANS_A)
 
 
+def int8_decode_attn_supported(spec) -> bool:
+    """True when the fused Pallas decode-attention / q8-prefill kernels can
+    consume a KV cache stored under ``spec`` (see kernels/decode_attn.py):
+    symmetric 8-bit nearest-rounded PER_TOKEN -- one scale per (position,
+    head) row, the sidecar layout the kernels fold in-register.  Per-tensor
+    KV specs scale per *slot write block* (a reduction across heads and
+    positions that cannot map onto the per-(slot, head) kernel grid) and stay
+    on the dequantize-on-read reference path."""
+    return (spec is not None and spec.bits == 8 and spec.symmetric
+            and spec.block_size == 0 and not spec.sqrt_domain
+            and spec.round_mode is RoundMode.NEAREST
+            and spec.granularity is Granularity.PER_TOKEN)
+
+
 def int8_bwd_supported(recipe: Optional[QuantRecipe]) -> bool:
     """True when the backward is expressible as the transposed int8 kernels'
     contract: the forward contract plus a symmetric 8-bit nearest-rounded

@@ -41,6 +41,7 @@ from repro.core.qadam import QState
 from repro.core.qconfig import (Granularity, QuantRecipe, QuantSpec,
                                 RoundMode, get_recipe)
 from repro.core.qlinear import (int8_backend_supported, int8_bwd_supported,
+                                int8_decode_attn_supported,
                                 int8_quantized_linear, quantized_linear)
 from repro.core.quantizer import fake_quant, maybe_fake_quant
 
@@ -68,10 +69,15 @@ class KernelBackend(NamedTuple):
     reports whether the backend's backward also runs real quantized compute
     for the recipe (capability metadata -- the backend's own vjp is expected
     to apply the same predicate and degrade gracefully on its own).
+    ``decode_attn_supports(kv_spec)`` reports whether the backend ships
+    attention kernels that consume a KV cache stored under that spec
+    *directly* (int8 payload + scale sidecars, no fp materialization) --
+    the serving decode/prefill hot path dispatches on it.
     """
     fn: Callable
     supports: Callable
     bwd_supports: Callable = lambda recipe: False
+    decode_attn_supports: Callable = lambda spec: False
 
 
 KERNEL_BACKENDS: Dict[str, KernelBackend] = {}
@@ -79,14 +85,18 @@ KERNEL_BACKENDS: Dict[str, KernelBackend] = {}
 
 def register_backend(name: str, fn: Callable,
                      supports: Callable = lambda recipe: True,
-                     bwd_supports: Callable = lambda recipe: False) -> None:
-    KERNEL_BACKENDS[name] = KernelBackend(fn, supports, bwd_supports)
+                     bwd_supports: Callable = lambda recipe: False,
+                     decode_attn_supports: Callable = lambda spec: False,
+                     ) -> None:
+    KERNEL_BACKENDS[name] = KernelBackend(fn, supports, bwd_supports,
+                                          decode_attn_supports)
 
 
 register_backend("fake_quant", quantized_linear)
 register_backend("int8_pallas", int8_quantized_linear,
                  supports=int8_backend_supported,
-                 bwd_supports=int8_bwd_supported)
+                 bwd_supports=int8_bwd_supported,
+                 decode_attn_supports=int8_decode_attn_supported)
 
 
 def _prepared_int8_ok(recipe: Optional[QuantRecipe], w: QState) -> bool:
@@ -281,6 +291,39 @@ class QuantPolicy:
             return name, ()
         caps = ("fwd", "bwd") if be.bwd_supports(recipe) else ("fwd",)
         return name, caps
+
+    def decode_attn_backend(self) -> Tuple[str, Tuple[str, ...]]:
+        """``(backend_name, caps)`` for the KV-cache *consumption* path,
+        :meth:`effective_backend`-style.  ``('fp', ())`` when the cache is
+        stored fp; ``('<backend>', ('decode', 'prefill'))`` when a registered
+        backend's attention kernels consume the stored payload directly
+        (fused decode step + q8 prefill); ``('dequant', ())`` when the cache
+        is quantized but no kernel fits the spec, i.e. the reference
+        dequantize-on-read path runs.
+
+        Unlike :meth:`linear` dispatch this is a capability scan, not a
+        rule-backend lookup: ``fake_quant`` has no attention kernels, so a
+        plain ``kv_cache=a8t`` rule (default backend) still finds the
+        ``int8_pallas`` kernels.  The resolved rule backend is preferred when
+        several backends qualify; ``REPRO_FUSED_DECODE=0`` opts out at the
+        call site (see models/attention.py).
+
+        ``decode_attn_supports`` is capability *metadata* (like
+        ``bwd_supports``): the kernel entry points are not carried on the
+        registry record, so ``int8_pallas`` is currently the only backend
+        models/attention.py knows how to run -- a new backend registering
+        this capability must also be threaded through ``_fused_kv_ok`` /
+        the fused branches there.
+        """
+        spec = self.kv_spec()
+        if spec is None:
+            return "fp", ()
+        preferred = self.resolve("kv_cache").backend
+        names = [preferred] + [n for n in KERNEL_BACKENDS if n != preferred]
+        for name in names:
+            if KERNEL_BACKENDS[name].decode_attn_supports(spec):
+                return name, ("decode", "prefill")
+        return "dequant", ()
 
     def kv_spec(self) -> Optional[QuantSpec]:
         """Storage spec for the decode KV cache (role ``kv_cache``), or None

@@ -15,7 +15,15 @@ parallel config surface:
   integers and contains zero weight-quantization ops;
 * **int8 KV cache** -- a policy rule on the ``kv_cache`` role (e.g.
   ``"kv_cache=a8t,*=w8c"``) switches cache storage to int8 payloads with
-  per-(position, head) scales, dequantized on read;
+  per-(position, head) scales.  Where the fused attention kernels support
+  the spec (``policy.decode_attn_backend()``), decode attends *directly* on
+  the quantized cache -- the per-slot ``(B,)`` position vectors feed the
+  kernel grid as validity lengths and scatter rows, one int8 cache read and
+  one int8 row write per step (kernels/decode_attn.py) -- and prefill runs
+  the dequant-prologue flash kernel; otherwise the cache is dequantized on
+  read (the bit-compared reference).  :meth:`Engine.path_summary` reports
+  which path runs, :meth:`Engine.kv_decode_read_bytes` its analytic per-step
+  KV traffic;
 * **sampling** -- one :class:`SamplingParams` (greedy / temperature / top-k /
   top-p) is shared by all requests in the batch and baked into the step.
 
@@ -32,7 +40,9 @@ serving stay on the legacy ``greedy_generate`` loop.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import os
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
@@ -45,6 +55,25 @@ from repro.infer.prepare import prepare_params
 from repro.infer.sampling import SamplingParams, sample
 
 ENGINE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+@contextlib.contextmanager
+def _pinned_env(values: Dict[str, str]):
+    """Pin env-read knobs around a trace.  jax.jit traces lazily (on first
+    call, not at Engine construction), so the step closures re-apply the
+    construction-time snapshot while tracing -- the compiled path is then
+    guaranteed to match what ``path_summary`` reports, however the env
+    changes in between."""
+    old = {k: os.environ.get(k) for k in values}
+    os.environ.update(values)
+    try:
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
 
 
 @dataclasses.dataclass
@@ -101,6 +130,16 @@ class Engine:
         self._dtype = jnp.dtype(cfg.dtype)
         self._state = model.init_decode_state(
             self.max_slots, self.max_seq, 0, self._dtype, policy=self.policy)
+        from repro.kernels.decode_attn import (default_block_k,
+                                               effective_block_k,
+                                               fused_decode_enabled)
+        self._kv_fused = (self.policy.decode_attn_backend()[0]
+                          == "int8_pallas" and fused_decode_enabled())
+        # report the tile the kernel will actually compile for max_seq-row
+        # caches, not the requested/env tile
+        self._kv_block = effective_block_k(self.max_seq)
+        self._kv_env = {"REPRO_FUSED_DECODE": "1" if self._kv_fused else "0",
+                        "REPRO_DECODE_BLOCK": str(default_block_k())}
 
         self._queue: deque = deque()
         self._free: List[int] = list(range(self.max_slots))
@@ -112,14 +151,16 @@ class Engine:
         self._key = jax.random.PRNGKey(seed)
 
         def _prefill(params, toks, last_pos):
-            return self.model.prefill(params, {"tokens": toks},
-                                      policy=self.policy,
-                                      max_seq=self.max_seq,
-                                      last_pos=last_pos)
+            with _pinned_env(self._kv_env):
+                return self.model.prefill(params, {"tokens": toks},
+                                          policy=self.policy,
+                                          max_seq=self.max_seq,
+                                          last_pos=last_pos)
 
         def _decode(params, state, tok, pos, key):
-            logits, state = self.model.decode(params, state, tok, pos,
-                                              policy=self.policy)
+            with _pinned_env(self._kv_env):
+                logits, state = self.model.decode(params, state, tok, pos,
+                                                  policy=self.policy)
             return sample(logits, self.sampling, key), state
 
         def _scatter(state, new, slots):
@@ -127,9 +168,14 @@ class Engine:
                 lambda buf, n: buf.at[:, slots].set(n.astype(buf.dtype)),
                 state, new)
 
+        # donate the decode state: it is replaced by the return value every
+        # step, and without donation XLA must defensively copy the buffers
+        # the fused kernel aliases in place (input_output_aliases on the
+        # int8 KV caches) -- a whole-cache copy per step that would erase
+        # the one-read-one-row-write schedule
         self._prefill_jit = jax.jit(_prefill)
-        self._decode_jit = jax.jit(_decode)
-        self._scatter_jit = jax.jit(_scatter)
+        self._decode_jit = jax.jit(_decode, donate_argnums=(1,))
+        self._scatter_jit = jax.jit(_scatter, donate_argnums=(0,))
 
     # -- public API --------------------------------------------------------
 
@@ -181,9 +227,55 @@ class Engine:
         return jnp.asarray(out)
 
     def kv_cache_nbytes(self) -> int:
-        """Resident bytes of the decode state (KV caches + SSM states)."""
+        """Resident bytes of the decode state (KV caches + SSM states).
+        With int8 KV this is the payload+sidecar footprint the fused decode
+        path reads per step -- see :meth:`kv_decode_read_bytes`."""
         return sum(int(x.size) * x.dtype.itemsize
                    for x in jax.tree_util.tree_leaves(self._state))
+
+    def _kv_mode(self) -> str:
+        """Which KV consumption path decode runs: ``fused`` (int8 kernels),
+        ``dequant`` (int8 storage, dequantize-on-read), ``fp``, or ``none``
+        (no KV cache -- pure SSM).  Snapshotted at construction and pinned
+        around the step traces (``_pinned_env``), so the report always
+        matches the compiled path -- flipping ``REPRO_FUSED_DECODE`` /
+        ``REPRO_DECODE_BLOCK`` after construction affects neither."""
+        caches = self._state.get("caches")
+        if caches is None:
+            return "none"
+        if "k_scale" not in caches:
+            return "fp"
+        return "fused" if self._kv_fused else "dequant"
+
+    def kv_decode_read_bytes(self) -> int:
+        """Analytic KV bytes moved per decode step across the stack (the
+        roofline term the fused path shrinks; 0 without a KV cache).  See
+        ``kernels.decode_attn.decode_kv_read_bytes`` for the per-mode
+        accounting."""
+        caches = self._state.get("caches")
+        if caches is None:
+            return 0
+        from repro.kernels.decode_attn import decode_kv_read_bytes
+        stacks, b, s, kh, hd = caches["k"].shape
+        return decode_kv_read_bytes(self._kv_mode(), b, s, kh, hd,
+                                    n_layers=stacks,
+                                    fp_bytes=self._dtype.itemsize)
+
+    def path_summary(self) -> str:
+        """``train_path_summary``-style one-liner for the serving path:
+        whether weights are prepared int8 payloads, and which KV consumption
+        path decode runs (``kv=`` segment)."""
+        from repro.core.qadam import QState
+        prepared = any(isinstance(leaf, QState) for leaf in
+                       jax.tree_util.tree_leaves(
+                           self.params,
+                           is_leaf=lambda x: isinstance(x, QState)))
+        mode = self._kv_mode()
+        if mode == "fused":
+            kv = f"int8-fused(b{self._kv_block})"
+        else:
+            kv = {"dequant": "int8-dequant", "fp": "fp", "none": "none"}[mode]
+        return (f"weights={'prepared-int8' if prepared else 'raw'} kv={kv}")
 
     # -- scheduler internals -----------------------------------------------
 

@@ -1,0 +1,268 @@
+"""Fused int8-KV decode attention: attend directly on the quantized cache.
+
+The serving hot path stores the KV cache as int8 payloads with per-(position,
+head) fp32 scale sidecars (``policy.kv_spec()``), but the reference decode
+path dequantizes the *whole* buffer to fp and re-casts before attending --
+every step, every layer.  At the memory roofline that reads ~5-9x the
+quantized bytes (int8 read + fp materialize + fp re-read) and erases the
+storage win exactly where it matters most (Jorgensen 2025; Bondarenko et al.
+2021 make the same point for kernels generally: the low-bit payload must be
+consumed *in-kernel*).
+
+This kernel runs one decode step per (slot, kv-head) grid cell:
+
+  stream in   int8 K/V payload tiles + fp32 scale sidecars (BlockSpec DMA),
+              the (G, hd) query tile of the head group, and the step's fresh
+              fp K/V rows
+  in-register dequantize by folding the per-position scales into the online-
+              softmax scores (K) and probabilities (V) -- rank-1 multiplies,
+              no fp K/V tile ever materializes; scale==0 padding rows are
+              guarded like the NT/TN matmul kernels
+  fused       quantize the new K/V row (symmetric nearest per-(position,
+              head), the `_kv_quant` codec) and scatter payload + scales into
+              the cache row ``pos[b]`` via scalar-prefetch-indexed output
+              blocks aliased onto the cache buffers
+  write out   the (G, hd) context tile and ONE int8 row + scale pair per
+              K/V buffer -- one read of the int8 cache, one int8 row write.
+
+Per-slot ``pos`` (B,) drives both the validity mask (cache rows < pos[b])
+and the scatter target, so ragged continuous-batching slots are handled
+in-kernel.  ``REPRO_DECODE_BLOCK`` overrides the kv tile length for
+block-size autotune sweeps (``benchmarks/serve_throughput.py --sweep``).
+
+TARGET: TPU.  VALIDATED: interpret=True vs the dequantize-whole-buffer
+reference path (tests/test_decode_attn.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attn import online_softmax_update
+from repro.kernels.pallas_compat import CompilerParams
+
+DEFAULT_BLOCK_K = 256
+
+_EPS = 1e-12
+
+
+def default_block_k() -> int:
+    """KV tile length used when the caller passes none.  ``REPRO_DECODE_BLOCK``
+    overrides it (read at call time) for block-size autotune sweeps, the
+    decode-kernel counterpart of ``REPRO_OPT_BLOCK``."""
+    v = os.environ.get("REPRO_DECODE_BLOCK", "")
+    return int(v) if v else DEFAULT_BLOCK_K
+
+
+def effective_block_k(s: int, block_k: Optional[int] = None) -> int:
+    """The kv tile length :func:`decode_attention` will actually compile for
+    an ``s``-row cache: the requested (or ``REPRO_DECODE_BLOCK``/default)
+    tile clamped to ``s`` and shrunk to a divisor.  Exposed so reporting
+    (``Engine.path_summary``) names the compiled tile, not the request."""
+    bk = min(block_k or default_block_k(), s)
+    while s % bk:
+        bk //= 2
+    return bk
+
+
+def fused_decode_enabled() -> bool:
+    """Should the int8-KV attention kernels replace the dequantize-whole-
+    buffer reference path?  Default: on TPU (the kernels' target); interpret
+    mode is functional but slow, so CPU keeps the reference path unless
+    ``REPRO_FUSED_DECODE=1`` forces it (tests/CI pin ``1``; ``0`` forces the
+    reference path everywhere)."""
+    force = os.environ.get("REPRO_FUSED_DECODE", "")
+    if force:
+        return force != "0"
+    return jax.default_backend() == "tpu"
+
+
+# never-written cache rows carry scale == 0 sidecars (buffers init to
+# zeros); their payloads are 0 and the validity mask excludes them anyway,
+# but guard to 1.0 so no reciprocal/dequant on padding lanes can emit
+# NaN/Inf -- the canonical guard from the int8 matmul kernel family
+from repro.kernels.int8_matmul import scale_guard as _guard
+
+
+def _decode_attn_kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
+                        nk_ref, nv_ref,
+                        o_ref, okq_ref, oks_ref, ovq_ref, ovs_ref,
+                        m_ref, l_ref, acc_ref, *,
+                        bk: int, nblk: int, scale: float,
+                        qmin: int, qmax: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    pos = pos_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tiles entirely past the slot's valid rows contribute nothing: skip
+    @pl.when(ki * bk < pos)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, hd)
+        kt = kq_ref[0, :, 0, :].astype(jnp.float32)            # (bk, hd)
+        ksc = _guard(ks_ref[0, :, 0, :].astype(jnp.float32))   # (bk, 1)
+        s = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * ksc[:, 0][None, :]          # fold K dequant into the scores
+        t = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(t < pos, s, -1e30)    # prior rows only; new row below
+        vsc = _guard(vs_ref[0, :, 0, :].astype(jnp.float32))   # (bk, 1)
+        online_softmax_update(s, vq_ref[0, :, 0, :].astype(jnp.float32),
+                              m_ref, l_ref, acc_ref,
+                              v_fold=vsc[:, 0][None, :])
+
+    @pl.when(ki == nblk - 1)
+    def _done():
+        # fused quantize + scatter of the step's K/V row: the attention reads
+        # the freshly *quantized* values (parity with the stored form), and
+        # the int8 payload + scale land in the cache row ``pos[b]`` through
+        # the scalar-prefetch-indexed, cache-aliased output blocks.
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, hd)
+        knew = nk_ref[0, 0].astype(jnp.float32).reshape(1, -1)  # (1, hd)
+        vnew = nv_ref[0, 0].astype(jnp.float32).reshape(1, -1)
+        ks_new = jnp.maximum(jnp.max(jnp.abs(knew), axis=-1, keepdims=True),
+                             _EPS) / qmax
+        kq_new = jnp.clip(jnp.round(knew / ks_new), qmin, qmax)
+        vs_new = jnp.maximum(jnp.max(jnp.abs(vnew), axis=-1, keepdims=True),
+                             _EPS) / qmax
+        vq_new = jnp.clip(jnp.round(vnew / vs_new), qmin, qmax)
+        s_new = jax.lax.dot_general(q, kq_new * ks_new,
+                                    (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s_new)                     # (G, 1)
+        alpha = jnp.exp(m_prev - m_new)
+        p_new = jnp.exp(s_new - m_new)
+        l = alpha * l_ref[...] + p_new
+        acc = acc_ref[...] * alpha + p_new * (vq_new * vs_new)
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        okq_ref[0, 0, 0] = kq_new[0].astype(okq_ref.dtype)
+        oks_ref[0, 0, 0, 0] = ks_new[0, 0]
+        ovq_ref[0, 0, 0] = vq_new[0].astype(ovq_ref.dtype)
+        ovs_ref[0, 0, 0, 0] = vs_new[0, 0]
+
+
+def decode_attention(q: jnp.ndarray,
+                     kq: jnp.ndarray, ks: jnp.ndarray,
+                     vq: jnp.ndarray, vs: jnp.ndarray,
+                     new_k: jnp.ndarray, new_v: jnp.ndarray,
+                     pos: jnp.ndarray, *,
+                     qmin: int = -128, qmax: int = 127,
+                     block_k: Optional[int] = None,
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                jnp.ndarray, jnp.ndarray]:
+    """One fused decode-attention step on the int8 KV cache.
+
+    q: (B, K, G, hd) fp grouped queries; kq/vq: (B, S, K, hd) int8 payloads;
+    ks/vs: (B, S, K, 1) fp32 scale sidecars; new_k/new_v: (B, K, hd) fp rows
+    for this step (RoPE already applied); pos: (B,) int32 per-slot validity
+    lengths == scatter rows.  Returns ``(ctx, kq', ks', vq', vs')`` where the
+    primed buffers are the caches with the new row written (aliased in
+    place: the inputs are donated).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, kh, g, hd = q.shape
+    s = kq.shape[1]
+    bk = effective_block_k(s, block_k)
+    nblk = s // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    def row(pos_ref, bi):
+        # scatter target.  pos == s is the degenerate freed-slot case (a
+        # length-finished slot keeps decoding in the batch with its stale
+        # position until readmission): clamp to the last row, matching the
+        # reference path's dynamic_update_slice semantics -- the row is
+        # never read back (masks stop at the slot's next admitted length)
+        # and the slot's output is discarded by the scheduler.
+        return jnp.minimum(pos_ref[bi], s - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, k, j, pos_ref: (b, k, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, k, j, pos_ref: (b, j, k, 0)),
+            pl.BlockSpec((1, bk, 1, 1), lambda b, k, j, pos_ref: (b, j, k, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, k, j, pos_ref: (b, j, k, 0)),
+            pl.BlockSpec((1, bk, 1, 1), lambda b, k, j, pos_ref: (b, j, k, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, k, j, pos_ref: (b, k, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, k, j, pos_ref: (b, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, k, j, pos_ref: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, k, j, pos_ref: (b, row(pos_ref, b), k, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda b, k, j, pos_ref: (b, row(pos_ref, b), k, 0)),
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, k, j, pos_ref: (b, row(pos_ref, b), k, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda b, k, j, pos_ref: (b, row(pos_ref, b), k, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),      # running max
+            pltpu.VMEM((g, 1), jnp.float32),      # running sum
+            pltpu.VMEM((g, hd), jnp.float32),     # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_attn_kernel, bk=bk, nblk=nblk, scale=scale,
+                          qmin=qmin, qmax=qmax),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+            jax.ShapeDtypeStruct(kq.shape, kq.dtype),
+            jax.ShapeDtypeStruct(ks.shape, ks.dtype),
+            jax.ShapeDtypeStruct(vq.shape, vq.dtype),
+            jax.ShapeDtypeStruct(vs.shape, vs.dtype),
+        ],
+        # the int8 caches and scale sidecars update in place: only the
+        # pos[b] row blocks are DMA'd back
+        input_output_aliases={2: 1, 3: 2, 4: 3, 5: 4},
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos, q, kq, ks, vq, vs, new_k, new_v)
+
+
+def decode_kv_read_bytes(mode: str, batch: int, max_seq: int,
+                         n_kv_heads: int, head_dim: int, *,
+                         n_layers: int = 1, fp_bytes: int = 2) -> int:
+    """Analytic HBM bytes moved per decode step by the KV read, per the
+    attention path's access pattern (the benchmark's roofline claim):
+
+      * ``fp``      -- read the fp K+V buffers once.
+      * ``dequant`` -- dequantize-on-read reference: read the int8 payloads
+        and fp32 scale sidecars, materialize fp K+V copies (one write), and
+        the attention reads those copies back (one read).
+      * ``fused``   -- the kernel's BlockSpec DMA schedule: read the int8
+        payloads + scale sidecars, nothing materialized.
+
+    The fused path's one int8-row write (and q/ctx tiles) is O(1/max_seq) of
+    the cache read and is excluded from all three for comparability.
+    """
+    elems = batch * max_seq * n_kv_heads * head_dim      # per buffer (K or V)
+    scales = batch * max_seq * n_kv_heads                # fp32 sidecar elems
+    if mode == "fp":
+        per_layer = 2 * elems * fp_bytes
+    elif mode == "dequant":
+        per_layer = 2 * (elems * (1 + 2 * fp_bytes) + 4 * scales)
+    elif mode == "fused":
+        per_layer = 2 * (elems + 4 * scales)
+    else:
+        raise ValueError(f"unknown mode {mode!r} (fp | dequant | fused)")
+    return per_layer * n_layers

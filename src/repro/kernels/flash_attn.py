@@ -27,10 +27,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.int8_matmul import scale_guard
 from repro.kernels.pallas_compat import CompilerParams
 
 BLOCK_Q = 512
 BLOCK_K = 512
+
+
+def online_softmax_update(s, vt, m_ref, l_ref, acc_ref, v_fold=None):
+    """One online-softmax accumulation step: fold the scores tile ``s`` into
+    the running (m, l, acc) scratch against the value tile ``vt``.  Shared
+    by every forward kernel (fp, LSE-emitting, int8-dequant-prologue, and
+    the decode kernel in decode_attn.py) so the recurrence exists once.
+    ``v_fold`` multiplies the probabilities by a rank-1 factor -- the V
+    dequant scale fold of the quantized variants."""
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    if v_fold is not None:
+        p = p * v_fold
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
 
 def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -63,15 +84,7 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             kpos = ki * bk + jax.lax.broadcasted_iota(
                 jnp.int32, (bq, bk), 1)
             s = jnp.where(kpos <= qpos, s, -1e30)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
-        m_ref[...] = m_new
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        online_softmax_update(s, v_ref[0], m_ref, l_ref, acc_ref)
 
     @pl.when(ki == nk - 1)
     def _done():
@@ -149,15 +162,7 @@ def _flash_fwd_lse_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
             kpos = ki * bk + jax.lax.broadcasted_iota(
                 jnp.int32, (bq, bk), 1)
             s = jnp.where(kpos <= qpos, s, -1e30)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
-        m_ref[...] = m_new
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        online_softmax_update(s, v_ref[0], m_ref, l_ref, acc_ref)
 
     @pl.when(ki == nk - 1)
     def _done():
@@ -385,6 +390,107 @@ def _fa_bwd(causal, q_offset, block_q, block_k, interpret, res, g):
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# int8-KV prefill: the forward kernel with a dequant prologue.  Consumes the
+# decode cache's stored form -- (B, Skv, K, hd) int8 payloads + (B, Skv, K, 1)
+# fp32 per-(position, head) scale sidecars -- directly, so int8-KV prefill
+# stops materializing a full fp K/V copy of the (max_seq-sized) cache buffer.
+# GQA rides on the index maps (kv block h // g), no head repeat.  Forward-only
+# (serving path); scale==0 padding rows are guarded (see decode_attn._guard).
+# ---------------------------------------------------------------------------
+
+def _flash_fwd_q8_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+                         bq: int, bk: int, nk: int, q_offset: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = ((ki * bk) <= (q_offset + qi * bq + bq - 1)) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale       # (bq, d)
+        kt = kq_ref[0, :, 0, :].astype(jnp.float32)             # (bk, d)
+        ksc = scale_guard(ks_ref[0, :, 0, :].astype(jnp.float32))  # (bk, 1)
+        s = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * ksc[:, 0][None, :]        # fold the K dequant into the scores
+        if causal:
+            qpos = q_offset + qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, -1e30)
+        vsc = scale_guard(vs_ref[0, :, 0, :].astype(jnp.float32))
+        online_softmax_update(s, vq_ref[0, :, 0, :].astype(jnp.float32),
+                              m_ref, l_ref, acc_ref,
+                              v_fold=vsc[:, 0][None, :])
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, :, 0, :] = (acc_ref[...] /
+                             jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd_q8(q: jnp.ndarray,
+                           kq: jnp.ndarray, ks: jnp.ndarray,
+                           vq: jnp.ndarray, vs: jnp.ndarray, *,
+                           causal: bool = True, q_offset: int = 0,
+                           block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); kq/vq: (B, Skv, K, hd) int8; ks/vs: (B, Skv, K, 1)
+    fp32 -> (B, Sq, H, hd).  H % K == 0 (GQA/MQA); causal masking makes any
+    never-written cache tail (rows >= q_offset + Sq) invisible."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, h, hd = q.shape
+    skv, kh = kq.shape[1], kq.shape[2]
+    assert h % kh == 0, (h, kh)
+    if not causal and skv != q_offset + sq:
+        # nothing but the causal mask hides never-written cache rows (their
+        # guarded scale-0 / payload-0 entries would otherwise enter the
+        # softmax with exp(0) weight and silently dilute every output)
+        raise ValueError(
+            f"causal=False requires a fully written cache: Skv={skv} vs "
+            f"q_offset+Sq={q_offset + sq}")
+    g = h // kh
+    bq, bk = _blocks(sq, skv, block_q, block_k)
+    nq, nk = sq // bq, skv // bk
+    scale = 1.0 / math.sqrt(hd)
+    return pl.pallas_call(
+        functools.partial(_flash_fwd_q8_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk, q_offset=q_offset),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, hh, i, j: (b, i, hh, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, hh, i, j: (b, j, hh // g, 0)),
+            pl.BlockSpec((1, bk, 1, 1),
+                         lambda b, hh, i, j: (b, j, hh // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, hh, i, j: (b, j, hh // g, 0)),
+            pl.BlockSpec((1, bk, 1, 1),
+                         lambda b, hh, i, j: (b, j, hh // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b, hh, i, j: (b, i, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, kq, ks, vq, vs)
 
 
 def hbm_traffic_bytes(bh: int, sq: int, skv: int, d: int,

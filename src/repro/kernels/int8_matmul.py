@@ -40,10 +40,13 @@ from repro.kernels.pallas_compat import CompilerParams
 BM, BN, BK = 128, 128, 128
 
 
-def _guard(scale: jnp.ndarray) -> jnp.ndarray:
+def scale_guard(scale: jnp.ndarray) -> jnp.ndarray:
     """0-scale padding lanes -> 1.0 (their payloads are 0, so the product is
     still 0; the guard only prevents 0/0 NaN in the quant prologue and keeps
-    the epilogue multiply clean)."""
+    the epilogue multiply clean).  The canonical guard for every kernel that
+    consumes zero-padded scale sidecars (matmul epilogues, decode attention,
+    q8 prefill); oracles mirror it as ``ref._guard_ref`` and the reference
+    KV path as ``models.attention._kv_guard``."""
     return jnp.where(scale == 0.0, 1.0, scale)
 
 
@@ -60,8 +63,8 @@ def _int8_matmul_kernel(x_ref, w_ref, rs_ref, cs_ref, o_ref, acc_ref, *,
     @pl.when(pl.program_id(2) == nk - 1)
     def _done():
         acc = acc_ref[...].astype(jnp.float32)
-        o_ref[...] = (acc * _guard(rs_ref[...])
-                      * _guard(cs_ref[...])).astype(o_ref.dtype)
+        o_ref[...] = (acc * scale_guard(rs_ref[...])
+                      * scale_guard(cs_ref[...])).astype(o_ref.dtype)
 
 
 def int8_matmul(x: jnp.ndarray, w: jnp.ndarray, row_scale: jnp.ndarray,
@@ -108,7 +111,7 @@ def _int8_matmul_nt_kernel(g_ref, w_ref, fs_ref, qs_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    qs = _guard(qs_ref[...].astype(jnp.float32))              # (bm, 1)
+    qs = scale_guard(qs_ref[...].astype(jnp.float32))              # (bm, 1)
     h = g_ref[...].astype(jnp.float32) * fs_ref[...].astype(jnp.float32)
     hq = jnp.clip(jnp.round(h / qs), -128, 127).astype(jnp.int8)
     acc_ref[...] += jax.lax.dot_general(
@@ -167,7 +170,7 @@ def _int8_matmul_tn_kernel(x_ref, g_ref, fs_ref, qs_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    qs = _guard(qs_ref[...].astype(jnp.float32))              # (1, bn)
+    qs = scale_guard(qs_ref[...].astype(jnp.float32))              # (1, bn)
     h = g_ref[...].astype(jnp.float32) * fs_ref[...].astype(jnp.float32)
     hq = jnp.clip(jnp.round(h / qs), -128, 127).astype(jnp.int8)
     acc_ref[...] += jax.lax.dot_general(

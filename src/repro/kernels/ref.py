@@ -58,3 +58,64 @@ def int8_matmul_tn_ref(x: jnp.ndarray, g: jnp.ndarray,
     acc = jnp.matmul(x.astype(jnp.int32).T, hq,
                      preferred_element_type=jnp.int32)
     return (acc.astype(jnp.float32) * qs).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode_attn.py oracle: the dequantize-whole-buffer reference path (mirrors
+# models/attention.py), shared by tests/test_decode_attn.py and the
+# benchmarks/serve_throughput.py CI parity gate so the reference semantics
+# exist once.
+# ---------------------------------------------------------------------------
+
+def decode_attn_ref(q, kq, ks, vq, vs, new_k, new_v, pos):
+    """q: (B, K, G, hd) fp; kq/vq: (B, S, K, hd) int8; ks/vs: (B, S, K, 1)
+    fp32; new_k/new_v: (B, K, hd) fp; pos: (B,) validity lengths == scatter
+    rows.  Quantizes the new rows with the `_kv_quant` per-(position, head)
+    codec, scatters, dequantizes the whole buffer (0-scale guard) and runs
+    the masked grouped softmax.  Returns (ctx, (kq', ks', vq', vs'))."""
+    import jax
+    from repro.core.qconfig import Granularity, QuantSpec
+    from repro.core.quantizer import quantize_int
+    spec = QuantSpec(8, Granularity.PER_TOKEN)
+    b, s, kh, hd = kq.shape
+    nkq, nks, _ = quantize_int(new_k, spec)
+    nvq, nvs, _ = quantize_int(new_v, spec)
+    rows = jnp.arange(b)
+    kq = kq.at[rows, pos].set(nkq)
+    ks = ks.at[rows, pos].set(nks)
+    vq = vq.at[rows, pos].set(nvq)
+    vs = vs.at[rows, pos].set(nvs)
+    kf = kq.astype(jnp.float32) * _guard_ref(ks)
+    vf = vq.astype(jnp.float32) * _guard_ref(vs)
+    s_ = jnp.einsum("bkgh,btkh->bkgt", q, kf,
+                    preferred_element_type=jnp.float32)
+    s_ = s_ / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    t = jnp.arange(s)
+    s_ = jnp.where((t[None, :] <= pos[:, None])[:, None, None, :], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bkgt,btkh->bkgh", p, vf), (kq, ks, vq, vs)
+
+
+def decode_attn_inputs(b, s, kh, g, hd, lengths, seed=0):
+    """Ragged int8 cache fixture: rows < lengths[i] hold quantized random
+    K/V, the rest the never-written state (zero payload AND zero scale);
+    plus the step's fresh q / new-row tensors and an fp mirror of the valid
+    cache.  Returns (q, kq, ks, vq, vs, kf_valid, vf_valid, new_k, new_v,
+    pos)."""
+    import jax
+    from repro.core.qconfig import Granularity, QuantSpec
+    from repro.core.quantizer import quantize_int
+    spec = QuantSpec(8, Granularity.PER_TOKEN)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    kf = jax.random.normal(keys[0], (b, s, kh, hd), jnp.float32)
+    vf = jax.random.normal(keys[1], (b, s, kh, hd), jnp.float32)
+    kq, ks, _ = quantize_int(kf, spec)
+    vq, vs, _ = quantize_int(vf, spec)
+    pos = jnp.asarray(lengths, jnp.int32)
+    valid = (jnp.arange(s)[None, :, None, None] < pos[:, None, None, None])
+    kq, vq = jnp.where(valid, kq, 0), jnp.where(valid, vq, 0)
+    ks, vs = jnp.where(valid, ks, 0.0), jnp.where(valid, vs, 0.0)
+    q = jax.random.normal(keys[2], (b, kh, g, hd), jnp.float32)
+    new_k = jax.random.normal(keys[3], (b, kh, hd), jnp.float32)
+    new_v = jax.random.normal(keys[4], (b, kh, hd), jnp.float32)
+    return q, kq, ks, vq, vs, (kf * valid), (vf * valid), new_k, new_v, pos

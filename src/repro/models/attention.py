@@ -50,8 +50,10 @@ def init_cache(cfg, batch: int, max_seq: int, dtype, d_in: Optional[int] = None,
                kv_spec=None) -> Dict[str, jnp.ndarray]:
     """KV cache buffers for one layer.  ``kv_spec`` (a symmetric QuantSpec,
     from ``policy.kv_spec()``) switches storage to integer payloads plus fp32
-    per-(position, head) scale sidecars -- dequantized on read, so the
-    resident cache is ~1/2 (bf16) to ~1/4 (fp32) the size."""
+    per-(position, head) scale sidecars -- the resident cache is ~1/2 (bf16)
+    to ~1/4 (fp32) the size, consumed directly by the fused attention kernels
+    where supported (kernels/decode_attn.py) and dequantized on read
+    otherwise."""
     k, hd = cfg.n_kv_heads, cfg.head_dim
     if kv_spec is not None:
         qdt = storage_dtype(kv_spec.bits)
@@ -65,6 +67,17 @@ def init_cache(cfg, batch: int, max_seq: int, dtype, d_in: Optional[int] = None,
         "k": jnp.zeros((batch, max_seq, k, hd), dtype),
         "v": jnp.zeros((batch, max_seq, k, hd), dtype),
     }
+
+
+def _kv_guard(scale: jnp.ndarray) -> jnp.ndarray:
+    """Scale sidecars of never-written cache rows are 0 (buffers init to
+    zeros; every *written* row's scale is > 0 via the ``maximum(absmax, eps)``
+    guard in ``compute_scale_zero``).  Guard 0 -> 1.0 before any dequant /
+    reciprocal so padding rows cannot emit NaN/Inf -- the payloads there are
+    0, so the dequantized value stays exactly 0.  Mirrors
+    ``kernels.int8_matmul.scale_guard`` (kept local: the reference path must
+    not pull in pallas imports)."""
+    return jnp.where(scale == 0.0, 1.0, scale)
 
 
 def _kv_quant(t: jnp.ndarray, spec) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -155,6 +168,21 @@ def _pick_chunk(sq: int, skv: int, b: int, h: int, rules,
     while sq % chunk:
         chunk //= 2
     return max(chunk, 1)
+
+
+def _fused_kv_ok(policy, rules, kv_source) -> bool:
+    """Static gate for the int8-KV attention kernels (fused decode + q8
+    prefill): single-host (no sharding rules), self-attention, a registered
+    backend whose kernels consume the stored spec directly, and the
+    ``REPRO_FUSED_DECODE`` switch (default: TPU only -- interpret mode keeps
+    the bit-compared dequantize-on-read path as the oracle)."""
+    if rules is not None or kv_source is not None:
+        return False
+    from repro.kernels.decode_attn import fused_decode_enabled
+    if not fused_decode_enabled():
+        return False
+    name, _ = policy.decode_attn_backend()
+    return name == "int8_pallas"
 
 
 def _flash_path_ok(impl: str, sq: int, mask) -> bool:
@@ -287,26 +315,66 @@ def attn_apply(params, x: jnp.ndarray, cfg, *,
         q = rope(q, positions, cfg.rope_theta)
 
     new_cache = None
+    ctx = None
     if cache is not None:
         # decode / incremental: write rows at cache_offset (scalar, or (B,)
         # per-slot offsets under continuous batching), attend over buffer
         if "k_scale" in cache:
-            # int8 KV storage (role ``kv_cache``): quantize the new rows,
-            # store payload + per-(position, head) scales, dequant the whole
-            # buffer for the attention read
+            # int8 KV storage (role ``kv_cache``): payload + per-(position,
+            # head) scale sidecars.  Capability dispatch: when a backend's
+            # attention kernels consume the stored form directly, decode runs
+            # the fused quantize+scatter+attend launch and prefill the
+            # dequant-prologue flash kernel; otherwise (the bit-compared
+            # oracle) quantize the new rows here and dequantize the whole
+            # buffer for the attention read.
             kv_spec = policy.kv_spec()
-            kq, ks = _kv_quant(k, kv_spec)
-            vq, vs = _kv_quant(v, kv_spec)
-            new_cache = {
-                "k": _cache_update(cache["k"], kq, cache_offset),
-                "v": _cache_update(cache["v"], vq, cache_offset),
-                "k_scale": _cache_update(cache["k_scale"], ks, cache_offset),
-                "v_scale": _cache_update(cache["v_scale"], vs, cache_offset),
-            }
-            k = (new_cache["k"].astype(jnp.float32)
-                 * new_cache["k_scale"]).astype(x.dtype)
-            v = (new_cache["v"].astype(jnp.float32)
-                 * new_cache["v_scale"]).astype(x.dtype)
+            fused = _fused_kv_ok(policy, rules, kv_source)
+            if fused and s == 1:
+                # fused decode: one read of the int8 cache, one int8 row
+                # write; the kernel quantizes and scatters this step's rows
+                # (decode contract: ``cache_offset`` IS the per-slot count of
+                # valid prior rows, matching the caller's validity mask)
+                from repro.kernels.decode_attn import decode_attention
+                pos = jnp.broadcast_to(
+                    jnp.asarray(cache_offset, jnp.int32).reshape(-1), (b,))
+                qg = q[:, 0].reshape(b, kh, h // kh, hd)
+                ctx, nkq, nks, nvq, nvs = decode_attention(
+                    qg, cache["k"], cache["k_scale"],
+                    cache["v"], cache["v_scale"],
+                    k[:, 0], v[:, 0], pos,
+                    qmin=kv_spec.qmin, qmax=kv_spec.qmax)
+                new_cache = {"k": nkq, "v": nvq,
+                             "k_scale": nks, "v_scale": nvs}
+                ctx = ctx.reshape(b, 1, h * hd)
+            else:
+                kq, ks = _kv_quant(k, kv_spec)
+                vq, vs = _kv_quant(v, kv_spec)
+                new_cache = {
+                    "k": _cache_update(cache["k"], kq, cache_offset),
+                    "v": _cache_update(cache["v"], vq, cache_offset),
+                    "k_scale": _cache_update(cache["k_scale"], ks,
+                                             cache_offset),
+                    "v_scale": _cache_update(cache["v_scale"], vs,
+                                             cache_offset),
+                }
+                if (fused and s > 1 and isinstance(mask, dict)
+                        and mask["kind"] == "causal"
+                        and isinstance(cache_offset, int)):
+                    # int8-KV prefill: flash forward with a dequant prologue
+                    # on the stored payloads -- no fp K/V copy of the
+                    # max_seq-sized buffer; causal masking hides the
+                    # never-written tail (kernels/flash_attn.py)
+                    from repro.kernels.flash_attn import flash_attention_fwd_q8
+                    ctx = flash_attention_fwd_q8(
+                        q, new_cache["k"], new_cache["k_scale"],
+                        new_cache["v"], new_cache["v_scale"],
+                        causal=True, q_offset=cache_offset)
+                    ctx = ctx.reshape(b, s, h * hd)
+                else:
+                    k = (new_cache["k"].astype(jnp.float32)
+                         * _kv_guard(new_cache["k_scale"])).astype(x.dtype)
+                    v = (new_cache["v"].astype(jnp.float32)
+                         * _kv_guard(new_cache["v_scale"])).astype(x.dtype)
         else:
             ck = _cache_update(cache["k"], k.astype(cache["k"].dtype),
                                cache_offset)
@@ -317,8 +385,9 @@ def attn_apply(params, x: jnp.ndarray, cfg, *,
             new_cache = {"k": ck, "v": cv}
             k, v = ck, cv
 
-    ctx = _gqa_attend(q, k, v, mask, rules,
-                      impl=getattr(cfg, "attention_impl", "xla"))
+    if ctx is None:
+        ctx = _gqa_attend(q, k, v, mask, rules,
+                          impl=getattr(cfg, "attention_impl", "xla"))
     # named for the remat policy: saving ctx prunes one full score-chain
     # recompute from the backward (EXPERIMENTS.md Section Perf iter 4)
     ctx = checkpoint_name(ctx, "attn_ctx")

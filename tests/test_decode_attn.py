@@ -1,0 +1,336 @@
+"""Fused int8-KV decode attention (kernels/decode_attn.py) and the q8
+prefill flash kernel: parity with the dequantize-whole-buffer reference
+across GQA/MQA head ratios, ragged per-slot lengths, fused quantize+scatter
+exactness, tile-size invariance, the REPRO_DECODE_BLOCK hook, capability
+reporting, and the fp-KV regression guard.
+
+All kernels run interpret mode here (CPU CI); TPU is the compile target.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import as_policy, parse_policy
+from repro.core.qconfig import Granularity, QuantSpec
+from repro.core.quantizer import quantize_int
+from repro.kernels.decode_attn import (decode_attention, decode_kv_read_bytes,
+                                       default_block_k, fused_decode_enabled)
+from repro.kernels.flash_attn import flash_attention_fwd_q8
+from repro.models import build_model
+
+SPEC = QuantSpec(8, Granularity.PER_TOKEN)
+
+# the dequantize-whole-buffer oracle + ragged-cache fixture live in
+# kernels/ref.py (shared with the benchmark's CI parity gate)
+from repro.kernels.ref import decode_attn_inputs, decode_attn_ref
+
+_ref_decode = decode_attn_ref
+
+
+def _inputs(b, s, kh, g, hd, lengths, seed=0):
+    q, kq, ks, vq, vs, _, _, nk, nv, pos = decode_attn_inputs(
+        b, s, kh, g, hd, lengths, seed)
+    return q, kq, ks, vq, vs, nk, nv, pos
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (8, 2), (3, 1)])  # MHA / GQA / MQA
+def test_fused_vs_reference_parity(h, kh):
+    g = h // kh
+    args = _inputs(3, 12, kh, g, 8, lengths=[1, 5, 11])
+    ref, _ = _ref_decode(*args)
+    out, *_ = decode_attention(*args, block_k=4, interpret=True)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_fused_scatter_exact_and_rows_untouched():
+    """The in-kernel quantize+scatter writes exactly the `_kv_quant` codec
+    (same payload bits, same scales) at row pos[b] and touches nothing else."""
+    q, kq, ks, vq, vs, nk, nv, pos = _inputs(2, 8, 2, 2, 8, lengths=[3, 6])
+    _, (rkq, rks, rvq, rvs) = _ref_decode(q, kq, ks, vq, vs, nk, nv, pos)
+    _, fkq, fks, fvq, fvs = decode_attention(q, kq, ks, vq, vs, nk, nv, pos,
+                                             block_k=4, interpret=True)
+    assert jnp.array_equal(fkq, rkq) and jnp.array_equal(fvq, rvq)
+    np.testing.assert_allclose(np.asarray(fks), np.asarray(rks), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(fvs), np.asarray(rvs), rtol=1e-6)
+
+
+def test_tile_size_invariance():
+    """Online softmax result must not depend on the kv tile length (the
+    REPRO_DECODE_BLOCK sweep axis), including non-dividing requests that
+    shrink to a divisor."""
+    args = _inputs(2, 12, 2, 2, 8, lengths=[4, 9], seed=3)
+    outs = [decode_attention(*args, block_k=bk, interpret=True)[0]
+            for bk in (2, 4, 6, 12, 5)]       # 5 -> shrinks to 2
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=1e-5)
+
+
+def test_pos_zero_attends_only_new_row():
+    """A slot with no history (pos == 0: free slot riding the batched step)
+    attends on exactly the freshly written row -- no NaN from the empty
+    prefix, same as the reference mask."""
+    args = _inputs(2, 8, 2, 2, 8, lengths=[0, 7], seed=5)
+    ref, _ = _ref_decode(*args)
+    out, *_ = decode_attention(*args, block_k=4, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_scale_zero_padding_nan_safe():
+    """Never-written rows carry scale == 0; plant garbage payloads there to
+    prove the guard + validity mask keep the result finite and correct."""
+    q, kq, ks, vq, vs, nk, nv, pos = _inputs(2, 8, 2, 2, 8, lengths=[2, 5])
+    tail = (jnp.arange(8)[None, :, None, None] >= pos[:, None, None, None])
+    kq = jnp.where(tail, 127, kq).astype(jnp.int8)   # garbage payload,
+    vq = jnp.where(tail, -128, vq).astype(jnp.int8)  # scale stays 0
+    ref, _ = _ref_decode(q, kq, ks, vq, vs, nk, nv, pos)
+    out, *_ = decode_attention(q, kq, ks, vq, vs, nk, nv, pos,
+                               block_k=4, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_pos_at_max_seq_clamps_scatter():
+    """The degenerate freed-slot case: a slot decoding with pos == max_seq
+    (stale position of a length-finished slot) must not index past the
+    cache.  The scatter clamps to the last row (dynamic_update_slice
+    semantics); the slot's own output is discarded by the scheduler, so the
+    contract is: finite result, neighbours bit-unaffected."""
+    q, kq, ks, vq, vs, nk, nv, _ = _inputs(2, 8, 2, 2, 8, lengths=[3, 6])
+    pos_edge = jnp.asarray([8, 6], jnp.int32)          # slot 0 at max_seq
+    pos_ok = jnp.asarray([3, 6], jnp.int32)
+    edge = decode_attention(q, kq, ks, vq, vs, nk, nv, pos_edge,
+                            block_k=4, interpret=True)
+    ok = decode_attention(q, kq, ks, vq, vs, nk, nv, pos_ok,
+                          block_k=4, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(edge[0])))
+    # slot 0's write clamped into the last row (same payload the in-bounds
+    # launch scattered at its row)
+    nkq, _, _ = quantize_int(nk, SPEC)
+    assert jnp.array_equal(edge[1][0, 7], nkq[0])
+    assert jnp.array_equal(ok[1][0, 3], nkq[0])
+    # slot 1 (valid pos) is bit-identical across the two launches
+    for a, b in zip(edge[1:], ok[1:]):
+        assert jnp.array_equal(a[1], b[1])
+
+
+def test_block_env_override(monkeypatch):
+    monkeypatch.delenv("REPRO_DECODE_BLOCK", raising=False)
+    assert default_block_k() == 256
+    monkeypatch.setenv("REPRO_DECODE_BLOCK", "32")
+    assert default_block_k() == 32
+    # the enable switch: forced on/off beats the backend default
+    monkeypatch.setenv("REPRO_FUSED_DECODE", "1")
+    assert fused_decode_enabled()
+    monkeypatch.setenv("REPRO_FUSED_DECODE", "0")
+    assert not fused_decode_enabled()
+
+
+def test_kv_read_bytes_ordering():
+    """The analytic counter encodes the roofline claim: fused < fp <<
+    dequant-on-read, and fused is < 1/3 of dequant for any fp width."""
+    for fpb in (2, 4):
+        fused = decode_kv_read_bytes("fused", 8, 2048, 8, 128, fp_bytes=fpb)
+        fp = decode_kv_read_bytes("fp", 8, 2048, 8, 128, fp_bytes=fpb)
+        deq = decode_kv_read_bytes("dequant", 8, 2048, 8, 128, fp_bytes=fpb)
+        assert fused < fp < deq
+        assert fused * 3 < deq
+    with pytest.raises(ValueError):
+        decode_kv_read_bytes("nope", 1, 1, 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# q8 prefill flash kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (4, 2), (2, 1)])
+def test_q8_prefill_flash_parity(h, kh):
+    """Dequant-prologue flash forward == whole-buffer dequant + causal
+    softmax, with the never-written cache tail (rows >= s) hidden by the
+    causal mask."""
+    b, s, smax, hd = 2, 6, 10, 8
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    kf = jax.random.normal(keys[0], (b, smax, kh, hd), jnp.float32)
+    vf = jax.random.normal(keys[1], (b, smax, kh, hd), jnp.float32)
+    kq, ks, _ = quantize_int(kf, SPEC)
+    vq, vs, _ = quantize_int(vf, SPEC)
+    written = (jnp.arange(smax) < s)[None, :, None, None]
+    kq, vq = jnp.where(written, kq, 0), jnp.where(written, vq, 0)
+    ks, vs = jnp.where(written, ks, 0.0), jnp.where(written, vs, 0.0)
+    q = jax.random.normal(keys[2], (b, s, h, hd), jnp.float32)
+
+    out = flash_attention_fwd_q8(q, kq, ks, vq, vs, causal=True,
+                                 block_q=4, block_k=2, interpret=True)
+
+    g = h // kh
+    kfd = (kq.astype(jnp.float32) * jnp.where(ks == 0, 1.0, ks))
+    vfd = (vq.astype(jnp.float32) * jnp.where(vs == 0, 1.0, vs))
+    kfd = jnp.repeat(kfd, g, axis=2)
+    vfd = jnp.repeat(vfd, g, axis=2)
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q, kfd) / np.sqrt(hd)
+    causal = jnp.arange(smax)[None, :] <= jnp.arange(s)[:, None]
+    s_ = jnp.where(causal[None, None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", p, vfd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Capability reporting + model/engine integration
+# ---------------------------------------------------------------------------
+
+def test_decode_attn_backend_reporting():
+    assert as_policy("kv_cache=a8t,*=w8c").decode_attn_backend() == \
+        ("int8_pallas", ("decode", "prefill"))
+    # explicit backend rule reports the same capability
+    assert parse_policy("kv_cache=a8t@int8_pallas,*=w8c").decode_attn_backend() \
+        == ("int8_pallas", ("decode", "prefill"))
+    # per-tensor KV scales per slot write block: no kernel fits -> dequant
+    assert as_policy("kv_cache=a8n,*=fp").decode_attn_backend() == \
+        ("dequant", ())
+    # fp cache
+    assert as_policy("*=w8c").decode_attn_backend() == ("fp", ())
+    assert as_policy(None).decode_attn_backend() == ("fp", ())
+
+
+@pytest.fixture(scope="module")
+def gpt2():
+    cfg = dataclasses.replace(get_smoke_config("gpt2-small"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_model_fused_decode_parity(gpt2, monkeypatch):
+    """Full-model prefill+decode: fused kernels vs the reference path agree
+    to fp-association noise (f32 carrier), and the cache payloads match."""
+    cfg, model, params = gpt2
+    pol = "kv_cache=a8t,*=w8c"
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    tok = jnp.ones((2, 1), jnp.int32)
+    pos = jnp.full((2,), 12, jnp.int32)
+    outs = {}
+    for env in ("0", "1"):
+        monkeypatch.setenv("REPRO_FUSED_DECODE", env)
+        lg, st = model.prefill(params, {"tokens": prompt}, policy=pol,
+                               max_seq=16)
+        dl, st2 = model.decode(params, st, tok, pos, policy=pol)
+        outs[env] = (lg, dl, st2)
+    assert float(jnp.max(jnp.abs(outs["1"][0] - outs["0"][0]))) < 1e-3
+    assert float(jnp.max(jnp.abs(outs["1"][1] - outs["0"][1]))) < 1e-3
+    assert jnp.array_equal(outs["1"][2]["caches"]["k"],
+                           outs["0"][2]["caches"]["k"])
+    assert jnp.array_equal(outs["1"][2]["caches"]["v"],
+                           outs["0"][2]["caches"]["v"])
+
+
+def test_engine_slot_turnover_fused(gpt2, monkeypatch):
+    """Continuous batching on the fused path: ragged prompts, more requests
+    than slots, slot reuse mid-run -- greedy tokens identical to the
+    reference path's."""
+    from repro.infer import Engine, Request
+    cfg, model, params = gpt2
+    outs = {}
+    for env in ("0", "1"):
+        monkeypatch.setenv("REPRO_FUSED_DECODE", env)
+        eng = Engine(model, params, "kv_cache=a8t,*=w8c", max_slots=2,
+                     max_seq=24)
+        ids = [eng.submit(Request(tokens=list(t), max_new_tokens=4))
+               for t in ([1, 2, 3], [4, 5], [6, 7, 8, 9], [2, 2], [3, 1, 4])]
+        outs[env] = {r.request_id: r.tokens for r in eng.run()}
+        assert sorted(outs[env]) == sorted(ids)
+    assert outs["0"] == outs["1"]
+
+
+@pytest.mark.parametrize("arch", ["zamba2-2.7b", "granite-moe-3b-a800m"])
+def test_fused_other_families_tolerance(arch, monkeypatch):
+    """Hybrid (shared attention block) and MoE families on their native bf16
+    carrier: fused vs reference agree to bf16 rounding noise (the kernel
+    keeps f32 in-register where the reference casts dequantized K/V to the
+    carrier), far inside the documented int8-KV tolerance."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    tok = jnp.ones((2, 1), jnp.int32)
+    pos = jnp.full((2,), 8, jnp.int32)
+    res = {}
+    for env in ("0", "1"):
+        monkeypatch.setenv("REPRO_FUSED_DECODE", env)
+        lg, st = model.prefill(params, {"tokens": prompt},
+                               policy="kv_cache=a8t,*=w8c", max_seq=12)
+        dl, _ = model.decode(params, st, tok, pos,
+                             policy="kv_cache=a8t,*=w8c")
+        res[env] = dl
+        assert bool(jnp.all(jnp.isfinite(dl)))
+    assert float(jnp.max(jnp.abs(res["1"] - res["0"]))) < 0.05
+
+
+def test_engine_path_summary_reports_fused(gpt2, monkeypatch):
+    from repro.infer import Engine
+    cfg, model, params = gpt2
+    monkeypatch.setenv("REPRO_FUSED_DECODE", "1")
+    eng = Engine(model, params, "kv_cache=a8t,*=w8c", max_slots=2, max_seq=16)
+    # b16: the summary names the tile the kernel compiles for 16-row caches
+    # (effective_block_k), not the b256 default request
+    assert eng.path_summary() == "weights=prepared-int8 kv=int8-fused(b16)"
+    monkeypatch.setenv("REPRO_FUSED_DECODE", "0")
+    # the mode is snapshotted at construction and pinned around the traces:
+    # the live engine keeps reporting (and running) fused
+    assert eng.path_summary() == "weights=prepared-int8 kv=int8-fused(b16)"
+    deq = Engine(model, params, "kv_cache=a8t,*=w8c", max_slots=2, max_seq=16)
+    assert deq.path_summary() == "weights=prepared-int8 kv=int8-dequant"
+    fp = Engine(model, params, "*=fp", max_slots=2, max_seq=16,
+                prepare_weights=False)
+    assert fp.path_summary() == "weights=raw kv=fp"
+    assert eng.kv_decode_read_bytes() < fp.kv_decode_read_bytes()
+    assert fp.kv_decode_read_bytes() < deq.kv_decode_read_bytes()
+    # ... and the pin is applied around the (lazy) trace, not just the
+    # report: with the env flipped to 0, tracing `eng`'s decode step still
+    # compiles the fused path (zero whole-cache dequantize converts)
+    from repro.parallel.hlo_count import count_ops
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    hlo = eng._decode_jit.lower(eng.params, eng._state, tok, pos,
+                                key).compile().as_text()
+    assert count_ops(hlo, "convert",
+                     result_type=f"f32[2,16,{cfg.n_kv_heads},"
+                                 f"{cfg.head_dim}]") == 0
+
+
+def test_fp_kv_regression_guard(gpt2, monkeypatch):
+    """The non-quantized KV path is untouched by the fused dispatch: an fp
+    policy's decode is bit-identical (and structurally int8-free) whether
+    the fused switch is on or off."""
+    cfg, model, params = gpt2
+    pol = as_policy("*=w8c")        # int8 weights, fp KV cache
+    state = model.init_decode_state(2, 16, 0, jnp.float32)
+    tok = jnp.ones((2, 1), jnp.int32)
+    pos = jnp.full((2,), 4, jnp.int32)
+    outs, hlos = {}, {}
+    for env in ("0", "1"):
+        monkeypatch.setenv("REPRO_FUSED_DECODE", env)
+
+        def dec(p, s_, t, q, _env=env):
+            return model.decode(p, s_, t, q, policy=pol)
+
+        outs[env], _ = jax.jit(dec)(params, state, tok, pos)
+        hlos[env] = jax.jit(dec).lower(params, state, tok,
+                                       pos).compile().as_text()
+    assert jnp.array_equal(outs["0"], outs["1"])
+    # the fp KV buffers never pass through an int8 cast on either setting
+    for hlo in hlos.values():
+        assert f"s8[2,16,{cfg.n_kv_heads},{cfg.head_dim}]" not in hlo
