@@ -277,6 +277,17 @@ class Engine:
             kv = {"dequant": "int8-dequant", "fp": "fp", "none": "none"}[mode]
         return (f"weights={'prepared-int8' if prepared else 'raw'} kv={kv}")
 
+    def lowered_decode_hlo(self) -> str:
+        """Compiled HLO text of the donated decode step -- the exact module
+        ``_step`` executes (same jit, same donation, same pinned env
+        snapshot), so ``repro.lint`` decode contracts analyze what serving
+        runs, not a reconstruction."""
+        tok = jnp.zeros((self.max_slots, 1), jnp.int32)
+        pos = jnp.zeros((self.max_slots,), jnp.int32)
+        key = jax.random.PRNGKey(0)
+        return (self._decode_jit.lower(self.params, self._state, tok, pos,
+                                       key).compile().as_text())
+
     # -- scheduler internals -----------------------------------------------
 
     def _next_key(self) -> jax.Array:

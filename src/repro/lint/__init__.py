@@ -1,0 +1,22 @@
+"""repro.lint -- quantization-invariant static analysis of compiled paths.
+
+Three layers:
+
+* :mod:`repro.lint.hlo_graph` / :mod:`repro.lint.rules` -- text-level rules
+  over compiled HLO modules (reachability-aware, dataflow-walking);
+* :mod:`repro.lint.jaxpr_rules` -- trace-level rules over abstract jaxprs
+  (scale placement relative to contracted axes);
+* :mod:`repro.lint.contracts` -- declarative contracts binding rules to the
+  repo's real fast paths, run by ``python -m repro.lint``.
+
+:mod:`repro.lint.pylint_rules` is a separate source-level AST lint (env
+reads inside jit-traced bodies) also wired into CI.
+"""
+from repro.lint.hlo_graph import HloModule
+from repro.lint.rules import (RULES, Finding, Rule, RuleSpec, Severity,
+                              run_rules)
+
+__all__ = [
+    "HloModule", "RULES", "Finding", "Rule", "RuleSpec", "Severity",
+    "run_rules",
+]

@@ -1,0 +1,68 @@
+"""CLI: check the repo's compiled fast paths against their contracts.
+
+Usage::
+
+    python -m repro.lint --path {decode,train,opt,all} --config gpt2_small
+
+Traces and compiles the real paths (Engine decode step, train step,
+optimizer update), runs every bound rule, prints findings, and exits
+nonzero if any ERROR-severity finding fires -- the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.lint.contracts import contracts_for
+from repro.lint.rules import Severity
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="static path-contract checks over compiled HLO + jaxprs")
+    ap.add_argument("--path", default="all",
+                    choices=["decode", "train", "opt", "all"],
+                    help="which fast-path contract group to check")
+    ap.add_argument("--config", default="gpt2_small",
+                    help="smoke config to lower the paths on "
+                         "(gpt2_small / gpt2_small-moe / ...)")
+    ap.add_argument("--min-severity", default="INFO",
+                    choices=[s.name for s in Severity],
+                    help="hide findings below this severity")
+    ap.add_argument("--repo", metavar="DIR", nargs="?", const="src/repro",
+                    default=None,
+                    help="also run the source-level AST lint (env reads in "
+                         "traced bodies) over DIR [default: src/repro]")
+    args = ap.parse_args(argv)
+
+    floor = Severity[args.min_severity]
+    n_err = 0
+    if args.repo is not None:
+        from repro.lint.pylint_rules import lint_tree
+        print(f"[repo] env-read-in-trace: AST lint over {args.repo}")
+        findings = lint_tree(args.repo)
+        n_err += sum(1 for f in findings if f.severity >= Severity.ERROR)
+        if not findings:
+            print("  OK")
+        for f in findings:
+            if f.severity >= floor:
+                print(f"  {f.format()}")
+    for contract in contracts_for(args.path):
+        print(f"[{contract.path}] {contract.name}: {contract.description}")
+        findings = contract.check(args.config)
+        shown = [f for f in findings if f.severity >= floor]
+        n_err += sum(1 for f in findings if f.severity >= Severity.ERROR)
+        if not findings:
+            print("  OK")
+        for f in shown:
+            print(f"  {f.format()}")
+    if n_err:
+        print(f"FAIL: {n_err} ERROR finding(s)", file=sys.stderr)
+        return 1
+    print("all contracts green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

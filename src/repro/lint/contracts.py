@@ -1,0 +1,265 @@
+"""Path contracts: the declarative invariants of this repo's fast paths.
+
+Each :class:`PathContract` names one compiled fast path, pins the env
+snapshot that selects it, builds the *real* lowered module (via
+``Engine.lowered_decode_hlo`` / ``train.step.lower_train_hlo`` /
+``optim.adamw.lower_update_hlo`` -- the same jits production runs, not
+reconstructions), and binds :mod:`repro.lint.rules` rule specs plus
+jaxpr-level checks to it.  ``python -m repro.lint`` runs them; the tests'
+former ad-hoc ``count_ops`` assertions live here as the single source of
+truth.
+
+Size thresholds are derived from the built path (e.g. the whole-cache
+dequant floor is the actual per-layer cache buffer element count), so
+contracts stay valid when the smoke config changes shape.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.lint.rules import Finding, RuleSpec, Severity, run_rules
+
+#: Decode-state buffers below this many bytes are bookkeeping (positions,
+#: rng keys, step counters) -- copies of those are not an aliasing failure.
+_COPY_MIN_BYTES = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class PathContract:
+    name: str
+    path: str           # contract group: "decode" | "train" | "opt"
+    description: str
+    env: Dict[str, str]
+    #: config name -> (compiled HLO text, HLO rule specs, extra findings
+    #: from non-HLO checks such as jaxpr rules)
+    build: Callable[[str], Tuple[str, List[RuleSpec], List[Finding]]]
+
+    def check(self, config: str) -> List[Finding]:
+        with _pinned(self.env):
+            hlo, specs, extra = self.build(config)
+        return run_rules(hlo, specs) + list(extra)
+
+
+@contextlib.contextmanager
+def _pinned(env: Dict[str, str]):
+    old = {k: os.environ.get(k) for k in env}
+    os.environ.update(env)
+    try:
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _norm_config(config: str) -> str:
+    """CLI spelling ``gpt2_small`` -> registry spelling ``gpt2-small``."""
+    return config.replace("_", "-")
+
+
+_MODEL_CACHE: Dict[str, tuple] = {}
+
+
+def _gpt2(config: str):
+    """(cfg, model, params) for one smoke config, cached per process --
+    several contracts lower the same model."""
+    config = _norm_config(config)
+    if config not in _MODEL_CACHE:
+        import dataclasses as _dc
+
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        # float32 everywhere: the contracts are structural, and fp32 keeps
+        # the lowered modules identical across hosts with/without bf16
+        cfg = _dc.replace(get_smoke_config(config), dtype="float32")
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        _MODEL_CACHE[config] = (cfg, model, params)
+    return _MODEL_CACHE[config]
+
+
+def _prepared_linear_jaxpr_findings(policy_str: str) -> List[Finding]:
+    """Jaxpr rule (scale-off-contracted-axis) on the prepared-weight linear
+    closure the decode path dispatches to."""
+    from repro.core.qpolicy import LinearCtx, as_policy
+    from repro.infer.prepare import quantize_weight
+    from repro.lint.jaxpr_rules import check_scale_contraction
+    pol = as_policy(policy_str)
+    ctx = LinearCtx("mlp_up")
+    spec = pol.resolve(ctx).recipe.weights
+    w = jnp.linspace(-1.0, 1.0, 64 * 48).reshape(64, 48)
+    wq = quantize_weight(w, spec)
+    x = jnp.zeros((4, 64), jnp.float32)
+    return check_scale_contraction(
+        lambda x_, wq_: pol.linear(ctx, x_, wq_), x, wq,
+        name=f"policy.linear[prepared,{policy_str}]")
+
+
+def _int8_bwd_jaxpr_findings(policy_str: str) -> List[Finding]:
+    """Jaxpr rule on the int8 custom-vjp backward closure: residual QState
+    scales must stay off both backward dots' contracted axes."""
+    from repro.core.qadam import QState
+    from repro.core.qlinear import _qlinear_int8_bwd
+    from repro.core.qpolicy import LinearCtx, as_policy
+    from repro.lint.jaxpr_rules import check_scale_contraction
+    recipe = as_policy(policy_str).resolve(LinearCtx("mlp_up")).recipe
+    M, K, N = 4, 64, 48
+    zero = jnp.zeros((), jnp.float32)
+    xs = QState(jnp.zeros((M, K), jnp.int8), jnp.ones((M, 1), jnp.float32),
+                zero)
+    ws = QState(jnp.zeros((K, N), jnp.int8), jnp.ones((1, N), jnp.float32),
+                zero)
+    g = jnp.zeros((M, N), jnp.float32)
+    proto = jnp.zeros((0,), jnp.float32)
+
+    def bwd(xs_, ws_, g_):
+        return _qlinear_int8_bwd(recipe, (xs_, ws_, None, (M, K),
+                                          proto, proto), g_)
+
+    return check_scale_contraction(bwd, xs, ws, g,
+                                   name=f"qlinear_int8_bwd[{policy_str}]")
+
+
+# ---------------------------------------------------------------------------
+# contract builders
+# ---------------------------------------------------------------------------
+
+def _build_decode_prepared(config: str):
+    """Prepared-int8 weights, fp KV: a decode step must contain zero quant
+    rounds (weights enter as stored payloads; nothing quantizes in-trace)."""
+    cfg, model, params = _gpt2(config)
+    from repro.core.qpolicy import as_policy
+    from repro.infer.prepare import prepare_params
+    policy = as_policy("*=w8c")
+    prep = prepare_params(cfg, params, policy)
+    state = model.init_decode_state(2, 16, 0, jnp.float32)
+    tok = jnp.ones((2, 1), jnp.int32)
+    pos = jnp.full((2,), 4, jnp.int32)
+
+    def dec(p, s, t, q):
+        return model.decode(p, s, t, q, policy=policy)
+
+    hlo = jax.jit(dec).lower(prep, state, tok, pos).compile().as_text()
+    specs = [RuleSpec("no-weight-quant-rounds", {"max_rounds": 0}),
+             RuleSpec("double-quantize")]
+    return hlo, specs, _prepared_linear_jaxpr_findings("*=w8c")
+
+
+def _build_decode_fused_kv(config: str):
+    """Fused int8-KV decode attention via the Engine: no whole-cache
+    dequantize, no quant rounds beyond the one new-row cache write per
+    K/V stack, and the donated decode state stays copy-free (the ROADMAP
+    donated-aliasing invariant)."""
+    cfg, model, params = _gpt2(config)
+    from repro.infer import Engine
+    eng = Engine(model, params, "kv_cache=a8t,*=w8c",
+                 max_slots=2, max_seq=32)
+    hlo = eng.lowered_decode_hlo()
+    caches = eng._state["caches"]
+    _, b, s, kh, hd = caches["k"].shape
+    cache_elems = b * s * kh * hd
+    specs = [RuleSpec("no-whole-cache-dequant",
+                      {"min_elems": cache_elems, "dims": (b, s, kh, hd)}),
+             RuleSpec("copy-free-aliasing", {"min_bytes": _COPY_MIN_BYTES}),
+             RuleSpec("double-quantize"),
+             # the only legitimate in-trace rounds are the new K/V row
+             # quantize on the cache write -- bounded, not zero
+             RuleSpec("op-count",
+                      {"op_prefix": "round-nearest",
+                       "min_count": 0, "max_count": 2 * cfg.n_layers},
+                      severity=Severity.ERROR)]
+    return hlo, specs, _prepared_linear_jaxpr_findings("kv_cache=a8t,*=w8c")
+
+
+def _build_train_int8(config: str):
+    """Real-int8 train step (fwd + bwd + optimizer): integer MXU dots must
+    be present -- 3 s32-result dots (fwd, dx, dw) per quantized linear
+    role -- and nothing may quantize twice on one dataflow path."""
+    cfg, model, params = _gpt2(config)
+    from repro.optim.adamw import OptConfig
+    from repro.train.step import lower_train_hlo
+    policy = "*=w8c+a8t+g8t@int8_pallas"
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    hlo = lower_train_hlo(model, policy, opt)
+    # 4 block-linear roles (attn qkv/out, mlp up/down) x 3 dots each; the
+    # layer scan keeps one body instance, so the floor is per-body, not
+    # per-layer
+    specs = [RuleSpec("int8-compute-present", {"min_dots": 12}),
+             RuleSpec("double-quantize")]
+    return hlo, specs, _int8_bwd_jaxpr_findings(policy)
+
+
+def _build_opt_fused_adam(config: str):
+    """Fused 8-bit AdamW on the model's parameter tree: quantized moment
+    encodes present in-trace (the int path actually runs), and the donated
+    optimizer state stays copy-free across the fused bucket launches."""
+    cfg, model, params = _gpt2(config)
+    from repro.core.qconfig import parse_recipe
+    from repro.optim.adamw import OptConfig, lower_update_hlo
+    recipe = parse_recipe("m1:8c-b128,m2:8c-asym-b128-sqrt")
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=10,
+                    state_storage="int")
+    hlo = lower_update_hlo(params, recipe, opt)
+    # XLA-CPU inserts small defensive copies of the fp-loop moment leaves
+    # (biases / norm scales, a few KB); the buffers the fused path donates
+    # are the quantized bucket payloads (hundreds of KB) -- gate on those
+    specs = [RuleSpec("copy-free-aliasing", {"min_bytes": 1 << 14}),
+             RuleSpec("double-quantize"),
+             # both moments re-encode every step: rounds must be present
+             # (their absence = silent fp/fake fallback)
+             RuleSpec("op-count", {"op_prefix": "round-nearest",
+                                   "min_count": 2})]
+    return hlo, specs, []
+
+
+CONTRACTS: List[PathContract] = [
+    PathContract(
+        name="decode-prepared",
+        path="decode",
+        description="prepared-int8 weight decode holds zero quant rounds",
+        env={"REPRO_FUSED_DECODE": "0"},
+        build=_build_decode_prepared),
+    PathContract(
+        name="decode-fused-kv",
+        path="decode",
+        description="fused int8-KV decode: no whole-cache dequant, "
+                    "donated state copy-free",
+        env={"REPRO_FUSED_DECODE": "1"},
+        build=_build_decode_fused_kv),
+    PathContract(
+        name="train-int8",
+        path="train",
+        description="int8 fwd+bwd train step emits real s32-result dots",
+        env={},
+        build=_build_train_int8),
+    PathContract(
+        name="opt-fused-adam",
+        path="opt",
+        description="fused 8-bit AdamW: moments re-encode in-trace, "
+                    "donated state copy-free",
+        env={"REPRO_FUSED_ADAM": "1"},
+        build=_build_opt_fused_adam),
+]
+
+
+def contracts_for(path: str) -> List[PathContract]:
+    if path == "all":
+        return list(CONTRACTS)
+    sel = [c for c in CONTRACTS if c.path == path]
+    if not sel:
+        raise ValueError(f"unknown path {path!r}; "
+                         f"choose from decode/train/opt/all")
+    return sel
+
+
+def run_path(path: str, config: str) -> Dict[str, List[Finding]]:
+    """Check every contract in one path group; contract name -> findings."""
+    return {c.name: c.check(config) for c in contracts_for(path)}

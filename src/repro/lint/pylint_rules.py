@@ -1,0 +1,179 @@
+"""Source-level AST lint: no env reads inside jit-traced function bodies.
+
+The bug class: ``os.environ`` consulted inside a function that jax traces
+(jit-decorated, jit-wrapped, a custom-vjp rule, or a Pallas kernel) is
+evaluated ONCE at trace time and silently frozen into the compiled
+artifact -- flipping the knob later changes the report but not the running
+path.  PR 5's fix is the sanctioned pattern: snapshot the env at
+construction and re-pin it around every (lazy) trace with a contextmanager,
+so compiled path and reported path cannot diverge.
+
+What counts as a *traced def* (lexically, within one file):
+
+* a function decorated with ``jax.jit`` / ``jit`` / ``partial(jax.jit, ..)``
+  / ``jax.custom_vjp`` / ``jax.custom_jvp`` / ``jax.checkpoint``;
+* a function whose name is later passed as the first argument to
+  ``jax.jit(...)`` / ``jit(...)`` / ``pl.pallas_call(...)`` / a
+  ``defvjp(...)`` registration;
+* every def nested inside one of those.
+
+What counts as an *env read*: ``os.environ`` in any expression (attribute
+access, subscript, ``.get``) and ``os.getenv(...)``.
+
+Allowlisted:
+
+* functions decorated with ``contextlib.contextmanager`` -- the pinning
+  helper itself must touch ``os.environ``;
+* any line carrying a ``# lint: env-ok`` comment -- the explicit escape
+  hatch for a read that is genuinely trace-invariant.
+
+This is a lexical single-file analysis on purpose: it cannot prove a
+helper *called from* traced code is clean (that is what the HLO contracts
+pin down), but it catches the direct form of the bug at review time for
+free, with zero tracing.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Set
+
+from repro.lint.rules import Finding, Severity
+
+RULE_ID = "env-read-in-trace"
+
+#: decorator / wrapper spellings that make a function traced
+_TRACING_NAMES = {"jit", "custom_vjp", "custom_jvp", "checkpoint", "remat",
+                  "pallas_call"}
+_ALLOW_COMMENT = "# lint: env-ok"
+
+
+def _tail_name(node: ast.AST) -> Optional[str]:
+    """Rightmost identifier of a Name/Attribute chain (``jax.jit`` ->
+    ``jit``); None for anything else."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _is_tracing_expr(node: ast.AST) -> bool:
+    """Does this decorator / callee expression make its target traced?
+    Handles bare names (``@jax.jit``) and configured forms
+    (``@partial(jax.jit, donate_argnums=...)``, ``@jax.custom_vjp``...)."""
+    if _tail_name(node) in _TRACING_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        if _tail_name(node.func) in _TRACING_NAMES:
+            return True
+        if _tail_name(node.func) == "partial" and node.args:
+            return _is_tracing_expr(node.args[0])
+    return False
+
+
+def _is_contextmanager(fn: ast.AST) -> bool:
+    return any(_tail_name(d) == "contextmanager"
+               for d in getattr(fn, "decorator_list", []))
+
+
+def _jit_wrapped_names(tree: ast.Module) -> Set[str]:
+    """Function names passed (anywhere in the module) to a tracing wrapper:
+    ``jax.jit(_decode, ...)``, ``pl.pallas_call(kernel, ...)``, and
+    ``x.defvjp(fwd, bwd)`` registrations."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _tail_name(node.func)
+        if callee in _TRACING_NAMES:
+            args = node.args[:1]
+        elif callee == "defvjp":
+            args = node.args
+        else:
+            continue
+        for a in args:
+            if isinstance(a, ast.Name):
+                names.add(a.id)
+    return names
+
+
+class _EnvReads(ast.NodeVisitor):
+    """Collect (lineno, spelling) of every os.environ / os.getenv use."""
+
+    def __init__(self):
+        self.hits: List[tuple] = []
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if (node.attr == "environ" and isinstance(node.value, ast.Name)
+                and node.value.id == "os"):
+            self.hits.append((node.lineno, "os.environ"))
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        if (_tail_name(node.func) == "getenv"
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "os"):
+            self.hits.append((node.lineno, "os.getenv"))
+        self.generic_visit(node)
+
+
+def lint_source(source: str, filename: str = "<string>") -> List[Finding]:
+    """Lint one module's source text; returns env-read findings."""
+    tree = ast.parse(source, filename=filename)
+    wrapped = _jit_wrapped_names(tree)
+    lines = source.splitlines()
+
+    def allowed(lineno: int) -> bool:
+        return (0 < lineno <= len(lines)
+                and _ALLOW_COMMENT in lines[lineno - 1])
+
+    findings: List[Finding] = []
+    seen_fns: Set[int] = set()
+
+    def scan_traced(fn) -> None:
+        """One traced def: every env read in its whole subtree (nested defs
+        included) is trace-frozen."""
+        if id(fn) in seen_fns:
+            return
+        seen_fns.add(id(fn))
+        reads = _EnvReads()
+        for stmt in fn.body:
+            reads.visit(stmt)
+        for lineno, spelling in reads.hits:
+            if allowed(lineno):
+                continue
+            findings.append(Finding(
+                Severity.ERROR, RULE_ID, f"line {lineno}", filename,
+                f"{spelling} read inside traced function "
+                f"{fn.name!r} (line {lineno}): the value is frozen at "
+                "trace time -- snapshot it outside the trace and pin it "
+                "with a contextmanager (see infer/engine._pinned_env), or "
+                f"mark the line `{_ALLOW_COMMENT}` if it is trace-invariant"))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if _is_contextmanager(node):
+            continue
+        traced = (node.name in wrapped
+                  or any(_is_tracing_expr(d) for d in node.decorator_list))
+        if traced:
+            scan_traced(node)
+    return findings
+
+
+def lint_path(path: str) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        return lint_source(f.read(), filename=path)
+
+
+def lint_tree(root: str) -> List[Finding]:
+    """Lint every ``*.py`` under ``root`` (the CI entry point)."""
+    findings: List[Finding] = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                findings.extend(lint_path(os.path.join(dirpath, fn)))
+    return findings

@@ -264,3 +264,21 @@ def adamw_update(params, grads, state: AdamState, cfg: OptConfig,
                       m1=jax.tree_util.tree_unflatten(treedef, new_m1),
                       m2=jax.tree_util.tree_unflatten(treedef, new_m2)),
             stats)
+
+
+def lower_update_hlo(params, recipe, cfg: OptConfig, *,
+                     donate: bool = True) -> str:
+    """Compiled HLO text of one ``adamw_update`` on abstract (params, grads,
+    state), with the optimizer state donated -- the module ``repro.lint``
+    optimizer contracts analyze.  ``params`` may be real arrays or
+    ``ShapeDtypeStruct``s (nothing is materialized)."""
+    shapes = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+    state = jax.eval_shape(lambda p: init_adam_state(p, recipe, cfg), shapes)
+    grads = shapes
+
+    def upd(p, g, st):
+        return adamw_update(p, g, st, cfg, recipe)
+
+    jitted = jax.jit(upd, donate_argnums=(2,) if donate else ())
+    return jitted.lower(shapes, grads, state).compile().as_text()

@@ -39,6 +39,13 @@ _OPERAND = re.compile(r"%([\w\.\-]+)")
 _TRIP_LT = re.compile(r"constant\((\d+)\)")
 _CALL_ATTR = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
                         r"\{?([%\w\.\-, ]+)\}?")
+#: one computation-reference attribute: either a brace-list
+#: (``branch_computations={%a, %b}``) or a single ``%name`` -- the value
+#: must NOT be allowed to run past a comma into the next ``attr=`` pair
+#: (``condition=%c, body=%b`` is two separate references on one line)
+_ANY_CALL_ATTR = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations|"
+    r"called_computations)=(\{[^}]*\}|%[\w\.\-]+)")
 _GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
@@ -115,6 +122,48 @@ def parse_module(hlo: str) -> Dict[str, List[Instr]]:
 
 def _symbol_table(instrs: List[Instr]) -> Dict[str, str]:
     return {i.name: i.type_str for i in instrs}
+
+
+def entry_name(comps: Dict[str, List[Instr]]) -> Optional[str]:
+    """Real name of the ENTRY computation (``__entry__`` is an alias of the
+    same instruction list, so identity comparison recovers it)."""
+    body = comps.get("__entry__")
+    if body is None:
+        return None
+    return next((k for k, v in comps.items()
+                 if k != "__entry__" and v is body), None)
+
+
+def instr_callees(ins: Instr) -> List[str]:
+    """Computation names an instruction references (fusion bodies, while
+    body/condition, reduce to_apply, conditional branches, custom-call
+    called_computations)."""
+    out: List[str] = []
+    for m in _ANY_CALL_ATTR.finditer(ins.rest):
+        out.extend(re.findall(r"%([\w\.\-]+)", m.group(1)))
+    return out
+
+
+def reachable_computations(comps: Dict[str, List[Instr]]) -> List[str]:
+    """Computation names reachable from ENTRY via call attributes, in BFS
+    order starting at the entry computation.  Compiled modules can retain
+    dead computations (e.g. branches DCE'd after inlining); op counts over
+    the whole dict would charge ops that never execute."""
+    start = entry_name(comps)
+    if start is None:
+        return []
+    seen, order, frontier = {start}, [start], [start]
+    while frontier:
+        nxt: List[str] = []
+        for name in frontier:
+            for ins in comps.get(name, []):
+                for callee in instr_callees(ins):
+                    if callee in comps and callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+                        nxt.append(callee)
+        frontier = nxt
+    return order
 
 
 def _fusion_param_bytes(body: List[Instr]) -> Dict[int, int]:
@@ -295,6 +344,13 @@ def count_module(hlo: str, n_devices: int = 256) -> Dict[str, float]:
                     target = called.group(1).split(",")[0].strip().lstrip("%")
                     c.add(visit(target, depth + 1))
                 c.bytes += _nbytes(ins.type_str)
+                if op == "custom-call":
+                    # Opaque launches (Pallas kernels) read their operands
+                    # from HBM like a fusion boundary; charging result bytes
+                    # only undercounts kernel-heavy modules.  Operand names
+                    # live before the first close paren (call attrs after).
+                    for o in _OPERAND.findall(ins.rest.split(")")[0]):
+                        c.bytes += _nbytes(symtab.get(o, ""))
             elif any(op.startswith(k) for k in _COLLECTIVES):
                 if op.endswith("-done"):
                     continue
@@ -326,23 +382,33 @@ def count_module(hlo: str, n_devices: int = 256) -> Dict[str, float]:
 
 
 def count_ops(hlo: str, prefix: str,
-              result_type: Optional[str] = None) -> int:
+              result_type: Optional[str] = None,
+              include_unreachable: bool = False) -> int:
     """Static count of instructions whose op name starts with ``prefix``,
-    across every computation (fusion bodies, loop bodies, the entry).  Not
-    loop-multiplied -- this answers "does the compiled program contain op X
-    at all", e.g. asserting a prepared-weights decode step holds zero
-    ``round-nearest`` ops (no in-trace weight quantization).
+    across every computation reachable from ENTRY (fusion bodies, loop
+    bodies, the entry itself).  Not loop-multiplied -- this answers "does
+    the compiled program contain op X at all", e.g. asserting a
+    prepared-weights decode step holds zero ``round-nearest`` ops (no
+    in-trace weight quantization).
+
+    Dead computations (left behind by DCE after inlining) are skipped: an op
+    there never executes, so counting it can mask a missing op on the live
+    path or inflate a "zero ops" assertion into a false failure.  Pass
+    ``include_unreachable=True`` for the old scan-everything behavior
+    (debugging: "does this text mention op X anywhere").
 
     ``result_type`` additionally filters on the instruction's result dtype
     prefix, e.g. ``count_ops(hlo, "dot", result_type="s32")`` counts integer
     matmuls (int8 x int8 dots accumulate to s32) -- the training fast path's
     "real int8 compute in the backward" assertion."""
     comps = parse_module(hlo)
+    if include_unreachable:
+        names = [k for k in comps if k != "__entry__"]   # alias of ENTRY
+    else:
+        names = reachable_computations(comps)
     n = 0
-    for name, instrs in comps.items():
-        if name == "__entry__":          # alias of the ENTRY computation
-            continue
-        for ins in instrs:
+    for name in names:
+        for ins in comps[name]:
             if not ins.op.startswith(prefix):
                 continue
             if (result_type is not None and not

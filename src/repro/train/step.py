@@ -162,6 +162,24 @@ def make_train_step(model: Model, recipe, opt_cfg: OptConfig, rules=None,
     return train_step
 
 
+def lower_train_hlo(model: Model, recipe, opt_cfg: OptConfig, *,
+                    batch_size: int = 2, seq_len: int = 33,
+                    donate: bool = True) -> str:
+    """Compiled HLO text of one full train step (fwd + bwd + optimizer) on
+    abstract inputs, with the state donated as a real launcher would --
+    the module ``repro.lint`` train contracts analyze.  Nothing is
+    materialized: the state comes from ``jax.eval_shape``."""
+    policy = as_policy(recipe)
+    state = jax.eval_shape(
+        lambda k: init_train_state(model, k, policy, opt_cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    batch = {"tokens": jax.ShapeDtypeStruct((batch_size, seq_len),
+                                            jnp.int32)}
+    step = make_train_step(model, policy, opt_cfg)
+    jitted = jax.jit(step, donate_argnums=(0,) if donate else ())
+    return jitted.lower(state, batch, None).compile().as_text()
+
+
 def make_eval_step(model: Model, recipe, rules=None):
     policy = as_policy(recipe)
 

@@ -300,15 +300,13 @@ def test_engine_path_summary_reports_fused(gpt2, monkeypatch):
     # ... and the pin is applied around the (lazy) trace, not just the
     # report: with the env flipped to 0, tracing `eng`'s decode step still
     # compiles the fused path (zero whole-cache dequantize converts)
-    from repro.parallel.hlo_count import count_ops
-    tok = jnp.zeros((2, 1), jnp.int32)
-    pos = jnp.zeros((2,), jnp.int32)
-    key = jax.random.PRNGKey(0)
-    hlo = eng._decode_jit.lower(eng.params, eng._state, tok, pos,
-                                key).compile().as_text()
-    assert count_ops(hlo, "convert",
-                     result_type=f"f32[2,16,{cfg.n_kv_heads},"
-                                 f"{cfg.head_dim}]") == 0
+    from repro.lint import RuleSpec, run_rules
+    dims = (2, 16, cfg.n_kv_heads, cfg.head_dim)
+    assert run_rules(eng.lowered_decode_hlo(),
+                     [RuleSpec("no-whole-cache-dequant",
+                               {"min_elems": 2 * 16 * cfg.n_kv_heads
+                                             * cfg.head_dim,
+                                "dims": dims})]) == []
 
 
 def test_fp_kv_regression_guard(gpt2, monkeypatch):

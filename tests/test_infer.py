@@ -80,8 +80,9 @@ def test_prepared_matches_fake_quant_grid(gpt2):
 def test_prepared_decode_has_no_weight_quant_ops(gpt2):
     """Acceptance criterion: with an int8 weight policy the jitted decode
     step contains ZERO quantize ops (no rounds) -- weights enter as stored
-    integer payloads + scales.  The legacy qdq path keeps its rounds."""
-    from repro.parallel.hlo_count import count_ops
+    integer payloads + scales.  The legacy qdq path keeps its rounds (the
+    same no-weight-quant-rounds contract must fire on it)."""
+    from repro.lint import RuleSpec, run_rules
     cfg, model, params = gpt2
     policy = as_policy("*=w8c")
     prep = prepare_params(cfg, params, policy)
@@ -94,8 +95,9 @@ def test_prepared_decode_has_no_weight_quant_ops(gpt2):
 
     prepared = jax.jit(dec).lower(prep, state, tok, pos).compile().as_text()
     legacy = jax.jit(dec).lower(params, state, tok, pos).compile().as_text()
-    assert count_ops(prepared, "round-nearest") == 0
-    assert count_ops(legacy, "round-nearest") > 0
+    spec = RuleSpec("no-weight-quant-rounds", {"max_rounds": 0})
+    assert run_rules(prepared, [spec]) == []
+    assert run_rules(legacy, [spec])
 
 
 def test_engine_parity_with_legacy_greedy(gpt2):
@@ -145,8 +147,9 @@ def test_fused_decode_no_whole_cache_dequant(gpt2, monkeypatch):
     """Acceptance criterion: with ``kv_cache=a8t`` and the fused kernels on,
     the compiled decode step contains ZERO whole-cache dequantize converts
     (s8 cache -> fp at the full (B, S, K, hd) buffer shape); the reference
-    path keeps exactly its K and V buffer converts."""
-    from repro.parallel.hlo_count import count_ops
+    path keeps exactly its K and V buffer converts (the same
+    no-whole-cache-dequant contract must fire on it)."""
+    from repro.lint import RuleSpec, run_rules
     cfg, model, params = gpt2
     policy = as_policy("kv_cache=a8t,*=w8c")
     prep = prepare_params(cfg, params, policy)
@@ -154,8 +157,11 @@ def test_fused_decode_no_whole_cache_dequant(gpt2, monkeypatch):
     state = model.init_decode_state(B, S, 0, jnp.float32, policy=policy)
     tok = jnp.ones((B, 1), jnp.int32)
     pos = jnp.full((B,), 4, jnp.int32)
-    cache_shape = f"f32[{B},{S},{cfg.n_kv_heads},{cfg.head_dim}]"
-    counts = {}
+    dims = (B, S, cfg.n_kv_heads, cfg.head_dim)
+    spec = RuleSpec("no-whole-cache-dequant",
+                    {"min_elems": B * S * cfg.n_kv_heads * cfg.head_dim,
+                     "dims": dims})
+    found = {}
     for env in ("0", "1"):
         monkeypatch.setenv("REPRO_FUSED_DECODE", env)
 
@@ -165,9 +171,9 @@ def test_fused_decode_no_whole_cache_dequant(gpt2, monkeypatch):
             return model.decode(p, s_, t, q, policy=policy)
 
         hlo = jax.jit(dec).lower(prep, state, tok, pos).compile().as_text()
-        counts[env] = count_ops(hlo, "convert", result_type=cache_shape)
-    assert counts["1"] == 0, counts
-    assert counts["0"] > 0, counts
+        found[env] = run_rules(hlo, [spec])
+    assert found["1"] == [], found
+    assert found["0"], found
 
 
 def test_fused_int8_kv_logit_tolerance(gpt2, monkeypatch):

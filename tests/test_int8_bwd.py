@@ -15,7 +15,7 @@ from repro.core.qlinear import (_qlinear_int8_fwd, int8_backend_supported,
                                 int8_bwd_supported)
 from repro.models import build_model
 from repro.optim import OptConfig
-from repro.parallel.hlo_count import count_ops
+from repro.lint import RuleSpec, run_rules
 from repro.train import init_train_state, make_train_step
 
 KEY = jax.random.PRNGKey(7)
@@ -125,8 +125,14 @@ def test_forward_has_no_duplicate_quantize():
     x, w = _xw(64, 96, 80)
     f = jax.jit(lambda xx, ww: POL_INT8.linear(CTX, xx, ww))
     hlo = f.lower(x, w).compile().as_text()
-    assert count_ops(hlo, "round") == 2, count_ops(hlo, "round")
-    assert count_ops(hlo, "dot", result_type="s32") == 1
+    assert run_rules(hlo, [
+        RuleSpec("op-count", {"op_prefix": "round",
+                              "min_count": 2, "max_count": 2}),
+        RuleSpec("int8-compute-present", {"min_dots": 1}),
+        RuleSpec("op-count", {"op_prefix": "dot", "result_type": "s32",
+                              "max_count": 1}),
+        RuleSpec("double-quantize"),
+    ]) == []
 
 
 def test_backward_hlo_has_int8_dots_for_dx_and_dw():
@@ -140,13 +146,22 @@ def test_backward_hlo_has_int8_dots_for_dx_and_dw():
 
     f = jax.jit(jax.grad(loss, argnums=(0, 1)))
     hlo = f.lower(x, w).compile().as_text()
-    assert count_ops(hlo, "dot", result_type="s32") == 3
-    # fake-quant reference: zero integer dots anywhere
+    assert run_rules(hlo, [
+        RuleSpec("int8-compute-present", {"min_dots": 3}),
+        RuleSpec("op-count", {"op_prefix": "dot", "result_type": "s32",
+                              "max_count": 3}),
+    ]) == []
+    # fake-quant reference: zero integer dots anywhere -- the presence
+    # contract must FIRE on it
     g = jax.jit(jax.grad(
         lambda xx, ww: jnp.sum(POL_FAKE.linear(CTX, xx, ww) ** 2),
         argnums=(0, 1)))
-    assert count_ops(g.lower(x, w).compile().as_text(),
-                     "dot", result_type="s32") == 0
+    fake_hlo = g.lower(x, w).compile().as_text()
+    assert run_rules(fake_hlo, [
+        RuleSpec("op-count", {"op_prefix": "dot", "result_type": "s32",
+                              "max_count": 0})]) == []
+    assert run_rules(fake_hlo, [
+        RuleSpec("int8-compute-present", {"min_dots": 1})])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,365 @@
+"""repro.lint: HLO parser/graph analysis, every contract rule (positive AND
+negative -- each must fire on a deliberately broken module), the jaxpr
+scale-placement rule, the AST env-read lint, and end-to-end contracts on the
+gpt2-small paths.
+
+Golden modules live in ``tests/fixtures/hlo`` -- hand-written HLO text
+exercising while/fusion/donation/convert patterns, so the parser and rules
+have fast unit tests that compile nothing.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.lint import HloModule, RuleSpec, Severity, run_rules
+from repro.lint.hlo_graph import (nbytes, nelems, operand_names,
+                                  operand_types, shape_of)
+from repro.parallel.hlo_count import (count_module, count_ops,
+                                      entry_name, parse_module,
+                                      reachable_computations)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "hlo")
+
+
+def fixture(name: str) -> str:
+    with open(os.path.join(FIXTURES, name)) as f:
+        return f.read()
+
+
+# ---------------------------------------------------------------------------
+# parser / graph analysis
+# ---------------------------------------------------------------------------
+
+def test_entry_and_reachability_cross_while_attrs():
+    """``condition=%c, body=%b`` on ONE line must contribute BOTH callees
+    (a greedy attr regex swallows ``body=`` into the condition value and
+    loses the loop body -- the bug that hid every op inside while loops)."""
+    comps = parse_module(fixture("while_dead.hlo"))
+    assert entry_name(comps) == "main"
+    reach = set(reachable_computations(comps))
+    assert {"main", "cond", "body"} <= reach
+    assert "dead" not in reach
+
+
+def test_count_ops_skips_dead_computations():
+    hlo = fixture("while_dead.hlo")
+    assert count_ops(hlo, "round-nearest") == 1              # body only
+    assert count_ops(hlo, "round-nearest", include_unreachable=True) == 3
+
+
+def test_operand_parsing_tuple_typed():
+    """Tuple-typed operands nest parens inside the operand list; a naive
+    split loses them -- and donation chains go through get-tuple-element."""
+    mod = HloModule(fixture("donated_copy.hlo"))
+    gte = mod.defs("main")["gte"]
+    assert operand_names(gte) == ["p1"]
+    kd = HloModule(fixture("cache_dequant.hlo")).defs("main")["kd"]
+    assert operand_types(kd) == [("s8", (2, 16, 2, 8))]
+
+
+def test_shape_helpers():
+    assert shape_of("f32[2,16,2,8]{3,2,1,0}") == ("f32", (2, 16, 2, 8))
+    assert nelems("s8[64,32]{1,0}") == 2048
+    assert nbytes("f32[64,64]{1,0}") == 16384
+    assert shape_of("pred[]") == ("pred", ())
+
+
+def test_donated_params_multi_entry_alias_map():
+    """Nested ``{output_index}`` / ``{param_index}`` braces inside the alias
+    map must not truncate the scan (brace-balanced, not regex-greedy)."""
+    assert HloModule(fixture("donated_copy.hlo")).donated_params() == {0, 1}
+    assert HloModule(fixture("while_dead.hlo")).donated_params() == set()
+
+
+def test_walk_back_through_aliasing_ops():
+    from repro.lint.hlo_graph import ALIASING_OPS
+    mod = HloModule(fixture("donated_copy.hlo"))
+    chain = mod.walk_back("main", mod.defs("main")["copy.view"],
+                          through=ALIASING_OPS)
+    assert any(i.name == "p1" and i.op == "parameter" for i in chain)
+
+
+def test_count_module_custom_call_charges_operand_bytes():
+    """Pallas launches read their operands from HBM like a fusion boundary:
+    result 128*32*4 + operands 128*64*4 + 64*32*1."""
+    counts = count_module(fixture("custom_call.hlo"), 1)
+    assert counts["bytes"] == 16384 + 32768 + 2048
+
+
+# ---------------------------------------------------------------------------
+# rules, each positive + negative
+# ---------------------------------------------------------------------------
+
+def test_rule_no_weight_quant_rounds():
+    # fires: three live rounds against a zero contract
+    bad = run_rules(fixture("double_quant.hlo"),
+                    [RuleSpec("no-weight-quant-rounds")])
+    assert len(bad) == 3 and all(f.severity == Severity.ERROR for f in bad)
+    # clean: a module with no rounds on the live path (dead comp has two)
+    assert run_rules(fixture("while_dead.hlo"),
+                     [RuleSpec("no-weight-quant-rounds",
+                               {"max_rounds": 1})]) == []
+
+
+def test_rule_no_whole_cache_dequant():
+    hlo = fixture("cache_dequant.hlo")
+    bad = run_rules(hlo, [RuleSpec("no-whole-cache-dequant",
+                                   {"min_elems": 512})])
+    assert len(bad) == 1 and bad[0].instr == "kd"    # scalar convert passes
+    # dims pin: another buffer shape is not this rule's business
+    assert run_rules(hlo, [RuleSpec("no-whole-cache-dequant",
+                                    {"min_elems": 1, "dims": (4, 4)})]) == []
+    assert run_rules(hlo, [RuleSpec("no-whole-cache-dequant",
+                                    {"min_elems": 512,
+                                     "dims": (2, 16, 2, 8)})])
+
+
+def test_rule_int8_compute_present():
+    hlo = fixture("int8_dots.hlo")
+    assert run_rules(hlo, [RuleSpec("int8-compute-present",
+                                    {"min_dots": 1})]) == []
+    short = run_rules(hlo, [RuleSpec("int8-compute-present",
+                                     {"min_dots": 2})])
+    assert len(short) == 1 and "only 1" in short[0].message
+    # fp module: zero integer dots
+    assert run_rules(fixture("double_quant.hlo"),
+                     [RuleSpec("int8-compute-present", {"min_dots": 1})])
+
+
+def test_rule_copy_free_aliasing():
+    hlo = fixture("donated_copy.hlo")
+    bad = run_rules(hlo, [RuleSpec("copy-free-aliasing")])
+    # 16 KiB copy of donated param 0 fires; the 512 B view copy is under
+    # the bookkeeping threshold
+    assert [f.instr for f in bad] == ["copy.big"]
+    both = run_rules(hlo, [RuleSpec("copy-free-aliasing",
+                                    {"min_bytes": 256})])
+    assert {f.instr for f in both} == {"copy.big", "copy.view"}
+    # clean: copies of COMPUTED values are fine; donation alias held
+    assert run_rules(fixture("clean_donated.hlo"),
+                     [RuleSpec("copy-free-aliasing")]) == []
+
+
+def test_rule_double_quantize():
+    bad = run_rules(fixture("double_quant.hlo"), [RuleSpec("double-quantize")])
+    # r2 re-rounds r1 through an elementwise multiply; r3 is fed by a dot
+    # (a genuinely new value), so it does NOT fire
+    assert [f.instr for f in bad] == ["r2"]
+    # reachability-aware: the dead computation's back-to-back rounds are
+    # not live code
+    assert run_rules(fixture("while_dead.hlo"),
+                     [RuleSpec("double-quantize")]) == []
+
+
+def test_rule_op_count_bounds():
+    hlo = fixture("double_quant.hlo")
+    assert run_rules(hlo, [RuleSpec("op-count",
+                                    {"op_prefix": "round-nearest",
+                                     "min_count": 3, "max_count": 3})]) == []
+    over = run_rules(hlo, [RuleSpec("op-count",
+                                    {"op_prefix": "round-nearest",
+                                     "max_count": 2})])
+    assert len(over) == 1
+    missing = run_rules(hlo, [RuleSpec("op-count", {"op_prefix": "dot",
+                                                    "result_type": "s32",
+                                                    "min_count": 1})])
+    assert len(missing) == 1
+
+
+def test_rule_severity_override_and_ordering():
+    hlo = fixture("double_quant.hlo")
+    out = run_rules(hlo, [
+        RuleSpec("no-weight-quant-rounds", severity=Severity.WARNING),
+        RuleSpec("double-quantize", severity=Severity.ERROR)])
+    assert out[0].severity == Severity.ERROR          # most severe first
+    assert {f.severity for f in out} == {Severity.ERROR, Severity.WARNING}
+
+
+# ---------------------------------------------------------------------------
+# jaxpr rule: scale-off-contracted-axis
+# ---------------------------------------------------------------------------
+
+def _qstate(K, N, scale_shape):
+    from repro.core.qadam import QState
+    return QState(q=jnp.ones((K, N), jnp.int8),
+                  scale=jnp.ones(scale_shape, jnp.float32),
+                  zero=jnp.zeros((), jnp.float32))
+
+
+def test_jaxpr_rule_clean_factorizations_pass():
+    from repro.lint.jaxpr_rules import check_scale_contraction
+    M, K, N = 8, 32, 16
+    x = jnp.zeros((M, K), jnp.float32)
+
+    def post_scale(x, w):           # scale multiplies the dot RESULT
+        y = jax.lax.dot_general(x.astype(jnp.int32), w.q.astype(jnp.int32),
+                                (((1,), (0,)), ((), ())))
+        return y.astype(jnp.float32) * w.scale[None, :]
+
+    assert check_scale_contraction(post_scale, x, _qstate(K, N, (N,))) == []
+
+    def pre_scale_out_channel(x, w):    # dequant-before-dot, but the scale
+        wf = w.q.astype(jnp.float32) * w.scale[None, :]   # varies OFF the
+        return x @ wf                                     # contracted axis
+    assert check_scale_contraction(pre_scale_out_channel, x,
+                                   _qstate(K, N, (N,))) == []
+
+    def per_tensor(x, w):           # scalar scales commute with the dot
+        wf = w.q.astype(jnp.float32) * w.scale
+        return x @ wf
+    assert check_scale_contraction(per_tensor, x, _qstate(K, N, ())) == []
+
+
+def test_jaxpr_rule_fires_on_contracted_axis_scale():
+    from repro.lint.jaxpr_rules import check_scale_contraction
+    M, K, N = 8, 32, 16
+    x = jnp.zeros((M, K), jnp.float32)
+
+    def bad(x, w):                  # per-K scale multiplied in pre-dot:
+        wf = w.q.astype(jnp.float32) * w.scale[:, None]   # invalid int8
+        return x @ wf                                     # factorization
+    found = check_scale_contraction(bad, x, _qstate(K, N, (K,)))
+    assert len(found) == 1 and found[0].severity == Severity.ERROR
+    assert "contracted" in found[0].message
+
+
+def test_jaxpr_rule_real_backward_closure_clean():
+    """The int8 custom-vjp backward: residual scales stay off both backward
+    dots' contracted axes (this is what makes dx/dW real int8 dots)."""
+    from repro.core.qadam import QState
+    from repro.core.qlinear import _qlinear_int8_bwd
+    from repro.core.qpolicy import LinearCtx, as_policy
+    from repro.lint.jaxpr_rules import check_scale_contraction
+    recipe = as_policy("*=w8c+a8t+g8t@int8_pallas") \
+        .resolve(LinearCtx("mlp_up")).recipe
+    M, K, N = 4, 64, 48
+    zero = jnp.zeros((), jnp.float32)
+    xs = QState(jnp.zeros((M, K), jnp.int8),
+                jnp.ones((M, 1), jnp.float32), zero)
+    ws = QState(jnp.zeros((K, N), jnp.int8),
+                jnp.ones((1, N), jnp.float32), zero)
+    g = jnp.zeros((M, N), jnp.float32)
+    proto = jnp.zeros((0,), jnp.float32)
+
+    def bwd(xs_, ws_, g_):
+        return _qlinear_int8_bwd(recipe, (xs_, ws_, None, (M, K),
+                                          proto, proto), g_)
+
+    assert check_scale_contraction(bwd, xs, ws, g) == []
+
+
+# ---------------------------------------------------------------------------
+# AST env-read lint
+# ---------------------------------------------------------------------------
+
+def test_ast_lint_flags_env_read_in_jitted_def():
+    from repro.lint.pylint_rules import lint_source
+    src = ("import os, jax\n"
+           "@jax.jit\n"
+           "def step(x):\n"
+           "    if os.environ.get('FLAG') == '1':\n"
+           "        return x * 2\n"
+           "    return x\n")
+    found = lint_source(src)
+    assert len(found) == 1 and "step" in found[0].message
+
+
+def test_ast_lint_flags_jit_wrapped_nested_def():
+    """The exact shape of the PR-5 bug: a closure defined in __init__ and
+    handed to jax.jit later reads the env at trace time."""
+    from repro.lint.pylint_rules import lint_source
+    src = ("import os, jax\n"
+           "def outer(self):\n"
+           "    def _decode(p, s):\n"
+           "        blk = int(os.getenv('REPRO_DECODE_BLOCK', '256'))\n"
+           "        return p\n"
+           "    return jax.jit(_decode, donate_argnums=(1,))\n")
+    assert len(lint_source(src)) == 1
+
+
+def test_ast_lint_allowlists_pinning_pattern():
+    from repro.lint.pylint_rules import lint_source
+    ctxmgr = ("import os, contextlib\n"
+              "@contextlib.contextmanager\n"
+              "def _pinned_env(values):\n"
+              "    old = {k: os.environ.get(k) for k in values}\n"
+              "    os.environ.update(values)\n"
+              "    yield\n")
+    assert lint_source(ctxmgr) == []
+    marked = ("import os, jax\n"
+              "@jax.jit\n"
+              "def step(x):\n"
+              "    dbg = os.environ.get('DBG')  # lint: env-ok\n"
+              "    return x\n")
+    assert lint_source(marked) == []
+    untraced = ("import os\n"
+                "def helper():\n"
+                "    return os.environ.get('X')\n")
+    assert lint_source(untraced) == []
+
+
+def test_ast_lint_repo_is_clean():
+    from repro.lint.pylint_rules import lint_tree
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    assert lint_tree(root) == []
+
+
+# ---------------------------------------------------------------------------
+# end-to-end contracts on the gpt2-small paths
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gpt2():
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    cfg = dataclasses.replace(get_smoke_config("gpt2-small"),
+                              dtype="float32")
+    model = build_model(cfg)
+    return cfg, model, model.init_params(jax.random.PRNGKey(0))
+
+
+def test_contract_decode_paths_green(gpt2, monkeypatch):
+    """Both decode contracts hold on the real paths -- including
+    copy-free-aliasing on the donated decode state, closing the ROADMAP
+    carried-over invariant."""
+    import repro.lint.contracts as contracts
+    cfg, model, params = gpt2
+    monkeypatch.setattr(contracts, "_MODEL_CACHE",
+                        {"gpt2-small": (cfg, model, params)})
+    for contract in contracts.contracts_for("decode"):
+        assert contract.check("gpt2_small") == [], contract.name
+
+
+def test_contract_fused_kv_fires_when_fused_disabled(gpt2, monkeypatch):
+    """Negative e2e: REPRO_FUSED_DECODE=0 under the fused contract's rules
+    -> the dequant-on-read fallback is caught as whole-cache converts."""
+    from repro.infer import Engine
+    cfg, model, params = gpt2
+    monkeypatch.setenv("REPRO_FUSED_DECODE", "0")
+    eng = Engine(model, params, "kv_cache=a8t,*=w8c",
+                 max_slots=2, max_seq=32)
+    _, b, s, kh, hd = eng._state["caches"]["k"].shape
+    found = run_rules(eng.lowered_decode_hlo(),
+                      [RuleSpec("no-whole-cache-dequant",
+                                {"min_elems": b * s * kh * hd,
+                                 "dims": (b, s, kh, hd)})])
+    assert found and all(f.rule_id == "no-whole-cache-dequant"
+                         for f in found)
+
+
+def test_contract_prepared_fires_on_unprepared_weights(gpt2):
+    """Negative e2e: raw (unprepared) weights under the prepared contract's
+    rules -> in-trace quant rounds are caught."""
+    from repro.core.qpolicy import as_policy
+    cfg, model, params = gpt2
+    policy = as_policy("*=w8c")
+    state = model.init_decode_state(2, 16, 0, jnp.float32)
+    tok = jnp.ones((2, 1), jnp.int32)
+    pos = jnp.full((2,), 4, jnp.int32)
+    hlo = jax.jit(
+        lambda p, s, t, q: model.decode(p, s, t, q, policy=policy)
+    ).lower(params, state, tok, pos).compile().as_text()
+    assert run_rules(hlo, [RuleSpec("no-weight-quant-rounds")])
