@@ -208,6 +208,21 @@ def bench_serve() -> None:
             f"kv_read_bytes={r['kv_read_bytes']};path={r['path']}")
 
 
+def bench_serve_trace() -> None:
+    """Poisson-arrival trace through the paged engine's async scheduler:
+    end-to-end latency percentiles, tokens/s, and peak live-KV bytes vs the
+    dense engine's always-resident cache (emits BENCH_serve_trace.json)."""
+    from benchmarks.serve_throughput import bench_serve_trace as trace
+    r = trace(smoke=False)
+    row("serve_trace::paged", 0.0,
+        f"tok_s={r['tokens_per_s']:.1f};"
+        f"p50_ms={r['latency_p50_s'] * 1e3:.2f};"
+        f"p99_ms={r['latency_p99_s'] * 1e3:.2f};"
+        f"live_kv_bytes={r['peak_live_kv_bytes']};"
+        f"dense_kv_bytes={r['dense_resident_kv_bytes']};"
+        f"parity={r['token_parity_vs_dense']};path={r['path']}")
+
+
 def bench_decode_attention() -> None:
     """Decode-attention hot path: fp cache vs int8 dequant-on-read vs the
     fused int8-KV kernel (per-step ms + analytic KV-bytes-read counter;
@@ -244,6 +259,7 @@ def main() -> None:
     bench_train_throughput()
     bench_opt_update()
     bench_serve()
+    bench_serve_trace()
     bench_decode_attention()
     table_paper_results()
     table_memory_and_linear_share()

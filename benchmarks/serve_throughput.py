@@ -14,15 +14,21 @@ Rows (CSV, matching benchmarks/run.py):
 
 Usage:
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
-        [--decode-smoke] [--json] [--sweep]
+        [--decode-smoke] [--trace] [--trace-smoke] [--json] [--sweep]
 
 ``--smoke`` runs one tiny engine pass and asserts sane output (the CI
 serve-smoke gate).  ``--decode-smoke`` is the decode-attention CI gate: it
 pins the fused kernel on (interpret mode), asserts fused-vs-dequant logit
 parity and that the fused path's analytic KV read is < 1/3 of the
-dequant-on-read bytes.  ``--sweep`` times the fused kernel across kv tile
-lengths (the ``REPRO_DECODE_BLOCK`` autotune hook, passed explicitly so
-each size retraces).
+dequant-on-read bytes.  ``--trace`` replays a Poisson-arrival request trace
+through the paged engine's async scheduler and reports p50/p99 end-to-end
+latency, tokens/s, and peak live-KV bytes vs the dense engine's resident
+cache.  ``--trace-smoke`` is its CI gate: same trace, asserting per-request
+token parity with a dense engine, finite p99, and peak paged live-token
+bytes under half the dense resident bytes; writes ``BENCH_serve_trace.json``.
+``--sweep`` times the fused kernel across kv tile lengths (the
+``REPRO_DECODE_BLOCK`` autotune hook, passed explicitly so each size
+retraces).
 """
 from __future__ import annotations
 
@@ -177,12 +183,116 @@ def decode_smoke() -> None:
           f"engine path [{eng.path_summary()}]")
 
 
+def bench_serve_trace(*, n_requests: int = 12, mean_gap_s: float = 0.02,
+                      slots: int = 4, max_seq: int = 64, page_size: int = 8,
+                      max_new: int = 6, seed: int = 0,
+                      policy: str = "kv_cache=a8t,*=w8c",
+                      smoke: bool = False,
+                      out_path: str = "BENCH_serve_trace.json") -> dict:
+    """Poisson-arrival trace through the paged engine's async scheduler.
+
+    ``n_requests`` random prompts arrive with exponential inter-arrival gaps
+    (mean ``mean_gap_s``) while the scheduler loop runs in its background
+    thread -- admission, chunked prefill, decode, preemption-free page churn
+    all overlap with the arrival process.  The same requests run through a
+    dense engine synchronously as the memory baseline and the token oracle
+    (greedy decode is batch-invariant, so arrival pattern must not change
+    one token).
+
+    Reports p50/p99 end-to-end latency, wall-clock generated tokens/s, and
+    the peak live-KV bytes the trace ever held vs the dense engine's
+    always-resident ``slots x max_seq`` cache.  ``smoke`` asserts the gate
+    (parity, finite p99, live < dense/2) and writes ``out_path``."""
+    from repro.models import build_model
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    dense = Engine(model, params, policy, max_slots=slots, max_seq=max_seq,
+                   seed=0)
+    paged = Engine(model, params, policy, max_slots=slots, max_seq=max_seq,
+                   seed=0, paged=True, page_size=page_size)
+
+    rng = np.random.RandomState(seed)
+    # prompt + max_new stays well under half of max_seq: the trace's mean
+    # live occupancy sits near 50% of one slot strip, which is exactly the
+    # regime where paging should (must) beat the dense resident cache
+    lens = rng.randint(4, 13, n_requests)
+    prompts = [rng.randint(0, cfg.vocab_size, n).tolist() for n in lens]
+    gaps = rng.exponential(mean_gap_s, n_requests)
+
+    dense_ids = [dense.submit(Request(tokens=p, max_new_tokens=max_new))
+                 for p in prompts]
+    oracle = {i: r.tokens for i, r in
+              zip(dense_ids, sorted(dense.run(),
+                                    key=lambda r: r.request_id))}
+
+    sched = paged.scheduler
+    sched.start()
+    t0 = time.monotonic()
+    ids = []
+    try:
+        for p, g in zip(prompts, gaps):
+            time.sleep(float(g))
+            ids.append(paged.submit(Request(tokens=p,
+                                            max_new_tokens=max_new)))
+        sched.wait(ids, timeout=600)
+    finally:
+        sched.stop()
+    wall_s = time.monotonic() - t0
+    responses = {rid: sched.result(rid) for rid in ids}
+
+    stats = sched.latency_stats()
+    gen_tokens = sum(len(r.tokens) for r in responses.values())
+    parity = all(responses[rid].tokens == oracle[did]
+                 for rid, did in zip(ids, dense_ids))
+    result = {
+        "n_requests": n_requests,
+        "mean_gap_s": mean_gap_s,
+        "generated_tokens": gen_tokens,
+        "wall_s": wall_s,
+        "tokens_per_s": gen_tokens / max(wall_s, 1e-9),
+        "latency_p50_s": stats["p50_s"],
+        "latency_p99_s": stats["p99_s"],
+        "latency_mean_s": stats["mean_s"],
+        "peak_live_kv_bytes": sched.peak_live_bytes,
+        "dense_resident_kv_bytes": dense.kv_cache_nbytes(),
+        "live_over_dense": (sched.peak_live_bytes
+                            / max(dense.kv_cache_nbytes(), 1)),
+        "token_parity_vs_dense": parity,
+        "scheduler_steps": sched.steps,
+        "path": paged.path_summary(),
+    }
+    if smoke:
+        assert parity, "paged trace tokens diverge from the dense engine"
+        assert np.isfinite(stats["p99_s"]), stats
+        assert result["peak_live_kv_bytes"] * 2 \
+            < result["dense_resident_kv_bytes"], (
+            "paged live-KV bytes not under half the dense resident cache: "
+            f"{result['peak_live_kv_bytes']} vs "
+            f"{result['dense_resident_kv_bytes']}")
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"serve trace smoke ok: {gen_tokens} tokens, "
+              f"p50={stats['p50_s'] * 1e3:.1f}ms "
+              f"p99={stats['p99_s'] * 1e3:.1f}ms, "
+              f"live/dense={result['live_over_dense']:.3f}, "
+              f"path [{result['path']}] -> {out_path}")
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny engine pass + sanity assertions (CI gate)")
     ap.add_argument("--decode-smoke", action="store_true",
                     help="fused decode-attention parity + KV-bytes gate (CI)")
+    ap.add_argument("--trace", action="store_true",
+                    help="Poisson-arrival trace through the paged async "
+                         "scheduler: latency percentiles + live-KV memory")
+    ap.add_argument("--trace-smoke", action="store_true",
+                    help="trace gate (CI): token parity vs dense, finite "
+                         "p99, live bytes < dense/2; writes "
+                         "BENCH_serve_trace.json")
     ap.add_argument("--json", action="store_true",
                     help="emit one JSON object instead of CSV rows")
     ap.add_argument("--sweep", action="store_true",
@@ -209,6 +319,20 @@ def main() -> None:
         print("serve smoke ok:", [(r.request_id, r.finish_reason) for r in out],
               f"kv {eng.kv_cache_nbytes()}B vs fp {fp.kv_cache_nbytes()}B,",
               f"path [{eng.path_summary()}]")
+        return
+
+    if args.trace or args.trace_smoke:
+        r = bench_serve_trace(smoke=args.trace_smoke)
+        if args.json:
+            print(json.dumps(r, indent=2))
+        elif not args.trace_smoke:
+            print("name,us_per_call,derived")
+            print(f"serve_trace::tok_s,0.0,{r['tokens_per_s']:.1f}")
+            print(f"serve_trace::p50_ms,0.0,{r['latency_p50_s'] * 1e3:.2f}")
+            print(f"serve_trace::p99_ms,0.0,{r['latency_p99_s'] * 1e3:.2f}")
+            print(f"serve_trace::live_kv_bytes,0.0,{r['peak_live_kv_bytes']}")
+            print("serve_trace::dense_kv_bytes,0.0,"
+                  f"{r['dense_resident_kv_bytes']}")
         return
 
     if args.sweep:

@@ -1,9 +1,16 @@
 """Policy-driven quantized inference: prepared weights, int8 KV cache,
-continuous batching.  See ``repro.infer.engine`` for the architecture."""
-from repro.infer.engine import ENGINE_FAMILIES, Engine, Request, Response
+paged KV + continuous batching.  See ``repro.infer.engine`` for the
+architecture, ``repro.infer.pages`` for the page pool, and
+``repro.infer.scheduler`` for the async host loop."""
+from repro.infer.engine import (ENGINE_FAMILIES, PAGED_FAMILIES, Engine,
+                                Request, Response)
+from repro.infer.pages import (CapacityError, PagePool, init_paged_caches,
+                               page_nbytes, pages_for)
 from repro.infer.prepare import params_nbytes, prepare_params, quantize_weight
 from repro.infer.sampling import SamplingParams, sample
+from repro.infer.scheduler import Scheduler
 
-__all__ = ["ENGINE_FAMILIES", "Engine", "Request", "Response",
-           "params_nbytes", "prepare_params", "quantize_weight",
-           "SamplingParams", "sample"]
+__all__ = ["ENGINE_FAMILIES", "PAGED_FAMILIES", "Engine", "Request",
+           "Response", "CapacityError", "PagePool", "init_paged_caches",
+           "page_nbytes", "pages_for", "params_nbytes", "prepare_params",
+           "quantize_weight", "SamplingParams", "sample", "Scheduler"]

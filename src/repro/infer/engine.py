@@ -5,6 +5,9 @@ of one batched KV cache / SSM state).  Requests are admitted into free slots
 as they open -- a finished sequence's slot is reused on the very next step
 instead of waiting for the whole batch (continuous batching) -- and every
 admitted request decodes in lock-step through one jitted per-token step.
+The host side of the loop (submit queue, admission ticks, emit thread,
+latency accounting) lives in :class:`repro.infer.scheduler.Scheduler`;
+``submit``/``run`` delegate to it.
 
 The quantization story mirrors training's :class:`QuantPolicy`, not a
 parallel config surface:
@@ -27,6 +30,25 @@ parallel config surface:
 * **sampling** -- one :class:`SamplingParams` (greedy / temperature / top-k /
   top-p) is shared by all requests in the batch and baked into the step.
 
+**Paged KV mode** (``paged=True``, attention-cache families): instead of one
+``max_seq``-row cache strip per slot, K/V live in a pool of fixed-size int8
+*pages* (``infer/pages.py``) indexed through per-slot page tables, so decode
+KV memory scales with *live tokens* rather than ``slots x max_seq``:
+
+* the fused kernel variant (``decode_attention_paged``) scalar-prefetches
+  the page table and DMAs one physical page per logical KV tile -- same
+  dequant-into-softmax body, same fused row quantize+scatter, now routed to
+  ``page_table[pos // page_size]``;
+* prefill packs short prompts into shared rows (segment-id masks keep them
+  invisible to each other) and *pages in* each prompt's KV rows from the
+  prefill buffer to freshly allocated pages;
+* admission is by free-page count with a starvation bound (see ``_admit``);
+  a request whose pool runs dry mid-decode preempts the youngest running
+  request (its prompt+generated tokens re-enter the queue and its pages
+  recycle instantly);
+* shared prompt prefixes can be cached once (:meth:`cache_prefix`) and
+  aliased into any number of page tables (refcounted -- copy-free sharing).
+
 Per-slot positions: decode runs with a (B,) position vector, so each slot
 writes its own cache row and masks its own history -- a request's tokens are
 independent of which (or how many) neighbours share the batch (asserted by
@@ -35,7 +57,8 @@ independent of which (or how many) neighbours share the batch (asserted by
 Prompts are right-padded to bucketed lengths for prefill (bounded compile
 count); causal masking makes the pad tail invisible and ``last_pos`` indexes
 the real last-token logits.  Scope: decoder-only families (``dense``,
-``moe``, ``ssm``, ``hybrid``) on a single host; encoder-decoder and VLM
+``moe``, ``ssm``, ``hybrid``; paged mode: ``dense``/``moe`` -- the families
+with a pure attention cache) on a single host; encoder-decoder and VLM
 serving stay on the legacy ``greedy_generate`` loop.
 """
 from __future__ import annotations
@@ -44,17 +67,28 @@ import contextlib
 import dataclasses
 import os
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.qconfig import Granularity
 from repro.core.qpolicy import as_policy
+from repro.infer.pages import (CapacityError, PagePool, init_paged_caches,
+                               page_nbytes, pages_for)
 from repro.infer.prepare import prepare_params
 from repro.infer.sampling import SamplingParams, sample
+from repro.infer.scheduler import Scheduler
 
 ENGINE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+PAGED_FAMILIES = ("dense", "moe")
+
+# A queued request skipped this many admission passes (each time because its
+# page need exceeded the free pool while smaller requests jumped ahead)
+# becomes a barrier: nothing younger is admitted past it until it fits.
+# Bounds head-of-line bypass so large prompts cannot starve.
+STARVATION_LIMIT = 8
 
 
 @contextlib.contextmanager
@@ -93,6 +127,8 @@ class Response:
     prompt: List[int]
     tokens: List[int]                        # generated, eos excluded
     finish_reason: str                       # "eos" | "length"
+    text: Optional[str] = None               # set by the emit thread when the
+    #                                          engine has a detokenizer
 
 
 @dataclasses.dataclass
@@ -100,6 +136,7 @@ class _Running:
     req: Request
     slot: int
     tokens: List[int] = dataclasses.field(default_factory=list)
+    order: int = 0                           # admission sequence number
 
 
 class Engine:
@@ -112,7 +149,10 @@ class Engine:
                  max_slots: int = 8, max_seq: int = 256,
                  sampling: SamplingParams = SamplingParams(),
                  prepare_weights: bool = True, seed: int = 0,
-                 prefill_bucket: int = 16):
+                 prefill_bucket: int = 16,
+                 paged: bool = False, page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 detokenizer=None):
         cfg = model.cfg
         if cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
@@ -125,19 +165,65 @@ class Engine:
         self.max_slots = int(max_slots)
         self.max_seq = int(max_seq)
         self.prefill_bucket = int(prefill_bucket)
+        self.detokenizer = detokenizer
         self.params = (prepare_params(cfg, params, self.policy)
                        if prepare_weights else params)
         self._dtype = jnp.dtype(cfg.dtype)
-        self._state = model.init_decode_state(
-            self.max_slots, self.max_seq, 0, self._dtype, policy=self.policy)
         from repro.kernels.decode_attn import (default_block_k,
                                                effective_block_k,
                                                fused_decode_enabled)
         self._kv_fused = (self.policy.decode_attn_backend()[0]
                           == "int8_pallas" and fused_decode_enabled())
-        # report the tile the kernel will actually compile for max_seq-row
-        # caches, not the requested/env tile
-        self._kv_block = effective_block_k(self.max_seq)
+        kv_spec = self.policy.kv_spec()
+
+        self.paged = bool(paged)
+        if self.paged:
+            if cfg.family not in PAGED_FAMILIES:
+                raise ValueError(
+                    f"paged KV serving needs a pure attention cache "
+                    f"({PAGED_FAMILIES}); {cfg.family!r} carries SSM state")
+            # the page is the kernel's KV tile: clamp/shrink exactly like
+            # the dense kernel sizes its tile for a max_seq-row cache
+            self.page_size = effective_block_k(self.max_seq, page_size)
+            if self.max_seq % self.page_size:
+                raise ValueError(
+                    f"page_size {self.page_size} must divide "
+                    f"max_seq {self.max_seq}")
+            maxp = self.max_seq // self.page_size
+            self.n_pages = int(n_pages) if n_pages is not None \
+                else 1 + self.max_slots * maxp
+            self.pool = PagePool(n_pages=self.n_pages,
+                                 page_size=self.page_size,
+                                 max_slots=self.max_slots,
+                                 max_pages_per_slot=maxp)
+            self._state = {
+                "caches": init_paged_caches(cfg, self.n_pages,
+                                            self.page_size, self._dtype,
+                                            kv_spec=kv_spec),
+                "ssm": None}
+            # packing prompts into shared prefill rows requires the KV codec
+            # to be row-local (fp or one scale per position x head); a
+            # per-write-block scale would couple packed neighbours
+            self._packable = (kv_spec is None or
+                              kv_spec.granularity is Granularity.PER_TOKEN)
+            # segment masks are materialized arrays, which the q8 flash
+            # prefill kernel does not take -- packing would silently swap
+            # the attend path (flash -> XLA) and upper-layer KV rows would
+            # no longer be bit-identical to a dense engine's.  When the
+            # fused path is on, prompts prefill one per row instead.
+            self._pack_ok = self._packable and not self._kv_fused
+            self._kv_block = self.page_size
+        else:
+            self.page_size = None
+            self.n_pages = None
+            self.pool = None
+            self._packable = False
+            self._state = model.init_decode_state(
+                self.max_slots, self.max_seq, 0, self._dtype,
+                policy=self.policy)
+            # report the tile the kernel will actually compile for
+            # max_seq-row caches, not the requested/env tile
+            self._kv_block = effective_block_k(self.max_seq)
         self._kv_env = {"REPRO_FUSED_DECODE": "1" if self._kv_fused else "0",
                         "REPRO_DECODE_BLOCK": str(default_block_k())}
 
@@ -148,20 +234,45 @@ class Engine:
         self._pos = np.zeros((self.max_slots,), np.int32)
         self._last_tok = np.zeros((self.max_slots,), np.int32)
         self._next_id = 0
+        self._order = 0
         self._key = jax.random.PRNGKey(seed)
+        self._skips: Dict[int, int] = {}          # request_id -> passes skipped
+        self._carry: Dict[int, Tuple[List[int], List[int]]] = {}
+        #   preempted request_id -> (original prompt, tokens generated so far)
+        self._prefixes: Dict[tuple, List[int]] = {}   # cached prefix -> pids
+        self._pagein_jits: Dict[Tuple[int, int], jax.stages.Wrapped] = {}
+        self.scheduler = Scheduler(self)
 
-        def _prefill(params, toks, last_pos):
-            with _pinned_env(self._kv_env):
-                return self.model.prefill(params, {"tokens": toks},
-                                          policy=self.policy,
-                                          max_seq=self.max_seq,
-                                          last_pos=last_pos)
+        if self.paged:
+            def _prefill(params, toks, last, segs):
+                # max_seq (not the row width) sizes the prefill KV buffers so
+                # the attention reduction length matches the dense engine's
+                # bit for bit; pages are sliced out of the buffer afterwards
+                with _pinned_env(self._kv_env):
+                    return self.model.prefill(params, {"tokens": toks},
+                                              policy=self.policy,
+                                              max_seq=self.max_seq,
+                                              last_pos=last, segments=segs)
 
-        def _decode(params, state, tok, pos, key):
-            with _pinned_env(self._kv_env):
-                logits, state = self.model.decode(params, state, tok, pos,
-                                                  policy=self.policy)
-            return sample(logits, self.sampling, key), state
+            def _decode(params, state, tok, pos, pt, key):
+                with _pinned_env(self._kv_env):
+                    logits, state = self.model.decode(params, state, tok,
+                                                      pos, policy=self.policy,
+                                                      page_table=pt)
+                return sample(logits, self.sampling, key), state
+        else:
+            def _prefill(params, toks, last_pos):
+                with _pinned_env(self._kv_env):
+                    return self.model.prefill(params, {"tokens": toks},
+                                              policy=self.policy,
+                                              max_seq=self.max_seq,
+                                              last_pos=last_pos)
+
+            def _decode(params, state, tok, pos, key):
+                with _pinned_env(self._kv_env):
+                    logits, state = self.model.decode(params, state, tok,
+                                                      pos, policy=self.policy)
+                return sample(logits, self.sampling, key), state
 
         def _scatter(state, new, slots):
             return jax.tree_util.tree_map(
@@ -183,26 +294,49 @@ class Engine:
         toks = [int(t) for t in req.tokens]
         if not toks:
             raise ValueError("empty prompt")
-        if len(toks) > self.max_seq - 1:
-            raise ValueError(f"prompt length {len(toks)} needs at least one "
-                             f"decode row in max_seq={self.max_seq}")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.paged:
+            page = self.page_size
+            maxp = self.pool.max_pages_per_slot
+            alloc = self.pool.n_pages - 1          # page 0 is the trash page
+            acct = dict(max_seq=self.max_seq, page_size=page,
+                        pages_total=alloc, pages_free=self.pool.free_pages,
+                        slots_total=self.max_slots,
+                        slots_free=len(self._free))
+            if len(toks) > self.max_seq - 1:
+                raise CapacityError(
+                    f"prompt length {len(toks)} needs at least one decode "
+                    f"row in max_seq={self.max_seq} ({maxp} pages x {page} "
+                    f"rows/page per slot)",
+                    tokens=len(toks),
+                    pages_needed=pages_for(len(toks) + 1, page), **acct)
+            peak = pages_for(min(len(toks) + req.max_new_tokens,
+                                 self.max_seq), page)
+            if peak > alloc:
+                raise CapacityError(
+                    f"request peaks at {peak} pages "
+                    f"({min(len(toks) + req.max_new_tokens, self.max_seq)} "
+                    f"live tokens / {page} rows per page) but the pool holds "
+                    f"only {alloc} allocatable pages -- even alone it would "
+                    f"exhaust the pool mid-decode",
+                    tokens=len(toks), pages_needed=peak, **acct)
+        elif len(toks) > self.max_seq - 1:
+            raise CapacityError(
+                f"prompt length {len(toks)} needs at least one "
+                f"decode row in max_seq={self.max_seq}",
+                tokens=len(toks), max_seq=self.max_seq,
+                slots_total=self.max_slots, slots_free=len(self._free))
         req = dataclasses.replace(req, tokens=toks,
                                   request_id=self._next_id)
         self._next_id += 1
-        self._queue.append(req)
+        self.scheduler.enqueue(req)
         return req.request_id
 
     def run(self) -> List[Response]:
         """Drain the queue: admit-on-free until every submitted request has a
         response.  Returns responses in request_id order."""
-        self._admit()
-        while self._running:
-            self._step()
-            self._admit()
-        done, self._done = self._done, []
-        return sorted(done, key=lambda r: r.request_id)
+        return self.scheduler.run()
 
     def generate(self, prompts, max_new_tokens: int,
                  eos_id: Optional[int] = None) -> jnp.ndarray:
@@ -219,12 +353,65 @@ class Engine:
         for i, rid in enumerate(ids):
             t = by_id[rid].tokens
             if eos_id is None and len(t) < max_new_tokens:
+                lim = (f"max_seq={self.max_seq} = "
+                       f"{self.pool.max_pages_per_slot} pages x "
+                       f"{self.page_size} rows/page per slot"
+                       if self.paged else f"max_seq={self.max_seq}")
                 raise ValueError(
                     f"request {rid} truncated at {len(t)}/{max_new_tokens} "
-                    f"tokens (cache rows exhausted: max_seq={self.max_seq}); "
-                    "grow max_seq or pass eos_id")
+                    f"tokens (cache rows exhausted: {lim}); "
+                    "grow max_seq"
+                    + (" or n_pages" if self.paged else "")
+                    + " or pass eos_id")
             out[i, :len(t)] = t
         return jnp.asarray(out)
+
+    def cache_prefix(self, tokens: Sequence[int]) -> int:
+        """Prefill ``tokens`` once and pin its whole-page KV as a shared
+        prefix: any later request whose prompt starts with it aliases the
+        pinned pages into its own page table (refcounted, copy-free) and
+        prefills only the tail pages.  Only full pages are cached (the
+        trailing partial page is recomputed per request -- a page is the
+        aliasing unit).  Returns the number of pages cached; paged mode
+        only."""
+        if not self.paged:
+            raise ValueError("cache_prefix requires paged=True")
+        toks = [int(t) for t in tokens]
+        page = self.page_size
+        n_pg = len(toks) // page
+        if n_pg == 0:
+            raise ValueError(
+                f"prefix shorter than one page ({page} tokens); nothing "
+                "to share")
+        plen = n_pg * page
+        if plen > self.max_seq - 1:
+            raise ValueError(
+                f"prefix of {plen} tokens leaves no decode row in "
+                f"max_seq={self.max_seq}")
+        key = tuple(toks[:plen])
+        if key in self._prefixes:
+            return n_pg
+        if n_pg > self.pool.free_pages:
+            raise CapacityError(
+                f"caching a {n_pg}-page prefix needs {n_pg} free pages",
+                tokens=plen, page_size=page, pages_needed=n_pg,
+                pages_total=self.pool.n_pages - 1,
+                pages_free=self.pool.free_pages,
+                slots_total=self.max_slots, slots_free=len(self._free))
+        lb = self._row_len(plen)
+        toksa = np.zeros((1, lb), np.int32)
+        toksa[0, :plen] = key
+        # segments=None: a prefix is one segment, and the plain causal-mask
+        # trace keeps its rows bit-identical to the rows a request prefilling
+        # this prompt itself would write (same attend path, fused or not)
+        last = np.asarray([[0, plen - 1]], np.int32)
+        _, new_state = self._prefill_jit(self.params, jnp.asarray(toksa),
+                                         jnp.asarray(last), None)
+        pids = self.pool.alloc(n_pg)
+        self.pool.pin(pids)
+        self._page_in(new_state["caches"], 0, 0, pids)
+        self._prefixes[key] = pids
+        return n_pg
 
     def kv_cache_nbytes(self) -> int:
         """Resident bytes of the decode state (KV caches + SSM states).
@@ -232,6 +419,16 @@ class Engine:
         path reads per step -- see :meth:`kv_decode_read_bytes`."""
         return sum(int(x.size) * x.dtype.itemsize
                    for x in jax.tree_util.tree_leaves(self._state))
+
+    def live_kv_bytes(self) -> int:
+        """KV bytes actually referenced by live sequences.  Paged: live
+        (refcounted) pages x per-page bytes across all layers -- this is the
+        number that scales with live tokens instead of slots x max_seq.
+        Dense: the whole resident cache (every slot's strip is committed
+        whether or not the slot is live)."""
+        if not self.paged:
+            return self.kv_cache_nbytes()
+        return self.pool.live_pages * page_nbytes(self._state["caches"])
 
     def _kv_mode(self) -> str:
         """Which KV consumption path decode runs: ``fused`` (int8 kernels),
@@ -249,13 +446,21 @@ class Engine:
 
     def kv_decode_read_bytes(self) -> int:
         """Analytic KV bytes moved per decode step across the stack (the
-        roofline term the fused path shrinks; 0 without a KV cache).  See
+        roofline term the fused path shrinks; 0 without a KV cache).  Paged
+        mode reads only live pages -- the figure tracks live tokens.  See
         ``kernels.decode_attn.decode_kv_read_bytes`` for the per-mode
         accounting."""
         caches = self._state.get("caches")
         if caches is None:
             return 0
         from repro.kernels.decode_attn import decode_kv_read_bytes
+        if self.paged:
+            stacks = caches["k"].shape[0]
+            kh, hd = caches["k"].shape[-2:]
+            rows = int(self.pool.live_pages) * self.page_size
+            return decode_kv_read_bytes(self._kv_mode(), 1, rows, kh, hd,
+                                        n_layers=stacks,
+                                        fp_bytes=self._dtype.itemsize)
         stacks, b, s, kh, hd = caches["k"].shape
         return decode_kv_read_bytes(self._kv_mode(), b, s, kh, hd,
                                     n_layers=stacks,
@@ -271,7 +476,12 @@ class Engine:
                            self.params,
                            is_leaf=lambda x: isinstance(x, QState)))
         mode = self._kv_mode()
-        if mode == "fused":
+        if self.paged:
+            kv = {"fused": f"int8-paged-fused(p{self.page_size})",
+                  "dequant": f"int8-paged-gather(p{self.page_size})",
+                  "fp": f"fp-paged(p{self.page_size})",
+                  "none": "none"}[mode]
+        elif mode == "fused":
             kv = f"int8-fused(b{self._kv_block})"
         else:
             kv = {"dequant": "int8-dequant", "fp": "fp", "none": "none"}[mode]
@@ -285,6 +495,12 @@ class Engine:
         tok = jnp.zeros((self.max_slots, 1), jnp.int32)
         pos = jnp.zeros((self.max_slots,), jnp.int32)
         key = jax.random.PRNGKey(0)
+        if self.paged:
+            pt = jnp.zeros((self.max_slots, self.pool.max_pages_per_slot),
+                           jnp.int32)
+            return (self._decode_jit.lower(self.params, self._state, tok,
+                                           pos, pt, key)
+                    .compile().as_text())
         return (self._decode_jit.lower(self.params, self._state, tok, pos,
                                        key).compile().as_text())
 
@@ -294,19 +510,82 @@ class Engine:
         self._key, k = jax.random.split(self._key)
         return k
 
+    def _drain_done(self) -> List[Response]:
+        done, self._done = self._done, []
+        return done
+
     def _bucket_len(self, n: int) -> int:
         b = self.prefill_bucket
         while b < n:
             b *= 2
         return min(b, self.max_seq)
 
+    def _row_len(self, n: int) -> int:
+        """Paged prefill row width: the dense bucket, rounded up to whole
+        pages (page-in slices whole pages out of the row)."""
+        return min(pages_for(self._bucket_len(n), self.page_size)
+                   * self.page_size, self.max_seq)
+
+    def _shared_prefix(self, toks: List[int]):
+        """Longest cached prefix of ``toks`` -> (prefix_tokens, pids)."""
+        best = None
+        for pref, pids in self._prefixes.items():
+            if len(pref) <= len(toks) and list(pref) == toks[:len(pref)]:
+                if best is None or len(pref) > best[0]:
+                    best = (len(pref), pids)
+        return best
+
     def _admit(self) -> None:
-        while self._queue and self._free:
-            reqs: List[Request] = []
-            while self._queue and len(reqs) < len(self._free):
-                reqs.append(self._queue.popleft())
+        """Admit queued requests into free slots.
+
+        Head-of-line fairness: the queue is scanned in FIFO order and any
+        request whose resources fit is admitted -- in paged mode a large
+        request that does not fit the free-page budget no longer blocks
+        smaller requests behind it.  FIFO still holds among requests of the
+        same size: the budget only shrinks during the scan, so a request can
+        only overtake a *larger* one.  Starvation is bounded: a request
+        skipped ``STARVATION_LIMIT`` admission passes becomes a barrier (no
+        younger request passes it) until it is admitted."""
+        if not self._queue or not self._free:
+            return
+        free_pages = self.pool.free_pages if self.paged else 0
+        free_slots = len(self._free)
+        selected: List[Request] = []
+        shares: Dict[int, tuple] = {}
+        kept: List[Request] = []
+        blocked = False
+        for req in self._queue:
+            if blocked or free_slots == 0:
+                kept.append(req)
+                continue
+            if self.paged:
+                share = self._shared_prefix(req.tokens)
+                npg = pages_for(len(req.tokens), self.page_size)
+                # +1: headroom so the first decode write cannot immediately
+                # force a preemption
+                need = max(npg - (len(share[1]) if share else 0) + 1, 1)
+                if need > free_pages:
+                    n = self._skips[req.request_id] = \
+                        self._skips.get(req.request_id, 0) + 1
+                    if n >= STARVATION_LIMIT:
+                        blocked = True
+                    kept.append(req)
+                    continue
+                free_pages -= need
+                if share:
+                    shares[req.request_id] = share
+            selected.append(req)
+            free_slots -= 1
+        self._queue = deque(kept)
+        for r in selected:
+            self._skips.pop(r.request_id, None)
+        if not selected:
+            return
+        if self.paged:
+            self._admit_paged(selected, shares)
+        else:
             groups: Dict[int, List[Request]] = {}
-            for r in reqs:
+            for r in selected:
                 groups.setdefault(self._bucket_len(len(r.tokens)),
                                   []).append(r)
             for lb, group in groups.items():
@@ -326,7 +605,8 @@ class Engine:
                                         jnp.asarray(slots, jnp.int32))
         first = np.asarray(sample(logits, self.sampling, self._next_key()))
         for i, r in enumerate(group):
-            st = _Running(req=r, slot=slots[i])
+            st = _Running(req=r, slot=slots[i], order=self._order)
+            self._order += 1
             self._running[slots[i]] = st
             self._pos[slots[i]] = len(r.tokens)
             self._last_tok[slots[i]] = int(first[i])
@@ -334,11 +614,171 @@ class Engine:
             # bookkeeping as every later one
             self._record(st, int(first[i]))
 
+    def _admit_paged(self, selected: List[Request],
+                     shares: Dict[int, tuple]) -> None:
+        """One bucketed prefill launch for all admitted requests: short
+        prompts pack into shared rows at page-aligned offsets (segment-id
+        masks isolate them), then each prompt's fresh pages are paged in
+        from the prefill buffer."""
+        page = self.page_size
+        spans = [pages_for(len(r.tokens), page) * page for r in selected]
+        lb = self._row_len(max(len(r.tokens) for r in selected))
+        packed = self._pack_ok and len(selected) > 1
+        if packed:
+            rows: List[List[Tuple[int, int]]] = []   # per row: (req idx, off)
+            used: List[int] = []
+            for i, w in enumerate(spans):            # greedy first-fit
+                for ri, u in enumerate(used):
+                    if u + w <= lb:
+                        rows[ri].append((i, u))
+                        used[ri] += w
+                        break
+                else:
+                    rows.append([(i, 0)])
+                    used.append(w)
+        else:
+            rows = [[(i, 0)] for i in range(len(selected))]
+        n = len(rows)
+        toks = np.zeros((n, lb), np.int32)
+        segs = np.full((n, lb), -1, np.int32)
+        last = np.zeros((len(selected), 2), np.int32)
+        placement: Dict[int, Tuple[int, int]] = {}
+        for ri, row in enumerate(rows):
+            for (i, off) in row:
+                r = selected[i]
+                L = len(r.tokens)
+                toks[ri, off:off + L] = r.tokens
+                # the whole page-rounded span carries the segment id: pad
+                # rows sit causally after the prompt (invisible to it) and
+                # their cache rows are overwritten by decode before any mask
+                # admits them
+                segs[ri, off:off + spans[i]] = i
+                last[i] = (ri, off + L - 1)
+                placement[i] = (ri, off)
+        logits, new_state = self._prefill_jit(
+            self.params, jnp.asarray(toks), jnp.asarray(last),
+            jnp.asarray(segs) if packed else None)
+        first = np.asarray(sample(logits, self.sampling, self._next_key()))
+        for i, r in enumerate(selected):
+            ri, off = placement[i]
+            L = len(r.tokens)
+            npg = pages_for(L, page)
+            share = shares.get(r.request_id)
+            if share is not None:
+                plen, spids = share
+                shared = self.pool.share(spids)
+            else:
+                shared = []
+            fresh = self.pool.alloc(npg - len(shared))
+            slot = self._free.pop(0)
+            self.pool.assign(slot, shared + fresh)
+            if fresh:
+                # shared pages hold bit-identical rows (the prefix attends
+                # only to itself), so only the tail is paged in
+                self._page_in(new_state["caches"], ri,
+                              off + len(shared) * page, fresh)
+            st = _Running(req=r, slot=slot, order=self._order)
+            self._order += 1
+            self._running[slot] = st
+            self._pos[slot] = L
+            self._last_tok[slot] = int(first[i])
+            self._record(st, int(first[i]))
+
+    def _page_in(self, prefill_caches, row: int, col0: int,
+                 pids: List[int]) -> None:
+        """Copy whole pages [col0, col0 + len(pids)*page) of prefill row
+        ``row`` into physical pages ``pids`` of the pool (all layers, all
+        cache buffers).  Jitted per (col0, n_pages) with the row and page
+        ids traced; the pool buffers are donated so the copy is in-place."""
+        npg = len(pids)
+        jkey = (col0, npg)
+        if jkey not in self._pagein_jits:
+            page = self.page_size
+
+            def f(pools, g, row_, pids_, _c0=col0, _n=npg):
+                def upd(pool, buf):
+                    seg = jnp.take(buf, row_, axis=1)          # (L, lb, ...)
+                    seg = jax.lax.slice_in_dim(seg, _c0, _c0 + _n * page,
+                                               axis=1)
+                    seg = seg.reshape(seg.shape[0], _n, page, *seg.shape[2:])
+                    return pool.at[:, pids_].set(seg.astype(pool.dtype))
+                return jax.tree_util.tree_map(upd, pools, g)
+            self._pagein_jits[jkey] = jax.jit(f, donate_argnums=(0,))
+        self._state["caches"] = self._pagein_jits[jkey](
+            self._state["caches"], prefill_caches,
+            jnp.asarray(row, jnp.int32), jnp.asarray(pids, jnp.int32))
+
+    def _ensure_write_pages(self) -> None:
+        """Before a decode step, make sure every running slot owns the page
+        its next row lands in; when the pool is dry, preempt the youngest
+        other request (instant page recycle) and retry."""
+        for slot in sorted(self._running):
+            st = self._running.get(slot)
+            if st is None:                 # preempted by an earlier iteration
+                continue
+            while int(self._pos[slot]) // self.page_size \
+                    >= int(self.pool.used[slot]):
+                if self.pool.free_pages == 0:
+                    if not self._preempt_for(slot):
+                        raise CapacityError(
+                            f"slot {slot} needs a page but the pool is "
+                            "exhausted and there is nothing to preempt",
+                            tokens=int(self._pos[slot]),
+                            page_size=self.page_size,
+                            pages_total=self.pool.n_pages - 1,
+                            pages_free=0, slots_total=self.max_slots,
+                            slots_free=len(self._free))
+                    continue
+                self.pool.append(slot, self.pool.alloc(1)[0])
+
+    def _preempt_for(self, needy_slot: int) -> bool:
+        victims = [st for s, st in self._running.items() if s != needy_slot]
+        if not victims:
+            return False
+        self._preempt(max(victims, key=lambda s: s.order))
+        return True
+
+    def _preempt(self, st: _Running) -> None:
+        """Evict a running request: free its slot and pages now, re-enter the
+        queue at the front with prompt = original prompt + tokens generated
+        so far (the carry map keeps the original prompt/generation split for
+        the final Response)."""
+        rid = st.req.request_id
+        orig, prior = self._carry.get(rid, (list(st.req.tokens), []))
+        gen = prior + st.tokens
+        del self._running[st.slot]
+        self.pool.release_slot(st.slot)
+        self._free.append(st.slot)
+        self._pos[st.slot] = 0
+        self._last_tok[st.slot] = 0
+        self._carry[rid] = (orig, gen)
+        remaining = st.req.max_new_tokens - len(st.tokens)
+        if remaining < 1 or len(orig) + len(gen) > self.max_seq - 1:
+            # no decode row left for a continuation: the request would have
+            # hit the max_seq wall on its next step anyway
+            self._done.append(Response(request_id=rid, prompt=orig,
+                                       tokens=gen, finish_reason="length"))
+            self._carry.pop(rid, None)
+            return
+        cont = dataclasses.replace(st.req, tokens=orig + gen,
+                                   max_new_tokens=remaining)
+        self._queue.appendleft(cont)
+
     def _step(self) -> None:
-        tok = jnp.asarray(self._last_tok[:, None])
-        pos = jnp.asarray(self._pos)
-        nxt, self._state = self._decode_jit(self.params, self._state, tok,
-                                            pos, self._next_key())
+        if self.paged:
+            self._ensure_write_pages()
+            if not self._running:
+                return
+            tok = jnp.asarray(self._last_tok[:, None])
+            pos = jnp.asarray(self._pos)
+            nxt, self._state = self._decode_jit(
+                self.params, self._state, tok, pos,
+                self.pool.table_array(), self._next_key())
+        else:
+            tok = jnp.asarray(self._last_tok[:, None])
+            pos = jnp.asarray(self._pos)
+            nxt, self._state = self._decode_jit(self.params, self._state,
+                                                tok, pos, self._next_key())
         nxt = np.asarray(nxt)
         for slot in list(self._running):
             self._pos[slot] += 1
@@ -359,6 +799,14 @@ class Engine:
     def _finish(self, st: _Running, reason: str) -> None:
         del self._running[st.slot]
         self._free.append(st.slot)
-        self._done.append(Response(request_id=st.req.request_id,
-                                   prompt=list(st.req.tokens),
-                                   tokens=st.tokens, finish_reason=reason))
+        if self.paged:
+            # pages recycle instantly (refcounted -- shared prefix pages
+            # survive under their pin / other tables)
+            self.pool.release_slot(st.slot)
+            self._pos[st.slot] = 0
+            self._last_tok[st.slot] = 0
+        rid = st.req.request_id
+        orig, prior = self._carry.pop(rid, (list(st.req.tokens), []))
+        self._done.append(Response(request_id=rid, prompt=orig,
+                                   tokens=prior + st.tokens,
+                                   finish_reason=reason))

@@ -1,0 +1,202 @@
+"""Paged KV cache: fixed-size int8 pages, free-list allocation, refcounts.
+
+The dense engine allocates KV as ``(slots, max_seq)`` rows -- decode memory
+scales with the worst-case length and a short request holds a full row
+hostage.  Paged KV (the vLLM / Jorgensen 2025 block-table idiom) splits the
+cache into fixed-size *pages*:
+
+* ``init_paged_caches`` builds per-buffer pools shaped
+  ``(n_layers, n_pages, page_size, kv_heads, head_dim)`` -- int8 payloads
+  plus ``(.., page_size, kv_heads, 1)`` fp32 scale sidecars under an int8
+  ``kv_spec`` (the per-(position, head) codec of ``models.attention``), fp
+  pools otherwise.  One *logical* page id addresses the same physical page
+  row across all layers, so the page table is per-slot only.
+* :class:`PagePool` is the host-side allocator: a LIFO free list (freed
+  pages recycle on the very next allocation), a per-slot page table of
+  static width ``max_seq // page_size``, and per-page refcounts --
+  ``share`` aliases full prefix pages into another slot's table, which is
+  what makes common-system-prompt prefix sharing nearly free.
+* **Page 0 is the trash page.**  It is never on the free list; empty table
+  entries point at it, so inactive decode slots scatter their (discarded)
+  rows harmlessly and gathers of unwritten table entries read bounded
+  garbage that the validity mask excludes.
+
+Device buffers live in ``Engine._state`` and are mutated only through the
+jitted decode / page-in steps; the pool here tracks *which* physical pages
+are live, never their contents.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+class CapacityError(ValueError):
+    """A request cannot be held by the configured cache geometry.
+
+    Subclasses :class:`ValueError` (the engine's historical rejection type)
+    and carries the paged accounting so callers can size pools / shed load
+    instead of parsing messages."""
+
+    def __init__(self, message: str, *,
+                 tokens: Optional[int] = None,
+                 max_seq: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 pages_needed: Optional[int] = None,
+                 pages_total: Optional[int] = None,
+                 pages_free: Optional[int] = None,
+                 slots_total: Optional[int] = None,
+                 slots_free: Optional[int] = None):
+        super().__init__(message)
+        self.tokens = tokens
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_needed = pages_needed
+        self.pages_total = pages_total
+        self.pages_free = pages_free
+        self.slots_total = slots_total
+        self.slots_free = slots_free
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Host-side page allocator + per-slot page tables.  See module doc."""
+    n_pages: int
+    page_size: int
+    max_slots: int
+    max_pages_per_slot: int
+
+    def __post_init__(self):
+        if self.n_pages < 2:
+            raise ValueError("n_pages must be >= 2 (page 0 is the trash page)")
+        # LIFO free list: the page freed last is reallocated first, so the
+        # freed-page hygiene property (recycled garbage masked by validity
+        # lengths) is exercised constantly, not only under pressure
+        self._free: List[int] = list(range(1, self.n_pages))
+        self.refcount = np.zeros((self.n_pages,), np.int32)
+        self.refcount[TRASH_PAGE] = 1          # pinned forever
+        self.table = np.zeros((self.max_slots, self.max_pages_per_slot),
+                              np.int32)
+        self.used = np.zeros((self.max_slots,), np.int32)  # pages per slot
+
+    # -- allocation --------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        """Physical pages currently referenced (trash page excluded)."""
+        return int(np.sum(self.refcount[1:] > 0))
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise CapacityError(
+                f"page pool exhausted: need {n} pages, {len(self._free)} free "
+                f"of {self.n_pages - 1} allocatable",
+                pages_needed=n, pages_total=self.n_pages - 1,
+                pages_free=len(self._free), page_size=self.page_size)
+        pids = [self._free.pop() for _ in range(n)]
+        self.refcount[pids] += 1
+        return pids
+
+    def share(self, pids: List[int]) -> List[int]:
+        """Alias already-live pages into another table (prefix sharing):
+        one more reference each, no copy, no new pages."""
+        assert all(self.refcount[p] > 0 for p in pids)
+        self.refcount[list(pids)] += 1
+        return list(pids)
+
+    def pin(self, pids: List[int]) -> None:
+        """Extra permanent reference (cached prefixes survive every release)."""
+        self.refcount[list(pids)] += 1
+
+    def release(self, pids: List[int]) -> None:
+        for p in pids:
+            if p == TRASH_PAGE:
+                continue
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)           # instant recycle
+            assert self.refcount[p] >= 0
+
+    # -- per-slot tables ---------------------------------------------------
+
+    def assign(self, slot: int, pids: List[int]) -> None:
+        """Install a slot's page list (already ref'd via alloc/share)."""
+        assert len(pids) <= self.max_pages_per_slot
+        self.table[slot] = TRASH_PAGE
+        self.table[slot, :len(pids)] = pids
+        self.used[slot] = len(pids)
+
+    def append(self, slot: int, pid: int) -> None:
+        """Map one more (alloc'd) page at the end of a slot's table."""
+        u = int(self.used[slot])
+        assert u < self.max_pages_per_slot
+        self.table[slot, u] = pid
+        self.used[slot] = u + 1
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return [int(p) for p in self.table[slot, :int(self.used[slot])]]
+
+    def release_slot(self, slot: int) -> List[int]:
+        """Free a finished slot: decref its pages (recycling any that drop
+        to zero), point its table back at the trash page.  Returns the page
+        ids that were mapped."""
+        pids = self.slot_pages(slot)
+        self.release(pids)
+        self.table[slot] = TRASH_PAGE
+        self.used[slot] = 0
+        return pids
+
+    def table_array(self) -> jnp.ndarray:
+        """Device copy of the full (max_slots, max_pages_per_slot) table --
+        the scalar-prefetch operand of the paged decode kernel."""
+        return jnp.asarray(self.table)
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """ceil(n_tokens / page_size) -- pages needed to hold n_tokens rows."""
+    return -(-int(n_tokens) // int(page_size))
+
+
+def init_paged_caches(cfg, n_pages: int, page_size: int, dtype,
+                      kv_spec=None) -> Dict[str, jnp.ndarray]:
+    """Stacked page pools for the whole layer stack.  Same dict structure as
+    the dense decode caches (``k``/``v`` [+ ``k_scale``/``v_scale``]), so the
+    engine's state tree, ``_kv_mode`` probing and the layer scan's stacked-xs
+    convention all apply unchanged -- only the row axes differ:
+    ``(L, n_pages, page_size, K, hd)`` instead of ``(L, B, max_seq, K, hd)``.
+    """
+    from repro.core.quantizer import storage_dtype
+    k, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    if kv_spec is not None:
+        qdt = storage_dtype(kv_spec.bits)
+        return {
+            "k": jnp.zeros((L, n_pages, page_size, k, hd), qdt),
+            "v": jnp.zeros((L, n_pages, page_size, k, hd), qdt),
+            "k_scale": jnp.zeros((L, n_pages, page_size, k, 1), jnp.float32),
+            "v_scale": jnp.zeros((L, n_pages, page_size, k, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((L, n_pages, page_size, k, hd), dtype),
+        "v": jnp.zeros((L, n_pages, page_size, k, hd), dtype),
+    }
+
+
+def page_nbytes(caches: Dict[str, jnp.ndarray]) -> int:
+    """Bytes one *logical* page occupies across every buffer and layer --
+    the unit ``Engine.live_kv_bytes`` scales by."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(caches):
+        L = leaf.shape[0]
+        per_page = int(np.prod(leaf.shape[2:]))
+        total += L * per_page * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,214 @@
+"""Async continuous-batching host loop for the serving engine.
+
+The :class:`~repro.infer.engine.Engine` owns the device side (jitted
+prefill / decode / page-in steps, the page pool, slot bookkeeping); the
+:class:`Scheduler` owns the host side around it:
+
+* a thread-safe **submit queue** (``enqueue`` may be called from any thread
+  -- the Poisson-trace benchmark submits from a generator thread while the
+  loop decodes);
+* the **scheduling loop** (:meth:`step`): drain submissions, admit by free
+  pages (the engine's HOL-fair ``_admit``), run one decode step, hand
+  finished sequences to the emit thread;
+* a background **detokenize/emit thread**: finished responses are finalized
+  (optional ``Engine.detokenizer`` producing ``Response.text``) and their
+  completion events set *off* the scheduling loop, so token emission
+  overlaps prefill/decode instead of serializing with them;
+* wall-clock **latency accounting** per request (submit -> finish),
+  summarized by :meth:`latency_stats` (p50/p99 -- the serving numbers the
+  ROADMAP's "millions of users" item asks for).
+
+Two driving modes share every code path:
+
+* ``run()`` -- synchronous drain, what ``Engine.run`` delegates to: loop
+  until every submitted request has a response, then return them in
+  request-id order (the engine's historical contract).
+* ``start()`` / ``stop()`` -- the loop runs in a background thread;
+  ``wait(ids)`` blocks on completion events.  Used by
+  ``benchmarks/serve_throughput.py --trace`` to overlap timed arrivals
+  with decode.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.infer.pages import CapacityError
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (no numpy dependency on the hot path)."""
+    if not xs:
+        return float("nan")
+    ys = sorted(xs)
+    i = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
+    return ys[i]
+
+
+class Scheduler:
+    def __init__(self, engine):
+        self.engine = engine
+        self._inbox: "queue.Queue" = queue.Queue()
+        self._emit_q: "queue.Queue" = queue.Queue()
+        self._results: Dict[int, object] = {}
+        self._events: Dict[int, threading.Event] = {}
+        self._times: Dict[int, Dict[str, float]] = {}
+        self._lock = threading.Lock()
+        self._emit_thread: Optional[threading.Thread] = None
+        self._loop_thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._loop_error: Optional[BaseException] = None
+        self.peak_live_bytes = 0
+        self.steps = 0
+
+    # -- submission (any thread) ------------------------------------------
+
+    def enqueue(self, req) -> None:
+        """Called by ``Engine.submit`` after validation: records the arrival
+        time and hands the request to the scheduling loop."""
+        with self._lock:
+            self._events[req.request_id] = threading.Event()
+            self._times[req.request_id] = {"submit": time.monotonic()}
+        self._inbox.put(req)
+
+    # -- emit thread -------------------------------------------------------
+
+    def _ensure_emit_thread(self) -> None:
+        if self._emit_thread is None or not self._emit_thread.is_alive():
+            self._emit_thread = threading.Thread(
+                target=self._emit_loop, name="repro-emit", daemon=True)
+            self._emit_thread.start()
+
+    def _emit_loop(self) -> None:
+        detok = getattr(self.engine, "detokenizer", None)
+        while True:
+            resp = self._emit_q.get()
+            try:
+                if detok is not None:
+                    resp.text = detok(resp.tokens)
+                now = time.monotonic()
+                with self._lock:
+                    t = self._times.setdefault(resp.request_id, {})
+                    t["finish"] = now
+                    self._results[resp.request_id] = resp
+                    ev = self._events.get(resp.request_id)
+                if ev is not None:
+                    ev.set()
+            finally:
+                self._emit_q.task_done()
+
+    # -- the loop ----------------------------------------------------------
+
+    def _drain_inbox(self) -> int:
+        n = 0
+        while True:
+            try:
+                self.engine._queue.append(self._inbox.get_nowait())
+                n += 1
+            except queue.Empty:
+                return n
+
+    def step(self) -> bool:
+        """One scheduling tick: drain submissions, admit, decode one step,
+        emit finishes.  Returns False when fully idle."""
+        eng = self.engine
+        self._drain_inbox()
+        eng._admit()
+        if eng._running:
+            eng._step()
+            eng._admit()          # freed slots/pages readmit immediately
+        self.steps += 1
+        self.peak_live_bytes = max(self.peak_live_bytes,
+                                   eng.live_kv_bytes())
+        for resp in eng._drain_done():
+            self._ensure_emit_thread()
+            self._emit_q.put(resp)
+        if eng._queue and not eng._running:
+            # nothing running and nothing admissible: the queued request can
+            # never fit (pinned prefixes shrank the pool below its need)
+            req = eng._queue[0]
+            raise CapacityError(
+                f"request {req.request_id} ({len(req.tokens)} tokens) is not "
+                "admissible into an idle engine: the page pool (minus pinned "
+                "prefix pages) is too small",
+                tokens=len(req.tokens),
+                pages_free=(eng.pool.free_pages if eng.paged else None),
+                slots_free=len(eng._free))
+        return bool(eng._running or eng._queue or not self._inbox.empty())
+
+    def run(self) -> List[object]:
+        """Synchronous drain (the ``Engine.run`` contract): process until
+        idle, wait for the emit thread, return every unclaimed response in
+        request-id order."""
+        if self._loop_thread is not None and self._loop_thread.is_alive():
+            raise RuntimeError("scheduler loop already running; use wait()")
+        while self.step():
+            pass
+        self._emit_q.join()
+        with self._lock:
+            out = [self._results.pop(rid)
+                   for rid in sorted(self._results)]
+            for r in out:
+                self._events.pop(r.request_id, None)
+        return out
+
+    # -- async serve mode --------------------------------------------------
+
+    def start(self) -> None:
+        """Run the scheduling loop in a background thread (serve mode)."""
+        if self._loop_thread is not None and self._loop_thread.is_alive():
+            return
+        self._stop.clear()
+        self._loop_error = None
+        self._ensure_emit_thread()
+
+        def loop():
+            try:
+                while not self._stop.is_set():
+                    if not self.step():
+                        time.sleep(1e-3)
+            except BaseException as e:          # surfaced by wait()/stop()
+                self._loop_error = e
+
+        self._loop_thread = threading.Thread(target=loop, name="repro-sched",
+                                             daemon=True)
+        self._loop_thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._loop_thread is not None:
+            self._loop_thread.join(timeout=60)
+            self._loop_thread = None
+        if self._loop_error is not None:
+            raise self._loop_error
+
+    def wait(self, rids: List[int], timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for rid in rids:
+            ev = self._events.get(rid)
+            if ev is None:
+                continue
+            left = None if deadline is None else deadline - time.monotonic()
+            if not ev.wait(left):
+                raise TimeoutError(f"request {rid} not finished in time")
+            if self._loop_error is not None:
+                raise self._loop_error
+
+    def result(self, rid: int):
+        with self._lock:
+            self._events.pop(rid, None)
+            return self._results.pop(rid)
+
+    # -- metrics -----------------------------------------------------------
+
+    def latency_stats(self) -> Dict[str, float]:
+        """End-to-end (submit -> finish) latency over finished requests."""
+        with self._lock:
+            lats = [t["finish"] - t["submit"] for t in self._times.values()
+                    if "finish" in t]
+        return {"n": len(lats),
+                "p50_s": _percentile(lats, 50),
+                "p99_s": _percentile(lats, 99),
+                "mean_s": (sum(lats) / len(lats)) if lats else float("nan")}

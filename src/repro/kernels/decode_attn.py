@@ -239,6 +239,128 @@ def decode_attention(q: jnp.ndarray,
     )(pos, q, kq, ks, vq, vs, new_k, new_v)
 
 
+def _paged_decode_attn_kernel(pos_ref, pt_ref, *refs, **kw):
+    """Paged wrapper: identical compute to :func:`_decode_attn_kernel` -- the
+    page table is consumed purely by the BlockSpec index maps (physical-page
+    DMA routing), never by the kernel body, so the in-register
+    dequant-into-softmax and the fused row quantize+scatter are reused
+    verbatim."""
+    del pt_ref
+    _decode_attn_kernel(pos_ref, *refs, **kw)
+
+
+def decode_attention_paged(q: jnp.ndarray,
+                           kq: jnp.ndarray, ks: jnp.ndarray,
+                           vq: jnp.ndarray, vs: jnp.ndarray,
+                           new_k: jnp.ndarray, new_v: jnp.ndarray,
+                           pos: jnp.ndarray, page_table: jnp.ndarray, *,
+                           qmin: int = -128, qmax: int = 127,
+                           interpret: Optional[bool] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                      jnp.ndarray, jnp.ndarray]:
+    """One fused decode-attention step on the *paged* int8 KV pool.
+
+    q: (B, K, G, hd) fp grouped queries; kq/vq: (P, page, K, hd) int8 page
+    pools (no slot axis -- pages are shared across slots); ks/vs:
+    (P, page, K, 1) fp32 scale sidecar pools; new_k/new_v: (B, K, hd) fp rows;
+    pos: (B,) validity lengths; page_table: (B, max_pages) int32 mapping each
+    slot's logical page j to a physical pool page (unmapped entries point at
+    the trash page 0).
+
+    The grid is the dense kernel's ``(slots, kv_heads, kv_tiles)`` with the
+    kv tile pinned to one page: both ``pos`` and the page table are scalar-
+    prefetched, and the *input* index maps route logical tile ``j`` to
+    physical page ``page_table[b, min(j, ceil(pos[b]/page)-1)]`` -- tiles
+    past the slot's live length are clamped to the last live page, so no
+    slot ever DMAs more than ``ceil(pos[b]/page)`` distinct pages (their
+    compute is skipped by the ``ki*bk < pos`` guard regardless).  The fused
+    new-row scatter targets ``(page_table[b, pos[b]//page], pos[b]%page)``.
+    Returns ``(ctx, kq', ks', vq', vs')`` with the pools aliased in place.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, kh, g, hd = q.shape
+    npages, page = kq.shape[0], kq.shape[1]
+    maxp = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    last = maxp * page - 1
+
+    def rd(bi, j, pos_ref, pt_ref):
+        live_last = jnp.maximum((pos_ref[bi] + page - 1) // page - 1, 0)
+        return pt_ref[bi, jnp.minimum(j, live_last)]
+
+    def wr(bi, pos_ref, pt_ref):
+        # clamp like the dense kernel: pos == maxp*page is the degenerate
+        # freed-slot case; the row lands in the slot's last mapped page and
+        # is never read back
+        p = jnp.minimum(pos_ref[bi], last)
+        return pt_ref[bi, p // page], p % page
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda b, k, j, pos_ref, pt_ref: (b, k, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, k, j, pos_ref, pt_ref:
+                         (rd(b, j, pos_ref, pt_ref), 0, k, 0)),
+            pl.BlockSpec((1, page, 1, 1),
+                         lambda b, k, j, pos_ref, pt_ref:
+                         (rd(b, j, pos_ref, pt_ref), 0, k, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, k, j, pos_ref, pt_ref:
+                         (rd(b, j, pos_ref, pt_ref), 0, k, 0)),
+            pl.BlockSpec((1, page, 1, 1),
+                         lambda b, k, j, pos_ref, pt_ref:
+                         (rd(b, j, pos_ref, pt_ref), 0, k, 0)),
+            pl.BlockSpec((1, 1, hd),
+                         lambda b, k, j, pos_ref, pt_ref: (b, k, 0)),
+            pl.BlockSpec((1, 1, hd),
+                         lambda b, k, j, pos_ref, pt_ref: (b, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda b, k, j, pos_ref, pt_ref: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, k, j, pos_ref, pt_ref:
+                         wr(b, pos_ref, pt_ref) + (k, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda b, k, j, pos_ref, pt_ref:
+                         wr(b, pos_ref, pt_ref) + (k, 0)),
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, k, j, pos_ref, pt_ref:
+                         wr(b, pos_ref, pt_ref) + (k, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda b, k, j, pos_ref, pt_ref:
+                         wr(b, pos_ref, pt_ref) + (k, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),      # running max
+            pltpu.VMEM((g, 1), jnp.float32),      # running sum
+            pltpu.VMEM((g, hd), jnp.float32),     # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_attn_kernel, bk=page, nblk=maxp,
+                          scale=scale, qmin=qmin, qmax=qmax),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+            jax.ShapeDtypeStruct(kq.shape, kq.dtype),
+            jax.ShapeDtypeStruct(ks.shape, ks.dtype),
+            jax.ShapeDtypeStruct(vq.shape, vq.dtype),
+            jax.ShapeDtypeStruct(vs.shape, vs.dtype),
+        ],
+        # pools alias in place (operands 0/1 are the prefetched scalars):
+        # only the one written row block per slot is DMA'd back
+        input_output_aliases={3: 1, 4: 2, 5: 3, 6: 4},
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos, page_table, q, kq, ks, vq, vs, new_k, new_v)
+
+
 def decode_kv_read_bytes(mode: str, batch: int, max_seq: int,
                          n_kv_heads: int, head_dim: int, *,
                          n_layers: int = 1, fp_bytes: int = 2) -> int:

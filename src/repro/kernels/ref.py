@@ -96,6 +96,85 @@ def decode_attn_ref(q, kq, ks, vq, vs, new_k, new_v, pos):
     return jnp.einsum("bkgt,btkh->bkgh", p, vf), (kq, ks, vq, vs)
 
 
+def decode_attn_paged_ref(q, kq, ks, vq, vs, new_k, new_v, pos, page_table):
+    """Paged-gather oracle for ``decode_attention_paged``: same new-row
+    quantize codec as :func:`decode_attn_ref`, scatter into the *pool* at
+    ``(page_table[b, pos//page], pos % page)``, then gather each slot's
+    logical view ``pool[page_table[b]]`` -> (B, maxp*page, K, hd) and run the
+    identical dequant + masked grouped softmax.  Because the gathered view
+    lays the same values at the same logical rows as the dense buffer, the
+    attention is bitwise identical to the dense oracle wherever
+    ``maxp*page == S`` -- the property the engine parity tests pin.
+
+    kq/vq: (P, page, K, hd) int8 pools; ks/vs: (P, page, K, 1) fp32;
+    page_table: (B, maxp) int32.  Returns (ctx, (kq', ks', vq', vs'))."""
+    import jax
+    from repro.core.qconfig import Granularity, QuantSpec
+    from repro.core.quantizer import quantize_int
+    spec = QuantSpec(8, Granularity.PER_TOKEN)
+    b = q.shape[0]
+    page = kq.shape[1]
+    maxp = page_table.shape[1]
+    hd = kq.shape[-1]
+    nkq, nks, _ = quantize_int(new_k, spec)
+    nvq, nvs, _ = quantize_int(new_v, spec)
+    pc = jnp.minimum(pos, maxp * page - 1)
+    rows_b = jnp.arange(b)
+    pid = page_table[rows_b, pc // page]
+    row = pc % page
+    kq = kq.at[pid, row].set(nkq)
+    ks = ks.at[pid, row].set(nks)
+    vq = vq.at[pid, row].set(nvq)
+    vs = vs.at[pid, row].set(nvs)
+    # gather the logical per-slot views, then dequant (mirrors the kernel's
+    # page-at-a-time DMA: only table-mapped pages are ever touched)
+    kf = (kq[page_table].astype(jnp.float32)
+          * _guard_ref(ks[page_table])).reshape(b, maxp * page, -1, hd)
+    vf = (vq[page_table].astype(jnp.float32)
+          * _guard_ref(vs[page_table])).reshape(b, maxp * page, -1, hd)
+    s_ = jnp.einsum("bkgh,btkh->bkgt", q, kf,
+                    preferred_element_type=jnp.float32)
+    s_ = s_ / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    t = jnp.arange(maxp * page)
+    s_ = jnp.where((t[None, :] <= pc[:, None])[:, None, None, :], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bkgt,btkh->bkgh", p, vf), (kq, ks, vq, vs)
+
+
+def paged_from_dense(kq, ks, vq, vs, lengths, page, n_extra=1, seed=0):
+    """Re-lay a dense ragged cache fixture (B, S, K, hd) as page pools plus
+    a per-slot table: slot b's first ceil(lengths[b]/page) logical pages map
+    to freshly assigned physical pages (allocation order shuffled by seed so
+    physical contiguity is never accidentally relied on), the rest to the
+    trash page 0.  ``n_extra`` spare pages pad the pool.  Returns
+    (kq_pool, ks_pool, vq_pool, vs_pool, page_table)."""
+    import numpy as np
+    b, s, kh, hd = kq.shape
+    assert s % page == 0
+    maxp = s // page
+    need = [int(-(-int(l) // page)) for l in lengths]
+    # map every slot's full row range: pages holding the write position too
+    need = [min(maxp, n + 1) for n in need]
+    total = 1 + sum(need) + n_extra
+    rng = np.random.RandomState(seed)
+    order = list(rng.permutation(np.arange(1, total)))
+    table = np.zeros((b, maxp), np.int64)
+    kqp = jnp.zeros((total, page, kh, hd), kq.dtype)
+    ksp = jnp.zeros((total, page, kh, 1), ks.dtype)
+    vqp = jnp.zeros((total, page, kh, hd), vq.dtype)
+    vsp = jnp.zeros((total, page, kh, 1), vs.dtype)
+    for bi in range(b):
+        for j in range(need[bi]):
+            pid = order.pop()
+            table[bi, j] = pid
+            sl = slice(j * page, (j + 1) * page)
+            kqp = kqp.at[pid].set(kq[bi, sl])
+            ksp = ksp.at[pid].set(ks[bi, sl])
+            vqp = vqp.at[pid].set(vq[bi, sl])
+            vsp = vsp.at[pid].set(vs[bi, sl])
+    return kqp, ksp, vqp, vsp, jnp.asarray(table, jnp.int32)
+
+
 def decode_attn_inputs(b, s, kh, g, hd, lengths, seed=0):
     """Ragged int8 cache fixture: rows < lengths[i] hold quantized random
     K/V, the rest the never-written state (zero payload AND zero scale);

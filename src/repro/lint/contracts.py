@@ -179,6 +179,45 @@ def _build_decode_fused_kv(config: str):
     return hlo, specs, _prepared_linear_jaxpr_findings("kv_cache=a8t,*=w8c")
 
 
+def _build_decode_paged(config: str):
+    """Paged int8-KV decode via the Engine: the page indirection must stay
+    an indirection -- zero whole-cache dequant converts at any paged view
+    shape, no gather materializing a full per-slot logical view, donated
+    page pools copy-free, and only the per-stack new-row quantize rounds."""
+    cfg, model, params = _gpt2(config)
+    from repro.infer import Engine
+    eng = Engine(model, params, "kv_cache=a8t,*=w8c",
+                 max_slots=2, max_seq=32, paged=True, page_size=16)
+    hlo = eng.lowered_decode_hlo()
+    caches = eng._state["caches"]
+    _, npages, page, kh, hd = caches["k"].shape
+    b = eng.max_slots
+    maxp = eng.pool.max_pages_per_slot
+    view_elems = b * maxp * page * kh * hd      # one full per-slot KV view
+    pool_elems = npages * page * kh * hd        # the whole physical pool
+    specs = [
+        # the pool itself, the gathered (B, maxp, page, ...) pages, and the
+        # flattened (B, maxp*page, ...) view are all whole-cache dequants
+        RuleSpec("no-whole-cache-dequant",
+                 {"min_elems": pool_elems, "dims": (npages, page, kh, hd)}),
+        RuleSpec("no-whole-cache-dequant",
+                 {"min_elems": view_elems, "dims": (b, maxp, page, kh, hd)}),
+        RuleSpec("no-whole-cache-dequant",
+                 {"min_elems": view_elems, "dims": (b, maxp * page, kh, hd)}),
+        RuleSpec("no-large-gather",
+                 {"min_elems": view_elems,
+                  "dims": (b, maxp, page, kh, hd)}),
+        RuleSpec("no-large-gather",
+                 {"min_elems": view_elems,
+                  "dims": (b, maxp * page, kh, hd)}),
+        RuleSpec("copy-free-aliasing", {"min_bytes": _COPY_MIN_BYTES}),
+        RuleSpec("double-quantize"),
+        RuleSpec("op-count",
+                 {"op_prefix": "round-nearest",
+                  "min_count": 0, "max_count": 2 * cfg.n_layers})]
+    return hlo, specs, []
+
+
 def _build_train_int8(config: str):
     """Real-int8 train step (fwd + bwd + optimizer): integer MXU dots must
     be present -- 3 s32-result dots (fwd, dx, dw) per quantized linear
@@ -234,6 +273,13 @@ CONTRACTS: List[PathContract] = [
                     "donated state copy-free",
         env={"REPRO_FUSED_DECODE": "1"},
         build=_build_decode_fused_kv),
+    PathContract(
+        name="decode-paged",
+        path="decode",
+        description="paged int8-KV decode: page indirection intact, no "
+                    "whole-view gather/dequant, pools copy-free",
+        env={"REPRO_FUSED_DECODE": "1"},
+        build=_build_decode_paged),
     PathContract(
         name="train-int8",
         path="train",

@@ -233,6 +233,43 @@ def _double_quantize(mod: HloModule, *, prefix: str = "round-nearest"
 
 
 # ---------------------------------------------------------------------------
+# (6) no-large-gather
+# ---------------------------------------------------------------------------
+
+@rule("no-large-gather",
+      "paged decode must not gather more pages than a slot's live range")
+def _no_large_gather(mod: HloModule, *, min_elems: int,
+                     dtype: str = "s8",
+                     dims: Optional[Sequence[int]] = None) -> List[Finding]:
+    """Paged decode touches at most ``ceil(pos/page_size)`` physical pages
+    per slot -- a gather / dynamic-slice whose *result* reaches the size of
+    every slot's full logical KV view means the page indirection collapsed
+    into a materialized whole-cache gather (paging's memory win gone, and a
+    (B, maxp*page, ...) fp copy usually follows).  Size-thresholded on the
+    result so the fused kernel's per-tile page DMAs (one page each) pass;
+    ``dims`` pins the rule to the per-slot logical view shape
+    (B, maxp, page, kv_heads, head_dim) so the layer scan's per-layer
+    stacked-buffer slices (leading dim 1, a different axis entirely) are
+    not mistaken for it."""
+    out: List[Finding] = []
+    for comp, ins in mod.live_instrs():
+        if ins.op not in ("gather", "dynamic-slice"):
+            continue
+        res_dtype, res_dims = shape_of(ins.type_str)
+        if res_dtype != dtype or nelems(ins.type_str) < min_elems:
+            continue
+        if dims is not None and res_dims != tuple(dims):
+            continue
+        out.append(_finding(
+            "no-large-gather",
+            f"{ins.op} materializes {ins.type_str.strip()} "
+            f"({nelems(ins.type_str)} elems >= {min_elems}): whole-cache "
+            "page gather on the paged decode path",
+            comp, ins.name))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # op-count: the generic parameterized counter (replaces ad-hoc test asserts)
 # ---------------------------------------------------------------------------
 

@@ -245,6 +245,10 @@ def _gqa_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             b, sq, h * hd)
 
     chunk = _pick_chunk(sq, k.shape[1], b, h, rules)
+    if not (mask is None or isinstance(mask, dict)):
+        # materialized (B, Sq, Skv) masks (packed-prefill segment masks)
+        # cannot be re-sliced per chunk -- run the direct path
+        chunk = sq
     if sq <= chunk:
         qpos = jnp.arange(sq) + q_offset
         ctx = _attend_block(qg, k, v, _mask_chunk(mask, qpos, k.shape[1]))
@@ -268,6 +272,65 @@ def _gqa_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return ctx.reshape(b, sq, h * hd)
 
 
+def _paged_decode(q, k, v, cache, page_table, pos_vec, cfg, *,
+                  policy, rules, kv_source, out_dtype):
+    """One decode step on *paged* KV pools (``repro.infer.pages``).
+
+    cache leaves are page pools ``(P, page, K, hd)`` shared by every slot;
+    ``page_table`` (B, maxp) maps each slot's logical pages to physical ones.
+    int8 pools with a supported backend run the fused paged kernel (page-
+    routed DMA, in-register dequant, fused row quantize+scatter); otherwise
+    the bit-compared gather reference: scatter the new row at
+    ``(table[pos//page], pos%page)``, gather the slot's logical view, and
+    return fp K/V for the shared masked-softmax path.
+
+    Returns ``(ctx_or_None, k_full, v_full, new_cache)`` -- ``ctx`` is set
+    only on the fused path."""
+    b = q.shape[0]
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    page = cache["k"].shape[1]
+    maxp = page_table.shape[1]
+    quantized = "k_scale" in cache
+    if quantized and _fused_kv_ok(policy, rules, kv_source):
+        from repro.kernels.decode_attn import decode_attention_paged
+        kv_spec = policy.kv_spec()
+        qg = q[:, 0].reshape(b, kh, h // kh, hd)
+        ctx, nkq, nks, nvq, nvs = decode_attention_paged(
+            qg, cache["k"], cache["k_scale"], cache["v"], cache["v_scale"],
+            k[:, 0], v[:, 0], pos_vec, page_table,
+            qmin=kv_spec.qmin, qmax=kv_spec.qmax)
+        new_cache = {"k": nkq, "v": nvq, "k_scale": nks, "v_scale": nvs}
+        return ctx.reshape(b, 1, h * hd), None, None, new_cache
+    # gather reference: same values at the same logical rows as the dense
+    # reference path, so tokens stay bitwise identical to a dense engine
+    pc = jnp.minimum(pos_vec, maxp * page - 1)
+    pid = page_table[jnp.arange(b), pc // page]
+    row = pc % page
+    if quantized:
+        kv_spec = policy.kv_spec()
+        kqn, ksn = _kv_quant(k, kv_spec)
+        vqn, vsn = _kv_quant(v, kv_spec)
+        new_cache = {
+            "k": cache["k"].at[pid, row].set(kqn[:, 0]),
+            "v": cache["v"].at[pid, row].set(vqn[:, 0]),
+            "k_scale": cache["k_scale"].at[pid, row].set(ksn[:, 0]),
+            "v_scale": cache["v_scale"].at[pid, row].set(vsn[:, 0]),
+        }
+        kf = (new_cache["k"][page_table].astype(jnp.float32)
+              * _kv_guard(new_cache["k_scale"][page_table]))
+        vf = (new_cache["v"][page_table].astype(jnp.float32)
+              * _kv_guard(new_cache["v_scale"][page_table]))
+    else:
+        new_cache = {
+            "k": cache["k"].at[pid, row].set(k[:, 0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[pid, row].set(v[:, 0].astype(cache["v"].dtype)),
+        }
+        kf, vf = new_cache["k"][page_table], new_cache["v"][page_table]
+    kf = kf.reshape(b, maxp * page, kh, hd).astype(out_dtype)
+    vf = vf.reshape(b, maxp * page, kh, hd).astype(out_dtype)
+    return None, kf, vf, new_cache
+
+
 def attn_apply(params, x: jnp.ndarray, cfg, *,
                policy=None, rules=None,
                positions: jnp.ndarray,
@@ -275,6 +338,7 @@ def attn_apply(params, x: jnp.ndarray, cfg, *,
                kv_source: Optional[jnp.ndarray] = None,
                cache: Optional[Dict[str, jnp.ndarray]] = None,
                cache_offset=None,
+               page_table: Optional[jnp.ndarray] = None,
                layer=None, n_layers: int = 0,
                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """One attention call.
@@ -308,15 +372,28 @@ def attn_apply(params, x: jnp.ndarray, cfg, *,
 
     if cfg.pos == "rope" and kv_source is None:
         q = rope(q, positions, cfg.rope_theta)
-        kv_pos = positions if cache is None else (
-            jnp.asarray(cache_offset).reshape(-1, 1) + jnp.arange(s)[None, :])
-        k = rope(k, kv_pos, cfg.rope_theta)
+        # k rows carry the same per-token positions as q: in decode the
+        # caller's ``positions`` already equals the write offset, and under
+        # packed (segment-id) prefill each segment restarts from 0 -- the
+        # offset-derived arange the cache path used before is only correct
+        # for single-segment rows
+        k = rope(k, positions, cfg.rope_theta)
     elif cfg.pos == "rope":
         q = rope(q, positions, cfg.rope_theta)
 
     new_cache = None
     ctx = None
-    if cache is not None:
+    if cache is not None and page_table is not None:
+        # paged decode (s == 1 only: prefill fills dense buffers that the
+        # engine pages in afterwards)
+        pos_vec = jnp.broadcast_to(
+            jnp.asarray(cache_offset, jnp.int32).reshape(-1), (b,))
+        ctx, kf, vf, new_cache = _paged_decode(
+            q, k, v, cache, page_table, pos_vec, cfg, policy=policy,
+            rules=rules, kv_source=kv_source, out_dtype=x.dtype)
+        if ctx is None:
+            k, v = kf, vf
+    elif cache is not None:
         # decode / incremental: write rows at cache_offset (scalar, or (B,)
         # per-slot offsets under continuous batching), attend over buffer
         if "k_scale" in cache:

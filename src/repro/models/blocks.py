@@ -41,7 +41,7 @@ def block_apply(params, h: jnp.ndarray, cfg, *,
                 positions=None, mask=None,
                 cache=None, cache_offset=None,
                 ssm_state=None, decode: bool = False,
-                layer=None):
+                layer=None, page_table=None):
     """Returns (h, new_cache, new_ssm_state, aux, z_loss).
 
     ``layer`` is this block's depth index -- a traced scalar inside the layer
@@ -69,6 +69,7 @@ def block_apply(params, h: jnp.ndarray, cfg, *,
     y, new_cache = attn_apply(params["attn"], x, cfg, policy=policy,
                               rules=rules, positions=positions, mask=mask,
                               cache=cache, cache_offset=cache_offset,
+                              page_table=page_table,
                               layer=layer, n_layers=nl)
     h = h + y
     h = constrain(h, rules, "batch", "seq", None)

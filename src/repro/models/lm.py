@@ -158,10 +158,12 @@ def chunked_ce(params, h: jnp.ndarray, labels: jnp.ndarray,
 
 def _scan_blocks(params, h, cfg, *, policy, rules, positions, mask,
                  caches=None, cache_offset=None, ssm_states=None,
-                 decode=False):
+                 decode=False, page_table=None):
     """Homogeneous layer scan.  caches/ssm_states are stacked (L, ...).
     The scanned xs carry the depth index so depth-indexed policy rules can
-    select per-layer quantization inside the (layer-invariant) trace."""
+    select per-layer quantization inside the (layer-invariant) trace.
+    ``page_table`` (paged decode) is one table for every layer -- captured
+    by the body closure, not scanned."""
 
     def body(carry, xs):
         hh, aux, z = carry
@@ -169,7 +171,7 @@ def _scan_blocks(params, h, cfg, *, policy, rules, positions, mask,
         hh, ncache, nsst, a, zz = block_apply(
             bp, hh, cfg, policy=policy, rules=rules, positions=positions,
             mask=mask, cache=cache, cache_offset=cache_offset,
-            ssm_state=sst, decode=decode, layer=li)
+            ssm_state=sst, decode=decode, layer=li, page_table=page_table)
         return (hh, aux + a, z + zz), (ncache, nsst)
 
     if cfg.remat and not decode:
@@ -250,6 +252,8 @@ def _hybrid_blocks(params, h, cfg, *, policy, rules, positions, mask,
 
 def run_stack(params, h, cfg, **kw):
     if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        assert kw.pop("page_table", None) is None, \
+            "paged KV is dense/moe-family only"
         return _hybrid_blocks(params, h, cfg, **kw)
     kw.pop("emb0", None)
     return _scan_blocks(params, h, cfg, **kw)
@@ -341,20 +345,34 @@ def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype,
 
 def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
                policy=None, rules=None, max_seq: Optional[int] = None,
-               last_pos=None):
+               last_pos=None, segments=None):
     """Process the full prompt; returns (last_logits (B,V), caches, ssm_states).
     Cache buffers sized to max_seq (defaults to prompt length).
 
     ``last_pos`` selects which position's logits are returned: None (default)
     takes the final row; a scalar or per-row (B,) index supports right-padded
     prompts (the serving engine pads prompts to bucketed lengths -- causal
-    masking makes the pad tail invisible to positions <= last_pos).  Indices
-    are into the full hidden sequence (VLM callers account for patch rows)."""
+    masking makes the pad tail invisible to positions <= last_pos); an
+    (M, 2) array of ``(row, col)`` pairs gathers one hidden vector per packed
+    prompt (returns (M, V) logits, M independent of B).  Indices are into the
+    full hidden sequence (VLM callers account for patch rows).
+
+    ``segments`` (B, S) int32 packs multiple prompts into one row: equal ids
+    mark one prompt's span, -1 marks padding.  Positions restart at each
+    segment start and the attention mask is ``same-segment AND causal``, so
+    every packed prompt computes exactly what it would alone (pad/binary
+    neighbours contribute exact zeros through the softmax) -- the chunked-
+    prefill idiom (MaxText ``prefill_concat`` segment-id masks).  Decoder-
+    only attention families; requires ``segments`` spans to be contiguous."""
     policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
     params = cast_params(params, dtype)
     tokens = batch["tokens"]
     b = tokens.shape[0]
+    if segments is not None and (cfg.family not in ("dense", "moe")
+                                 or (cfg.family == "vlm")):
+        raise NotImplementedError(
+            "packed (segment-id) prefill is attention-family only")
     if cfg.family == "vlm" and "patches" in batch:
         patches = batch["patches"].astype(dtype)
         patches = policy.linear(LinearCtx("patch_proj"), patches,
@@ -370,11 +388,25 @@ def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
         mask_full = {"kind": "prefix", "prefix": p}
     else:
         s = tokens.shape[1]
-        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        max_seq = max_seq or s
+        if segments is not None:
+            seg = jnp.asarray(segments, jnp.int32)
+            t = jnp.arange(s)
+            is_start = jnp.concatenate(
+                [jnp.ones((b, 1), bool), seg[:, 1:] != seg[:, :-1]], axis=1)
+            starts = jax.lax.cummax(
+                jnp.where(is_start, t[None, :], 0), axis=1)
+            positions = t[None, :] - starts          # restart per segment
+            segk = jnp.pad(seg, ((0, 0), (0, max_seq - s)),
+                           constant_values=-1)
+            mask_full = ((seg[:, :, None] == segk[:, None, :])
+                         & (t[:, None] >= jnp.arange(max_seq)[None, :])[None]
+                         & (seg >= 0)[:, :, None])   # (B, S, max_seq)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+            mask_full = {"kind": "causal"}
         h = embed_tokens(params, tokens, cfg, positions=positions, dtype=dtype,
                          policy=policy)
-        max_seq = max_seq or s
-        mask_full = {"kind": "causal"}
     h = constrain(h, rules, "batch", "seq", None)
 
     caches, ssm_states = init_caches(cfg, b, max_seq, dtype,
@@ -393,6 +425,8 @@ def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
         lp = jnp.asarray(last_pos, jnp.int32)
         if lp.ndim == 0:
             hc = jax.lax.dynamic_slice_in_dim(h, lp, 1, axis=1)
+        elif lp.ndim == 2:                       # (M, 2) packed (row, col)
+            hc = h[lp[:, 0], lp[:, 1]][:, None, :]
         else:                                    # (B,) per-row last indices
             hc = h[jnp.arange(b)[:, None], lp[:, None], :]
     logits = logits_chunk(params, hc, cfg, policy)[:, 0, :]
@@ -400,11 +434,15 @@ def lm_prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
 
 
 def lm_decode(params, caches, ssm_states, token: jnp.ndarray,
-              pos: jnp.ndarray, cfg: ArchConfig, *, policy=None, rules=None):
+              pos: jnp.ndarray, cfg: ArchConfig, *, policy=None, rules=None,
+              page_table=None):
     """One-token decode.  token: (B,1) int32; pos: the number of tokens
     already in the cache -- a scalar int32 (uniform batch, the legacy path)
     or a (B,) vector of per-slot positions (continuous batching: each slot
     writes its cache row and masks its history independently).
+    ``page_table`` (B, max_pages) switches the cache interpretation to paged
+    pools (L, n_pages, page_size, K, hd) shared across slots (repro.infer.
+    pages); the logical row space is then ``max_pages * page_size`` long.
     Returns (logits (B,V), caches, ssm_states)."""
     policy = as_policy(policy)
     dtype = jnp.dtype(cfg.dtype)
@@ -420,17 +458,20 @@ def lm_decode(params, caches, ssm_states, token: jnp.ndarray,
 
     mask = None
     if cfg.family != "ssm":
-        max_seq = (jax.tree_util.tree_leaves(caches)[0].shape
-                   [2])                                     # (L,B,S,K,hd)
-        if pos.ndim == 1:                                   # (B, 1, max_seq)
-            mask = (jnp.arange(max_seq)[None, None, :]
+        leaf = jax.tree_util.tree_leaves(caches)[0]
+        if page_table is not None:             # (L, P, page, K, hd) pools
+            kv_len = page_table.shape[1] * leaf.shape[2]
+        else:
+            kv_len = leaf.shape[2]             # (L, B, S, K, hd)
+        if pos.ndim == 1:                                   # (B, 1, kv_len)
+            mask = (jnp.arange(kv_len)[None, None, :]
                     <= pos[:, None, None])
         else:
-            mask = (jnp.arange(max_seq) <= pos)[None, :]    # (1, max_seq)
+            mask = (jnp.arange(kv_len) <= pos)[None, :]     # (1, kv_len)
     h, caches, ssm_states, _, _ = run_stack(
         params, h, cfg, policy=policy, rules=rules, positions=positions,
         mask=mask, caches=caches, cache_offset=pos, ssm_states=ssm_states,
-        decode=True, emb0=h)
+        decode=True, emb0=h, page_table=page_table)
     h = apply_norm(h, params["final_norm"], cfg.norm)
     logits = logits_chunk(params, h, cfg, policy)[:, 0, :]
     return logits, caches, ssm_states

@@ -47,17 +47,20 @@ def build_model(cfg: ArchConfig) -> Model:
                                   rules=rules, rng=rng)
 
         def prefill(params, batch, *, recipe=None, policy=None, rules=None,
-                    max_seq=None, last_pos=None):
-            if last_pos is not None:
+                    max_seq=None, last_pos=None, segments=None):
+            if last_pos is not None or segments is not None:
                 raise NotImplementedError(
-                    "last_pos (bucketed-prompt prefill) is decoder-only")
+                    "last_pos / segments (bucketed-prompt prefill) "
+                    "is decoder-only")
             logits, cache = ed.encdec_prefill(params, batch, cfg,
                                               policy=_pick(policy, recipe),
                                               rules=rules, max_seq=max_seq)
             return logits, cache
 
         def decode(params, state, token, pos, *, recipe=None, policy=None,
-                   rules=None):
+                   rules=None, page_table=None):
+            if page_table is not None:
+                raise NotImplementedError("paged KV cache is decoder-only")
             return ed.encdec_decode(params, state, token, pos, cfg,
                                     policy=_pick(policy, recipe), rules=rules)
 
@@ -79,18 +82,20 @@ def build_model(cfg: ArchConfig) -> Model:
                               rng=rng)
 
         def prefill(params, batch, *, recipe=None, policy=None, rules=None,
-                    max_seq=None, last_pos=None):
+                    max_seq=None, last_pos=None, segments=None):
             logits, caches, ssm = lm.lm_prefill(params, batch, cfg,
                                                 policy=_pick(policy, recipe),
                                                 rules=rules, max_seq=max_seq,
-                                                last_pos=last_pos)
+                                                last_pos=last_pos,
+                                                segments=segments)
             return logits, {"caches": caches, "ssm": ssm}
 
         def decode(params, state, token, pos, *, recipe=None, policy=None,
-                   rules=None):
+                   rules=None, page_table=None):
             logits, caches, ssm = lm.lm_decode(
                 params, state.get("caches"), state.get("ssm"), token, pos,
-                cfg, policy=_pick(policy, recipe), rules=rules)
+                cfg, policy=_pick(policy, recipe), rules=rules,
+                page_table=page_table)
             return logits, {"caches": caches, "ssm": ssm}
 
         def init_decode_state(batch: int, max_seq: int, enc_len: int = 0,

@@ -1,0 +1,351 @@
+"""Paged int8 KV cache + async continuous batching tests.
+
+Parity assertions run the gpt2-small smoke config with a float32 carrier
+(same reasoning as tests/test_infer.py): greedy decode through the paged
+engine must be *bit-identical* to the dense engine -- the page indirection
+relocates cache rows, it must never change a single stored byte.  The
+freed-page hygiene test is the sharp end of that claim: a request decoding
+into recycled pages (LIFO free list, garbage from the previous tenant still
+in the payload rows) must produce the same tokens as one decoding into a
+never-used pool."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.infer import (CapacityError, Engine, PagePool, Request,
+                         init_paged_caches, page_nbytes, pages_for)
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(dtype="float32"):
+    cfg = dataclasses.replace(get_smoke_config("gpt2-small"), dtype=dtype)
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def gpt2():
+    return _setup()
+
+
+def _tokens(eng, prompts, max_new=5):
+    ids = [eng.submit(Request(tokens=list(p), max_new_tokens=max_new))
+           for p in prompts]
+    by_id = {r.request_id: r.tokens for r in eng.run()}
+    return [by_id[i] for i in ids]
+
+
+PROMPTS = ([1, 2, 3], [7, 8, 9, 10, 11, 12, 13, 14, 15], [4, 5],
+           [20, 21, 22, 23, 24, 25])
+
+
+# ---------------------------------------------------------------------------
+# PagePool allocator
+# ---------------------------------------------------------------------------
+
+def test_page_pool_alloc_recycle_refcount():
+    pool = PagePool(n_pages=6, page_size=4, max_slots=2, max_pages_per_slot=4)
+    assert pool.free_pages == 5 and pool.live_pages == 0   # page 0 reserved
+    a = pool.alloc(3)
+    assert len(set(a)) == 3 and 0 not in a
+    assert pool.free_pages == 2 and pool.live_pages == 3
+    pool.assign(0, a)
+    assert pool.slot_pages(0) == a
+    assert list(pool.table[0]) == a + [0]                  # tail -> trash page
+
+    # LIFO: the page released last is handed out first
+    freed = pool.release_slot(0)
+    assert freed == a and pool.live_pages == 0
+    assert pool.alloc(1) == [a[-1]]
+    pool.release([a[-1]])
+
+    # prefix sharing: one more ref, no new pages
+    pids = pool.alloc(2)
+    pool.assign(0, pids)
+    shared = pool.share(pids)
+    pool.assign(1, shared)
+    assert pool.live_pages == 2 and pool.refcount[pids[0]] == 2
+    pool.release_slot(0)
+    assert pool.live_pages == 2                            # slot 1 still holds
+    pool.release_slot(1)
+    assert pool.live_pages == 0 and pool.free_pages == 5
+
+    # pinned pages survive release; trash page never enters the free list
+    pids = pool.alloc(1)
+    pool.pin(pids)
+    pool.release(pids)
+    assert pool.live_pages == 1 and pids[0] not in pool._free
+    with pytest.raises(CapacityError) as ei:
+        pool.alloc(99)
+    assert ei.value.pages_needed == 99
+    assert ei.value.pages_total == 5
+    assert ei.value.pages_free == pool.free_pages
+
+
+def test_pages_for_and_page_nbytes(gpt2):
+    cfg, _, _ = gpt2
+    assert [pages_for(n, 4) for n in (1, 4, 5, 8, 9)] == [1, 1, 2, 2, 3]
+    page = 4
+    fp = init_paged_caches(cfg, 3, page, jnp.float32)
+    per_page = cfg.n_layers * page * cfg.n_kv_heads * cfg.head_dim * 4
+    assert page_nbytes(fp) == 2 * per_page                 # k + v
+    from repro.core import parse_policy
+    q = init_paged_caches(cfg, 3, page, jnp.float32,
+                          kv_spec=parse_policy("kv_cache=a8t,*=fp").kv_spec())
+    assert q["k"].dtype == jnp.int8 and "k_scale" in q
+    assert page_nbytes(q) < page_nbytes(fp)
+
+
+# ---------------------------------------------------------------------------
+# Capacity accounting
+# ---------------------------------------------------------------------------
+
+def test_capacity_error_accounting(gpt2):
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=2, max_seq=16, paged=True,
+                 page_size=4, n_pages=4)
+    with pytest.raises(CapacityError) as ei:
+        eng.submit(Request(tokens=list(range(16)), max_new_tokens=1))
+    e = ei.value
+    assert "pages" in str(e)
+    assert (e.tokens, e.max_seq, e.page_size) == (16, 16, 4)
+    assert e.pages_needed == pages_for(17, 4)
+    assert (e.slots_total, e.slots_free) == (2, 2)
+
+    # fits in a slot but would exhaust the pool even running alone
+    with pytest.raises(CapacityError) as ei:
+        eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=20))
+    assert ei.value.pages_needed == 4 and ei.value.pages_total == 3
+
+    # dense rejection carries the accounting too (and stays a ValueError)
+    dense = Engine(model, params, max_slots=1, max_seq=10)
+    with pytest.raises(ValueError) as ei:
+        dense.submit(Request(tokens=list(range(10)), max_new_tokens=1))
+    assert isinstance(ei.value, CapacityError)
+    assert (ei.value.tokens, ei.value.max_seq) == (10, 10)
+
+
+def test_generate_truncation_names_paged_limits(gpt2):
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=16, paged=True,
+                 page_size=4)
+    with pytest.raises(ValueError, match="truncated") as ei:
+        eng.generate(np.arange(8)[None, :] % cfg.vocab_size, 12)
+    assert "pages" in str(ei.value) and "n_pages" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# Paged vs dense bit parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["*=w8c", "kv_cache=a8t,*=w8c"])
+def test_paged_matches_dense_greedy(gpt2, policy):
+    """Greedy tokens through the paged engine == dense engine, bit for bit
+    (fp KV and the int8 gather path; mixed prompt lengths exercise packed
+    prefill + ragged page counts)."""
+    cfg, model, params = gpt2
+    dense = Engine(model, params, policy, max_slots=4, max_seq=32)
+    paged = Engine(model, params, policy, max_slots=4, max_seq=32,
+                   paged=True, page_size=8)
+    ref = _tokens(dense, PROMPTS)
+    got = _tokens(paged, PROMPTS)
+    assert got == ref
+
+
+def test_paged_matches_dense_fused(gpt2, monkeypatch):
+    """Same bit-parity claim on the fused Pallas paged-decode path: the
+    dense kernel's tile is pinned to the page size so both engines compile
+    identical per-tile reductions."""
+    monkeypatch.setenv("REPRO_FUSED_DECODE", "1")
+    monkeypatch.setenv("REPRO_DECODE_BLOCK", "8")
+    cfg, model, params = gpt2
+    pol = "kv_cache=a8t,*=w8c"
+    dense = Engine(model, params, pol, max_slots=2, max_seq=32)
+    paged = Engine(model, params, pol, max_slots=2, max_seq=32,
+                   paged=True, page_size=8)
+    assert "paged-fused" in paged.path_summary()
+    prompts = ([1, 2, 3, 4, 5, 6, 7], [9, 10, 11])
+    assert _tokens(paged, prompts, 4) == _tokens(dense, prompts, 4)
+
+
+def test_freed_page_hygiene(gpt2):
+    """A request decoding into *recycled* pages (previous tenant's int8
+    garbage still in the payload/scale rows) produces tokens bit-identical
+    to the same request on a never-used pool."""
+    cfg, model, params = gpt2
+    pol = "kv_cache=a8t,*=w8c"
+    b_prompt = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3]
+
+    eng = Engine(model, params, pol, max_slots=2, max_seq=32, paged=True,
+                 page_size=8)
+    # tenant A dirties pages across the pool, finishes, pages recycle
+    [a_toks] = _tokens(eng, [[11, 12, 13, 14, 15, 16, 17, 18, 19]], 8)
+    assert eng.pool.live_pages == 0
+    [b_reused] = _tokens(eng, [b_prompt], 8)
+
+    fresh = Engine(model, params, pol, max_slots=2, max_seq=32, paged=True,
+                   page_size=8)
+    [b_fresh] = _tokens(fresh, [b_prompt], 8)
+    assert b_reused == b_fresh
+    assert len(a_toks) == 8
+
+
+def test_live_kv_bytes_scale_with_pages(gpt2):
+    """Paged decode memory scales with live tokens, not slots x max_seq."""
+    cfg, model, params = gpt2
+    pol = "kv_cache=a8t,*=w8c"
+    dense = Engine(model, params, pol, max_slots=4, max_seq=32)
+    paged = Engine(model, params, pol, max_slots=4, max_seq=32,
+                   paged=True, page_size=8)
+    assert paged.live_kv_bytes() == 0
+    _tokens(paged, PROMPTS)
+    peak = paged.scheduler.peak_live_bytes
+    assert 0 < peak < dense.kv_cache_nbytes()
+    assert paged.live_kv_bytes() == 0                      # all pages freed
+
+
+# ---------------------------------------------------------------------------
+# Admission: HOL blocking, starvation bound, preemption
+# ---------------------------------------------------------------------------
+
+def test_hol_admission_and_starvation_bound(gpt2):
+    """A queue-head request that does not fit must not block admissible
+    requests behind it -- and every request still completes (the skip
+    counter turns the head into a barrier before it can starve)."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=2, max_seq=32, paged=True,
+                 page_size=8, n_pages=9)                   # 8 allocatable
+    big = list(range(1, 21))                               # 20 toks, 3 pages
+    ids = [eng.submit(Request(tokens=big, max_new_tokens=8))]
+    for t in ([1, 2], [3, 4, 5], [6, 7], [8, 9, 10], [11, 12]):
+        ids.append(eng.submit(Request(tokens=list(t), max_new_tokens=6)))
+    out = eng.run()
+    assert sorted(r.request_id for r in out) == sorted(ids)
+    by_id = {r.request_id: r for r in out}
+    assert len(by_id[ids[0]].tokens) == 8
+    assert all(len(by_id[i].tokens) == 6 for i in ids[1:])
+    assert not eng._skips                                  # bound resets
+
+
+def test_preemption_liveness_and_parity(gpt2):
+    """Two requests whose combined page growth exceeds the pool: one is
+    preempted mid-decode (pages freed, request requeued with its generated
+    prefix) and both finish with the same tokens as solo runs."""
+    cfg, model, params = gpt2
+    mk = lambda: Engine(model, params, "*=w8c", max_slots=2, max_seq=32,
+                        paged=True, page_size=8, n_pages=6)  # 5 allocatable
+    reqs = [([5, 6, 7, 8, 9, 10, 11], 12), ([1, 2, 3], 14)]
+    solo = [_tokens(mk(), [p], n)[0] for p, n in reqs]
+
+    eng = mk()
+    ids = [eng.submit(Request(tokens=list(p), max_new_tokens=n))
+           for p, n in reqs]
+    by_id = {r.request_id: r for r in eng.run()}
+    assert [by_id[i].tokens for i in ids] == solo
+    assert eng.pool.live_pages == 0
+
+
+def test_prefix_sharing_refcounts_and_parity(gpt2):
+    """cache_prefix pins full prefix pages once; requests sharing the prefix
+    alias them (refcount, no copy) and still match the dense engine."""
+    cfg, model, params = gpt2
+    pol = "kv_cache=a8t,*=w8c"
+    prefix = [42, 17, 3, 99, 5, 21, 8, 13]                 # exactly one page
+    prompts = [prefix + [60, 61, 62], prefix + [70]]
+
+    paged = Engine(model, params, pol, max_slots=2, max_seq=32, paged=True,
+                   page_size=8)
+    assert paged.cache_prefix(prefix) == 1
+    pids = paged._prefixes[tuple(prefix)]
+    assert paged.pool.live_pages == 1
+    base = int(paged.pool.refcount[pids[0]])               # alloc ref + pin
+    assert base == 2
+
+    dense = Engine(model, params, pol, max_slots=2, max_seq=32)
+    assert _tokens(paged, prompts, 6) == _tokens(dense, prompts, 6)
+    # pinned prefix survives request teardown, ready for the next tenant
+    assert paged.pool.live_pages == 1
+    assert int(paged.pool.refcount[pids[0]]) == base
+
+
+# ---------------------------------------------------------------------------
+# Paged decode kernel vs reference
+# ---------------------------------------------------------------------------
+
+def test_paged_kernel_matches_paged_ref():
+    from repro.kernels.decode_attn import (decode_attention,
+                                           decode_attention_paged)
+    from repro.kernels.ref import (decode_attn_inputs, decode_attn_paged_ref,
+                                   paged_from_dense)
+    b, s, kh, g, hd, page = 3, 32, 2, 2, 32, 8
+    # pos < s: the engine never decodes a full slot (prompt <= max_seq-1 and
+    # decode stops at capacity); pos == s scatter-clamp semantics are pinned
+    # by test_decode_attn.test_pos_at_max_seq_clamps_scatter
+    lengths = [5, 17, 31]
+    (q, kq, ks, vq, vs, _, _, new_k, new_v, pos) = decode_attn_inputs(
+        b, s, kh, g, hd, lengths, seed=3)
+    kqp, ksp, vqp, vsp, table = paged_from_dense(kq, ks, vq, vs, lengths,
+                                                 page, seed=11)
+    ref_ctx, (rkq, rks, rvq, rvs) = decode_attn_paged_ref(
+        q, kqp, ksp, vqp, vsp, new_k, new_v, pos, table)
+    ctx, okq, oks, ovq, ovs = decode_attention_paged(
+        q, kqp, ksp, vqp, vsp, new_k, new_v, pos, table, interpret=True)
+    assert jnp.allclose(ctx, ref_ctx, atol=1e-5), float(
+        jnp.max(jnp.abs(ctx - ref_ctx)))
+    # the fused scatter writes the identical quantized rows, everywhere
+    for got, want in ((okq, rkq), (oks, rks), (ovq, rvq), (ovs, rvs)):
+        assert jnp.array_equal(got, want)
+    # page indirection only relocates rows: the paged kernel's context is
+    # BITWISE equal to the dense kernel on the same logical cache
+    dense_ctx, *_ = decode_attention(q, kq, ks, vq, vs, new_k, new_v, pos,
+                                     block_k=page, interpret=True)
+    assert jnp.array_equal(ctx, dense_ctx)
+
+
+# ---------------------------------------------------------------------------
+# Async scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_async_start_wait_stop(gpt2):
+    """Background-loop mode: submissions land while the loop runs, results
+    arrive via events, latency stats are finite -- and the tokens match a
+    synchronous dense run (greedy decode is arrival-invariant)."""
+    cfg, model, params = gpt2
+    pol = "kv_cache=a8t,*=w8c"
+    dense = Engine(model, params, pol, max_slots=2, max_seq=32)
+    ref = _tokens(dense, PROMPTS[:3], 5)
+
+    paged = Engine(model, params, pol, max_slots=2, max_seq=32, paged=True,
+                   page_size=8)
+    sched = paged.scheduler
+    sched.start()
+    try:
+        ids = [paged.submit(Request(tokens=list(p), max_new_tokens=5))
+               for p in PROMPTS[:3]]
+        sched.wait(ids, timeout=300)
+    finally:
+        sched.stop()
+    out = [sched.result(i) for i in ids]
+    assert [r.tokens for r in out] == ref
+    assert all(r.text is None for r in out)                # no detokenizer
+    stats = sched.latency_stats()
+    assert stats["n"] == 3
+    assert 0 < stats["p50_s"] <= stats["p99_s"] < float("inf")
+    assert sched.peak_live_bytes > 0
+
+
+def test_scheduler_detokenizer_emits_text(gpt2):
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=2, max_seq=16, paged=True,
+                 page_size=4,
+                 detokenizer=lambda toks: "|".join(map(str, toks)))
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4))
+    [r] = eng.run()
+    assert r.text == "|".join(map(str, r.tokens))
