@@ -223,6 +223,18 @@ def bench_serve_trace() -> None:
         f"parity={r['token_parity_vs_dense']};path={r['path']}")
 
 
+def bench_serve_aot() -> None:
+    """AOT-compiled (and, with multiple devices, mesh-sharded) serving:
+    warmup compile cost + trace-free serving throughput (emits
+    BENCH_serve.json)."""
+    from benchmarks.serve_throughput import bench_aot_smoke
+    r = bench_aot_smoke()
+    row("serve_aot::kv_cache=a8t,*=w8c", 0.0,
+        f"mesh={r['mesh']};n_exec={r['n_executables']};"
+        f"compile_s={r['total_compile_s']:.2f};"
+        f"decode_tok_s={r['decode_tok_s']:.1f};path={r['path']}")
+
+
 def bench_decode_attention() -> None:
     """Decode-attention hot path: fp cache vs int8 dequant-on-read vs the
     fused int8-KV kernel (per-step ms + analytic KV-bytes-read counter;
@@ -260,6 +272,7 @@ def main() -> None:
     bench_opt_update()
     bench_serve()
     bench_serve_trace()
+    bench_serve_aot()
     bench_decode_attention()
     table_paper_results()
     table_memory_and_linear_share()

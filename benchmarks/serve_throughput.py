@@ -14,7 +14,8 @@ Rows (CSV, matching benchmarks/run.py):
 
 Usage:
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
-        [--decode-smoke] [--trace] [--trace-smoke] [--json] [--sweep]
+        [--decode-smoke] [--aot-smoke] [--trace] [--trace-smoke] [--json]
+        [--sweep]
 
 ``--smoke`` runs one tiny engine pass and asserts sane output (the CI
 serve-smoke gate).  ``--decode-smoke`` is the decode-attention CI gate: it
@@ -26,9 +27,12 @@ latency, tokens/s, and peak live-KV bytes vs the dense engine's resident
 cache.  ``--trace-smoke`` is its CI gate: same trace, asserting per-request
 token parity with a dense engine, finite p99, and peak paged live-token
 bytes under half the dense resident bytes; writes ``BENCH_serve_trace.json``.
-``--sweep`` times the fused kernel across kv tile lengths (the
-``REPRO_DECODE_BLOCK`` autotune hook, passed explicitly so each size
-retraces).
+``--aot-smoke`` is the AOT/sharded serving gate: construct an
+ahead-of-time-compiled engine (on a dp x tp2 mesh when the host exposes
+multiple devices), then assert zero traces or compiles happen while
+serving; writes ``BENCH_serve.json``.  ``--sweep`` times the fused kernel
+across kv tile lengths (the ``REPRO_DECODE_BLOCK`` autotune hook, passed
+explicitly so each size retraces).
 """
 from __future__ import annotations
 
@@ -280,6 +284,77 @@ def bench_serve_trace(*, n_requests: int = 12, mean_gap_s: float = 0.02,
     return result
 
 
+def bench_aot_smoke(*, slots: int = 4, max_seq: int = 64,
+                    prompt_len: int = 12, new_tokens: int = 8,
+                    policy: str = "kv_cache=a8t,*=w8c",
+                    out_path: str = "BENCH_serve.json") -> dict:
+    """AOT serving gate: construct the engine ahead-of-time compiled (on a
+    dp x tp2 mesh when the host exposes >= 2 devices, else single-device),
+    assert the warmup report accounts for every executable, serve a batch,
+    and assert *nothing* compiled or retraced during serving -- then write
+    ``out_path`` with the compile/report/throughput numbers.
+
+    CI runs this under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    so the mesh branch is the one the gate actually exercises."""
+    from repro.models import build_model
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    mesh = None
+    n_dev = jax.device_count()
+    if n_dev >= 2:
+        from jax.sharding import Mesh
+        tp = 2
+        dp = n_dev // tp
+        mesh = Mesh(np.asarray(jax.devices()[:dp * tp]).reshape(dp, tp),
+                    ("data", "model"))
+    t0 = time.perf_counter()
+    eng = Engine(model, params, policy, max_slots=slots, max_seq=max_seq,
+                 prefill_bucket=16, mesh=mesh, aot=True)
+    construct_s = time.perf_counter() - t0
+
+    rep = eng.warmup_report()
+    names = [e["name"] for e in rep["executables"]]
+    assert "decode" in names and rep["n_executables"] >= 2, rep
+    traces = dict(eng._trace_counts)
+    n_exec = rep["n_executables"]
+
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab_size, (slots, prompt_len))
+    t1 = time.perf_counter()
+    out = eng.generate(prompts, new_tokens)
+    serve_s = time.perf_counter() - t1
+    assert out.shape == (slots, new_tokens), out.shape
+
+    # the gate: serving an AOT engine never traces or compiles
+    assert eng._trace_counts == traces, (traces, eng._trace_counts)
+    assert eng.warmup_report()["n_executables"] == n_exec, \
+        "serving compiled a new executable past warmup"
+
+    result = {
+        "devices": n_dev,
+        "mesh": (f"dp{mesh.devices.shape[0]}xtp{mesh.devices.shape[1]}"
+                 if mesh is not None else None),
+        "policy": policy,
+        "n_executables": rep["n_executables"],
+        "executables": names,
+        "total_compile_s": rep["total_compile_s"],
+        "total_code_bytes": rep["total_code_bytes"],
+        "construct_s": construct_s,
+        "serve_s": serve_s,
+        "decode_tok_s": slots * new_tokens / max(serve_s, 1e-9),
+        "path": eng.path_summary(),
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"serve aot smoke ok: {result['n_executables']} executables "
+          f"compiled in {result['total_compile_s']:.2f}s "
+          f"(mesh={result['mesh']}), zero traces/compiles while serving, "
+          f"path [{result['path']}] -> {out_path}")
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -293,6 +368,10 @@ def main() -> None:
                     help="trace gate (CI): token parity vs dense, finite "
                          "p99, live bytes < dense/2; writes "
                          "BENCH_serve_trace.json")
+    ap.add_argument("--aot-smoke", action="store_true",
+                    help="AOT/sharded serving gate (CI): warmup report "
+                         "complete, zero traces or compiles while serving; "
+                         "writes BENCH_serve.json")
     ap.add_argument("--json", action="store_true",
                     help="emit one JSON object instead of CSV rows")
     ap.add_argument("--sweep", action="store_true",
@@ -304,6 +383,14 @@ def main() -> None:
         import os
         os.environ.setdefault("REPRO_FUSED_DECODE", "1")
         decode_smoke()
+        return
+
+    if args.aot_smoke:
+        import os
+        os.environ.setdefault("REPRO_FUSED_DECODE", "1")
+        r = bench_aot_smoke()
+        if args.json:
+            print(json.dumps(r, indent=2))
         return
 
     if args.smoke:

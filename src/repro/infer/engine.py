@@ -58,31 +58,49 @@ Prompts are right-padded to bucketed lengths for prefill (bounded compile
 count); causal masking makes the pad tail invisible and ``last_pos`` indexes
 the real last-token logits.  Scope: decoder-only families (``dense``,
 ``moe``, ``ssm``, ``hybrid``; paged mode: ``dense``/``moe`` -- the families
-with a pure attention cache) on a single host; encoder-decoder and VLM
-serving stay on the legacy ``greedy_generate`` loop.
+with a pure attention cache); encoder-decoder and VLM serving stay on the
+legacy ``greedy_generate`` loop.
+
+**Multi-chip mode** (``mesh=``): weights FSDP-shard over the mesh's data
+axis (int8 ``QState`` payloads with their fp32 scale sidecars co-sharded)
+and the KV cache -- dense strips and paged pools alike -- tensor-parallels
+over the kv-head axis, with the fused decode kernels dispatched per shard
+through ``shard_map`` (kernels/decode_attn.py).  A mesh engine is AOT by
+default: construction pre-lowers and compiles the donated decode executable
+and one prefill executable per prompt bucket (``warmup``), so no trace or
+compile is left for serve time -- the MaxText offline-inference shape.
+Single-host engines keep the lazy jits unless ``aot=True``.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import os
-from collections import deque
+import time
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core.qconfig import Granularity
 from repro.core.qpolicy import as_policy
 from repro.infer.pages import (CapacityError, PagePool, init_paged_caches,
-                               page_nbytes, pages_for)
-from repro.infer.prepare import prepare_params
+                               page_nbytes, pages_for, place_paged_caches)
+from repro.infer.prepare import place_params, prepare_params
 from repro.infer.sampling import SamplingParams, sample
 from repro.infer.scheduler import Scheduler
 
 ENGINE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
 PAGED_FAMILIES = ("dense", "moe")
+
+# the per-engine page-in jit cache is bounded (LRU): keys are page-count +
+# pool-signature tuples, so a long-lived process cycling engine geometries
+# cannot grow it without bound
+_PAGEIN_CACHE_MAX = 8
 
 # A queued request skipped this many admission passes (each time because its
 # page need exceeded the free pool while smaller requests jumped ahead)
@@ -108,6 +126,16 @@ def _pinned_env(values: Dict[str, str]):
                 os.environ.pop(k, None)
             else:
                 os.environ[k] = v
+
+
+def _pad_rows(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    """Pad the leading (row/request) dim of a host-built prefill input up to
+    ``n`` with ``fill`` -- AOT executables take max_slots-row launches."""
+    if a.shape[0] >= n:
+        return a
+    out = np.full((n,) + a.shape[1:], fill, a.dtype)
+    out[:a.shape[0]] = a
+    return out
 
 
 @dataclasses.dataclass
@@ -152,6 +180,7 @@ class Engine:
                  prefill_bucket: int = 16,
                  paged: bool = False, page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
+                 mesh=None, aot: Optional[bool] = None,
                  detokenizer=None):
         cfg = model.cfg
         if cfg.family not in ENGINE_FAMILIES:
@@ -166,14 +195,33 @@ class Engine:
         self.max_seq = int(max_seq)
         self.prefill_bucket = int(prefill_bucket)
         self.detokenizer = detokenizer
+        # multi-chip serving: FSDP weights over "data", tensor-parallel KV
+        # heads over "model" (parallel/sharding.py serve_fsdp mode); AOT
+        # defaults on with a mesh -- sharded serving compiles every
+        # executable at construction instead of tracing lazily mid-serve
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.parallel.sharding import make_rules
+            self.rules = make_rules(mesh, "serve_fsdp", cfg=cfg)
+        else:
+            self.rules = None
+        self._aot = bool(aot) if aot is not None else mesh is not None
         self.params = (prepare_params(cfg, params, self.policy)
                        if prepare_weights else params)
+        if self.rules is not None:
+            # int8 QState payloads FSDP-shard by the raw weight's logical
+            # axes; fp32 scale/zero sidecars co-shard with their payloads
+            self.params = place_params(self.rules, self.params, model.axes)
         self._dtype = jnp.dtype(cfg.dtype)
         from repro.kernels.decode_attn import (default_block_k,
                                                effective_block_k,
-                                               fused_decode_enabled)
+                                               fused_decode_enabled,
+                                               spmd_head_shardable)
         self._kv_fused = (self.policy.decode_attn_backend()[0]
-                          == "int8_pallas" and fused_decode_enabled())
+                          == "int8_pallas" and fused_decode_enabled()
+                          and (self.rules is None or
+                               spmd_head_shardable(cfg.n_kv_heads,
+                                                   self.rules)))
         kv_spec = self.policy.kv_spec()
 
         self.paged = bool(paged)
@@ -226,8 +274,22 @@ class Engine:
             self._kv_block = effective_block_k(self.max_seq)
         self._kv_env = {"REPRO_FUSED_DECODE": "1" if self._kv_fused else "0",
                         "REPRO_DECODE_BLOCK": str(default_block_k())}
+        if self.rules is not None:
+            # decode state onto the mesh: payload AND sidecar cache buffers
+            # tensor-parallel over the kv-head axis, everything else (slot
+            # bookkeeping, SSM states) replicated
+            if self.paged:
+                self._state["caches"] = place_paged_caches(
+                    self.rules, self._state["caches"])
+            else:
+                self._state = jax.device_put(self._state,
+                                             self._state_shardings())
 
         self._queue: deque = deque()
+        # incremented inside the traced step closures: each jax trace of
+        # prefill/decode bumps its counter, so tests can assert AOT warmup
+        # leaves nothing to retrace at serve time
+        self._trace_counts: Dict[str, int] = {"prefill": 0, "decode": 0}
         self._free: List[int] = list(range(self.max_slots))
         self._running: Dict[int, _Running] = {}
         self._done: List[Response] = []
@@ -240,7 +302,8 @@ class Engine:
         self._carry: Dict[int, Tuple[List[int], List[int]]] = {}
         #   preempted request_id -> (original prompt, tokens generated so far)
         self._prefixes: Dict[tuple, List[int]] = {}   # cached prefix -> pids
-        self._pagein_jits: Dict[Tuple[int, int], jax.stages.Wrapped] = {}
+        self._pagein_jits: "OrderedDict[tuple, jax.stages.Wrapped]" = \
+            OrderedDict()
         self.scheduler = Scheduler(self)
 
         if self.paged:
@@ -248,45 +311,81 @@ class Engine:
                 # max_seq (not the row width) sizes the prefill KV buffers so
                 # the attention reduction length matches the dense engine's
                 # bit for bit; pages are sliced out of the buffer afterwards
+                self._trace_counts["prefill"] += 1
                 with _pinned_env(self._kv_env):
                     return self.model.prefill(params, {"tokens": toks},
                                               policy=self.policy,
+                                              rules=self.rules,
                                               max_seq=self.max_seq,
                                               last_pos=last, segments=segs)
 
             def _decode(params, state, tok, pos, pt, key):
+                self._trace_counts["decode"] += 1
                 with _pinned_env(self._kv_env):
                     logits, state = self.model.decode(params, state, tok,
                                                       pos, policy=self.policy,
+                                                      rules=self.rules,
                                                       page_table=pt)
                 return sample(logits, self.sampling, key), state
         else:
             def _prefill(params, toks, last_pos):
+                self._trace_counts["prefill"] += 1
                 with _pinned_env(self._kv_env):
                     return self.model.prefill(params, {"tokens": toks},
                                               policy=self.policy,
+                                              rules=self.rules,
                                               max_seq=self.max_seq,
                                               last_pos=last_pos)
 
             def _decode(params, state, tok, pos, key):
+                self._trace_counts["decode"] += 1
                 with _pinned_env(self._kv_env):
                     logits, state = self.model.decode(params, state, tok,
-                                                      pos, policy=self.policy)
+                                                      pos, policy=self.policy,
+                                                      rules=self.rules)
                 return sample(logits, self.sampling, key), state
 
-        def _scatter(state, new, slots):
-            return jax.tree_util.tree_map(
-                lambda buf, n: buf.at[:, slots].set(n.astype(buf.dtype)),
-                state, new)
+        def _scatter(state, new, src, written):
+            # fixed-shape slot scatter: ``src[slot]`` is the prefill row to
+            # copy into ``slot`` and ``written`` masks the slots admitted
+            # this pass.  One executable regardless of group size (the old
+            # ``buf.at[:, slots].set`` retraced per admission-group size).
+            def upd(buf, n):
+                rows = jnp.take(n, src, axis=1).astype(buf.dtype)
+                m = written.reshape((1, -1) + (1,) * (buf.ndim - 2))
+                return jnp.where(m, rows, buf)
+            return jax.tree_util.tree_map(upd, state, new)
 
         # donate the decode state: it is replaced by the return value every
         # step, and without donation XLA must defensively copy the buffers
         # the fused kernel aliases in place (input_output_aliases on the
         # int8 KV caches) -- a whole-cache copy per step that would erase
-        # the one-read-one-row-write schedule
-        self._prefill_jit = jax.jit(_prefill)
-        self._decode_jit = jax.jit(_decode, donate_argnums=(1,))
-        self._scatter_jit = jax.jit(_scatter, donate_argnums=(0,))
+        # the one-read-one-row-write schedule.  Under sharding rules the
+        # output shardings are pinned to the construction-time placement so
+        # the AOT decode executable's input layouts hold step to step.
+        dec_kw, pre_kw, sc_kw = {}, {}, {}
+        if self.rules is not None:
+            repl = self.rules.replicated()
+            st_sh = self._state_shardings()
+            dec_kw["out_shardings"] = (repl, st_sh)
+            # prefill state buffers are dense (B, max_seq) strips in both
+            # modes (pages are sliced out afterwards): kv-head sharded
+            # caches, replicated logits/ssm -- a pytree prefix
+            pre_kw["out_shardings"] = (repl, {"caches": self._kv_sharding(),
+                                              "ssm": repl})
+            sc_kw["out_shardings"] = st_sh
+        self._prefill_jit = jax.jit(_prefill, **pre_kw)
+        self._decode_jit = jax.jit(_decode, donate_argnums=(1,), **dec_kw)
+        self._scatter_jit = jax.jit(_scatter, donate_argnums=(0,), **sc_kw)
+
+        # AOT executables (warmup() fills these): decode + one prefill per
+        # (bucket, packed) shape
+        self._decode_exec = None
+        self._prefill_exec: Dict[Tuple[int, bool], object] = {}
+        self._compiles: List[Dict[str, object]] = []
+        self._warmed = False
+        if self._aot:
+            self.warmup()
 
     # -- public API --------------------------------------------------------
 
@@ -405,8 +504,7 @@ class Engine:
         # trace keeps its rows bit-identical to the rows a request prefilling
         # this prompt itself would write (same attend path, fused or not)
         last = np.asarray([[0, plen - 1]], np.int32)
-        _, new_state = self._prefill_jit(self.params, jnp.asarray(toksa),
-                                         jnp.asarray(last), None)
+        _, new_state = self._prefill_call(toksa, last)
         pids = self.pool.alloc(n_pg)
         self.pool.pin(pids)
         self._page_in(new_state["caches"], 0, 0, pids)
@@ -485,24 +583,187 @@ class Engine:
             kv = f"int8-fused(b{self._kv_block})"
         else:
             kv = {"dequant": "int8-dequant", "fp": "fp", "none": "none"}[mode]
-        return (f"weights={'prepared-int8' if prepared else 'raw'} kv={kv}")
+        s = f"weights={'prepared-int8' if prepared else 'raw'} kv={kv}"
+        if self.rules is not None:
+            s += f" mesh=dp{self.rules.dp_size}xtp{self.rules.tp_size}"
+        if self._warmed:
+            rep = self.warmup_report()
+            s += (f" aot={rep['n_executables']}exec"
+                  f"/{rep['total_compile_s']:.1f}s"
+                  f"/{int(rep['total_code_bytes']) // 1024}KiB")
+        return s
 
     def lowered_decode_hlo(self) -> str:
         """Compiled HLO text of the donated decode step -- the exact module
         ``_step`` executes (same jit, same donation, same pinned env
         snapshot), so ``repro.lint`` decode contracts analyze what serving
-        runs, not a reconstruction."""
-        tok = jnp.zeros((self.max_slots, 1), jnp.int32)
-        pos = jnp.zeros((self.max_slots,), jnp.int32)
-        key = jax.random.PRNGKey(0)
+        runs, not a reconstruction.  A warmed engine returns its AOT
+        executable's text (the partitioned SPMD module under a mesh)."""
+        if self._decode_exec is not None:
+            return self._decode_exec.as_text()
+        tok = self._dev(jnp.zeros((self.max_slots, 1), jnp.int32))
+        pos = self._dev(jnp.zeros((self.max_slots,), jnp.int32))
+        key = self._dev(jax.random.PRNGKey(0))
         if self.paged:
-            pt = jnp.zeros((self.max_slots, self.pool.max_pages_per_slot),
-                           jnp.int32)
+            pt = self._dev(jnp.zeros(
+                (self.max_slots, self.pool.max_pages_per_slot), jnp.int32))
             return (self._decode_jit.lower(self.params, self._state, tok,
                                            pos, pt, key)
                     .compile().as_text())
         return (self._decode_jit.lower(self.params, self._state, tok, pos,
                                        key).compile().as_text())
+
+    # -- sharding / AOT machinery ------------------------------------------
+
+    def _kv_sharding(self) -> NamedSharding:
+        """One NamedSharding for any rank-5 cache leaf: dense strips
+        ``(L, B, S, K, hd)``, their ``(.., K, 1)`` scale sidecars, and paged
+        pools ``(L, P, page, K, hd)`` all carry the kv-head axis at dim 3 --
+        the only sharded cache dim at serve time (``make_rules(cfg=...)``
+        drops the mapping when the head count does not divide the mesh, so
+        ``part`` degrades to fully replicated exactly when the kernels fall
+        back to the gather path)."""
+        ax = self.rules.axis_map.get("kv") or ()
+        part = ax[0] if len(ax) == 1 else None
+        return NamedSharding(self.rules.mesh, P(None, None, None, part, None))
+
+    def _state_shardings(self):
+        """Sharding tree matching ``self._state``: kv-head-sharded cache
+        buffers (payloads and sidecars co-sharded), replicated SSM state."""
+        repl = self.rules.replicated()
+        kv = self._kv_sharding()
+        out = {}
+        for k, v in self._state.items():
+            sh = kv if k == "caches" else repl
+            out[k] = jax.tree_util.tree_map(lambda x, _sh=sh: _sh, v)
+        return out
+
+    def _dev(self, x):
+        """Pin small host-built step inputs (tokens, positions, rng keys,
+        page tables) to a replicated mesh placement so the AOT executables
+        see identical input shardings call after call; identity without a
+        mesh."""
+        if self.rules is None or x is None:
+            return x
+        return jax.device_put(x, self.rules.replicated())
+
+    def _prefill_buckets(self) -> List[Tuple[int, bool]]:
+        """Every (row_width, packed) prefill shape admission can launch:
+        the doubling prompt buckets clamped to ``max_seq`` (page-rounded in
+        paged mode), with a packed (segment-masked) variant when row packing
+        is enabled."""
+        lbs: List[int] = []
+        b = self.prefill_bucket
+        while True:
+            lb = min(b, self.max_seq)
+            if lb not in lbs:
+                lbs.append(lb)
+            if lb >= self.max_seq:
+                break
+            b *= 2
+        if not self.paged:
+            return [(lb, False) for lb in lbs]
+        out: List[Tuple[int, bool]] = []
+        for lb in lbs:
+            rl = self._row_len(lb)
+            for packed in ((False, True) if self._pack_ok else (False,)):
+                if (rl, packed) not in out:
+                    out.append((rl, packed))
+        return out
+
+    def _aot_compile(self, name: str, jitfn, *args):
+        """Lower + compile one executable, recording compile seconds and
+        generated code bytes for :meth:`warmup_report`."""
+        t0 = time.perf_counter()
+        comp = jitfn.lower(*args).compile()
+        dt = time.perf_counter() - t0
+        size = 0
+        try:
+            mem = comp.memory_analysis()
+            size = int(getattr(mem, "generated_code_size_in_bytes", 0) or 0)
+        except Exception:
+            pass
+        self._compiles.append(
+            {"name": name, "compile_s": dt, "code_bytes": size})
+        return comp
+
+    def _compile_prefill(self, lb: int, packed: bool):
+        n = self.max_slots
+        toks = self._dev(jnp.zeros((n, lb), jnp.int32))
+        if self.paged:
+            segs = self._dev(jnp.full((n, lb), -1, jnp.int32)) \
+                if packed else None
+            args = (toks, self._dev(jnp.zeros((n, 2), jnp.int32)), segs)
+        else:
+            args = (toks, self._dev(jnp.zeros((n,), jnp.int32)))
+        ex = self._aot_compile(
+            f"prefill[{lb}{',packed' if packed else ''}]",
+            self._prefill_jit, self.params, *args)
+        self._prefill_exec[(lb, packed)] = ex
+        return ex
+
+    def warmup(self) -> Dict[str, object]:
+        """Pre-lower and AOT-compile every serving executable up front: the
+        donated decode step plus one prefill per (bucket, packed) shape --
+        no trace or compile is left for serve time.  Idempotent; runs at
+        construction when ``aot`` is on (default with a mesh).  Returns
+        :meth:`warmup_report`."""
+        if self._warmed:
+            return self.warmup_report()
+        tok = self._dev(jnp.zeros((self.max_slots, 1), jnp.int32))
+        pos = self._dev(jnp.zeros((self.max_slots,), jnp.int32))
+        key = self._dev(jax.random.PRNGKey(0))
+        if self.paged:
+            pt = self._dev(jnp.zeros(
+                (self.max_slots, self.pool.max_pages_per_slot), jnp.int32))
+            self._decode_exec = self._aot_compile(
+                "decode", self._decode_jit, self.params, self._state,
+                tok, pos, pt, key)
+        else:
+            self._decode_exec = self._aot_compile(
+                "decode", self._decode_jit, self.params, self._state,
+                tok, pos, key)
+        for lb, packed in self._prefill_buckets():
+            self._compile_prefill(lb, packed)
+        self._warmed = True
+        return self.warmup_report()
+
+    def warmup_report(self) -> Dict[str, object]:
+        """Compile-cost report over every AOT executable built so far:
+        count, total compile seconds, total generated-code bytes, and the
+        per-executable breakdown."""
+        return {"n_executables": len(self._compiles),
+                "total_compile_s": sum(c["compile_s"]
+                                       for c in self._compiles),
+                "total_code_bytes": sum(c["code_bytes"]
+                                        for c in self._compiles),
+                "executables": [dict(c) for c in self._compiles]}
+
+    def _prefill_call(self, toks: np.ndarray, last: np.ndarray, segs=None):
+        """Route one prefill launch through its bucket's AOT executable
+        (compiling on demand if warmup missed the shape) or the lazy jit.
+        Under AOT the row/request dims are padded to ``max_slots`` so each
+        bucket is exactly one executable -- pad rows are causally inert and
+        their logits / state rows are never consumed (every op in the
+        forward is row-independent, so real rows are bit-identical to an
+        unpadded launch)."""
+        lb = toks.shape[1]
+        packed = segs is not None
+        if self._aot:
+            toks = _pad_rows(toks, self.max_slots)
+            last = _pad_rows(last, self.max_slots)
+            if segs is not None:
+                segs = _pad_rows(segs, self.max_slots, fill=-1)
+        args = [self._dev(jnp.asarray(toks)), self._dev(jnp.asarray(last))]
+        if self.paged:
+            args.append(self._dev(jnp.asarray(segs))
+                        if segs is not None else None)
+        if not self._aot:
+            return self._prefill_jit(self.params, *args)
+        ex = self._prefill_exec.get((lb, packed))
+        if ex is None:
+            ex = self._compile_prefill(lb, packed)
+        return ex(self.params, *args)
 
     # -- scheduler internals -----------------------------------------------
 
@@ -599,10 +860,15 @@ class Engine:
         for i, r in enumerate(group):
             toks[i, :len(r.tokens)] = r.tokens
             last[i] = len(r.tokens) - 1
-        logits, new_state = self._prefill_jit(
-            self.params, jnp.asarray(toks), jnp.asarray(last))
+        logits, new_state = self._prefill_call(toks, last)
+        src = np.zeros((self.max_slots,), np.int32)
+        written = np.zeros((self.max_slots,), np.bool_)
+        for i, s in enumerate(slots):
+            src[s] = i
+            written[s] = True
         self._state = self._scatter_jit(self._state, new_state,
-                                        jnp.asarray(slots, jnp.int32))
+                                        self._dev(jnp.asarray(src)),
+                                        self._dev(jnp.asarray(written)))
         first = np.asarray(sample(logits, self.sampling, self._next_key()))
         for i, r in enumerate(group):
             st = _Running(req=r, slot=slots[i], order=self._order)
@@ -655,9 +921,8 @@ class Engine:
                 segs[ri, off:off + spans[i]] = i
                 last[i] = (ri, off + L - 1)
                 placement[i] = (ri, off)
-        logits, new_state = self._prefill_jit(
-            self.params, jnp.asarray(toks), jnp.asarray(last),
-            jnp.asarray(segs) if packed else None)
+        logits, new_state = self._prefill_call(
+            toks, last, segs if packed else None)
         first = np.asarray(sample(logits, self.sampling, self._next_key()))
         for i, r in enumerate(selected):
             ri, off = placement[i]
@@ -688,25 +953,46 @@ class Engine:
                  pids: List[int]) -> None:
         """Copy whole pages [col0, col0 + len(pids)*page) of prefill row
         ``row`` into physical pages ``pids`` of the pool (all layers, all
-        cache buffers).  Jitted per (col0, n_pages) with the row and page
-        ids traced; the pool buffers are donated so the copy is in-place."""
+        cache buffers).  The row, start column and page ids are all traced
+        (``col0`` via ``dynamic_slice_in_dim`` -- the old static-slice
+        version retraced per distinct packing offset), so the jit cache is
+        keyed on the full jaxpr-relevant signature: page count and size plus
+        the pool buffers' dtypes/shapes.  Bounded LRU
+        (``_PAGEIN_CACHE_MAX``); pool buffers are donated so the copy is
+        in-place."""
         npg = len(pids)
-        jkey = (col0, npg)
-        if jkey not in self._pagein_jits:
-            page = self.page_size
-
-            def f(pools, g, row_, pids_, _c0=col0, _n=npg):
+        page = self.page_size
+        jkey = (npg, page,
+                tuple(sorted((k, str(v.dtype), v.shape)
+                             for k, v in self._state["caches"].items())))
+        fn = self._pagein_jits.get(jkey)
+        if fn is None:
+            def f(pools, g, row_, c0_, pids_, _n=npg, _p=page):
                 def upd(pool, buf):
                     seg = jnp.take(buf, row_, axis=1)          # (L, lb, ...)
-                    seg = jax.lax.slice_in_dim(seg, _c0, _c0 + _n * page,
-                                               axis=1)
-                    seg = seg.reshape(seg.shape[0], _n, page, *seg.shape[2:])
+                    seg = jax.lax.dynamic_slice_in_dim(seg, c0_, _n * _p,
+                                                       axis=1)
+                    seg = seg.reshape(seg.shape[0], _n, _p, *seg.shape[2:])
                     return pool.at[:, pids_].set(seg.astype(pool.dtype))
                 return jax.tree_util.tree_map(upd, pools, g)
-            self._pagein_jits[jkey] = jax.jit(f, donate_argnums=(0,))
-        self._state["caches"] = self._pagein_jits[jkey](
+            kw = {}
+            if self.rules is not None:
+                # keep the pools' construction-time placement so the AOT
+                # decode executable's input shardings hold
+                kw["out_shardings"] = jax.tree_util.tree_map(
+                    lambda x, _sh=self._kv_sharding(): _sh,
+                    self._state["caches"])
+            fn = jax.jit(f, donate_argnums=(0,), **kw)
+            self._pagein_jits[jkey] = fn
+            while len(self._pagein_jits) > _PAGEIN_CACHE_MAX:
+                self._pagein_jits.popitem(last=False)
+        else:
+            self._pagein_jits.move_to_end(jkey)
+        self._state["caches"] = fn(
             self._state["caches"], prefill_caches,
-            jnp.asarray(row, jnp.int32), jnp.asarray(pids, jnp.int32))
+            self._dev(jnp.asarray(row, jnp.int32)),
+            self._dev(jnp.asarray(col0, jnp.int32)),
+            self._dev(jnp.asarray(pids, jnp.int32)))
 
     def _ensure_write_pages(self) -> None:
         """Before a decode step, make sure every running slot owns the page
@@ -765,20 +1051,23 @@ class Engine:
         self._queue.appendleft(cont)
 
     def _step(self) -> None:
+        step = self._decode_exec if self._decode_exec is not None \
+            else self._decode_jit
         if self.paged:
             self._ensure_write_pages()
             if not self._running:
                 return
-            tok = jnp.asarray(self._last_tok[:, None])
-            pos = jnp.asarray(self._pos)
-            nxt, self._state = self._decode_jit(
+            tok = self._dev(jnp.asarray(self._last_tok[:, None]))
+            pos = self._dev(jnp.asarray(self._pos))
+            nxt, self._state = step(
                 self.params, self._state, tok, pos,
-                self.pool.table_array(), self._next_key())
+                self._dev(self.pool.table_array()),
+                self._dev(self._next_key()))
         else:
-            tok = jnp.asarray(self._last_tok[:, None])
-            pos = jnp.asarray(self._pos)
-            nxt, self._state = self._decode_jit(self.params, self._state,
-                                                tok, pos, self._next_key())
+            tok = self._dev(jnp.asarray(self._last_tok[:, None]))
+            pos = self._dev(jnp.asarray(self._pos))
+            nxt, self._state = step(self.params, self._state, tok, pos,
+                                    self._dev(self._next_key()))
         nxt = np.asarray(nxt)
         for slot in list(self._running):
             self._pos[slot] += 1

@@ -191,6 +191,30 @@ def init_paged_caches(cfg, n_pages: int, page_size: int, dtype,
     }
 
 
+#: logical axes of one paged pool buffer ``(L, n_pages, page, K, hd)`` --
+#: pages and rows are never sharded (a page is the DMA unit of exactly one
+#: shard's kernel launch); the kv-head axis carries the tensor parallelism.
+PAGED_POOL_AXES = ("layers", None, None, "kv", None)
+
+
+def paged_cache_shardings(rules, caches: Dict[str, jnp.ndarray]
+                          ) -> Dict[str, jnp.ndarray]:
+    """NamedSharding per pool buffer: int8 payload pools tensor-parallel over
+    the kv-head axis, fp32 scale sidecars co-sharded with their payloads
+    (same axes tuple; the sidecar's trailing size-1 dim is replicated) --
+    each shard's paged decode kernel DMAs pages of its local head slice
+    only."""
+    return {k: rules.sharding_for(v.shape, PAGED_POOL_AXES)
+            for k, v in caches.items()}
+
+
+def place_paged_caches(rules, caches: Dict[str, jnp.ndarray]
+                       ) -> Dict[str, jnp.ndarray]:
+    """Put the page pools onto ``rules.mesh`` per
+    :func:`paged_cache_shardings`."""
+    return jax.device_put(caches, paged_cache_shardings(rules, caches))
+
+
 def page_nbytes(caches: Dict[str, jnp.ndarray]) -> int:
     """Bytes one *logical* page occupies across every buffer and layer --
     the unit ``Engine.live_kv_bytes`` scales by."""

@@ -123,6 +123,43 @@ def prepare_params(cfg, params: Dict[str, Any], policy) -> Dict[str, Any]:
     return out
 
 
+def prepared_param_shardings(rules, params: Dict[str, Any],
+                             axes_tree) -> Dict[str, Any]:
+    """NamedSharding tree for a (possibly prepared) parameter tree on
+    ``rules.mesh``.  A :class:`QState` leaf gets its payload sharded by the
+    raw weight's logical axes and the fp32 scale / zero sidecars *co-sharded*
+    with it: the sidecar keeps the payload's trailing (output-channel) dims,
+    and its size-1 reduced dims fail the divisibility check and drop to
+    replicated -- so every shard's payload slice arrives with exactly the
+    scale rows it dequantizes, no cross-chip sidecar traffic."""
+    from repro.parallel.sharding import Rules  # noqa: F401  (doc anchor)
+
+    def side(qshape, s, ax):
+        # sidecars from compute_scale_zero keep the payload's rank (keepdims
+        # reductions); anything else (scalar zero points) is replicated
+        if getattr(s, "ndim", -1) == len(qshape):
+            return rules.sharding_for(s.shape, ax)
+        return rules.replicated()
+
+    def one(leaf, ax):
+        if isinstance(leaf, QState):
+            return QState(rules.sharding_for(leaf.q.shape, ax),
+                          side(leaf.q.shape, leaf.scale, ax),
+                          side(leaf.q.shape, leaf.zero, ax))
+        return rules.sharding_for(leaf.shape, ax)
+
+    return jax.tree_util.tree_map(
+        one, params, axes_tree, is_leaf=lambda x: isinstance(x, QState))
+
+
+def place_params(rules, params: Dict[str, Any], axes_tree) -> Dict[str, Any]:
+    """Put a (possibly prepared) parameter tree onto ``rules.mesh`` with
+    :func:`prepared_param_shardings` -- FSDP/TP placement of payloads with
+    co-sharded sidecars."""
+    return jax.device_put(params,
+                          prepared_param_shardings(rules, params, axes_tree))
+
+
 def params_nbytes(params: Dict[str, Any]) -> int:
     """Resident bytes of a (possibly prepared) parameter tree."""
     total = 0

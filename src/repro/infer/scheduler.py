@@ -162,6 +162,11 @@ class Scheduler:
             return
         self._stop.clear()
         self._loop_error = None
+        if getattr(self.engine, "_aot", False):
+            # AOT engines compile at construction; warmup() is idempotent,
+            # so this only pays if construction was asked to defer -- either
+            # way no trace/compile can land inside the timed serve loop
+            self.engine.warmup()
         self._ensure_emit_thread()
 
         def loop():

@@ -50,6 +50,12 @@ from repro.kernels.pallas_compat import CompilerParams
 
 DEFAULT_BLOCK_K = 256
 
+#: fp32 VPU register tile is (8 sublanes, 128 lanes); a (G, hd) query tile
+#: with G < 8 occupies a ragged partial tile per grid cell.  The wrappers
+#: zero-pad the query-head dim up to this so every tile is lane-aligned --
+#: pad rows cost nothing real (softmax over zero scores) and are sliced off.
+Q_TILE_SUBLANES = 8
+
 _EPS = 1e-12
 
 
@@ -89,6 +95,27 @@ def fused_decode_enabled() -> bool:
 # but guard to 1.0 so no reciprocal/dequant on padding lanes can emit
 # NaN/Inf -- the canonical guard from the int8 matmul kernel family
 from repro.kernels.int8_matmul import scale_guard as _guard
+
+
+def _lane_align_q(q: jnp.ndarray):
+    """Pad the (G, hd) query tile up to :data:`Q_TILE_SUBLANES` rows when the
+    GQA group is small (``n_heads // n_kv_heads < 8``): every grid cell then
+    streams a full (8, lane) register tile instead of a ragged one.  Pad rows
+    are zero queries -- their scores are 0 everywhere, the online softmax
+    stays finite, and their context rows are sliced off by
+    :func:`_lane_trim_ctx`.  Real rows are bit-identical to the unpadded
+    launch (row-independent math).  Returns ``(q_padded, g_padded, g)``."""
+    b, kh, g, hd = q.shape
+    if g >= Q_TILE_SUBLANES:
+        return q, g, g
+    gp = Q_TILE_SUBLANES
+    q = jnp.concatenate(
+        [q, jnp.zeros((b, kh, gp - g, hd), q.dtype)], axis=2)
+    return q, gp, g
+
+
+def _lane_trim_ctx(ctx: jnp.ndarray, g_real: int) -> jnp.ndarray:
+    return ctx if ctx.shape[2] == g_real else ctx[:, :, :g_real]
 
 
 def _decode_attn_kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
@@ -176,6 +203,7 @@ def decode_attention(q: jnp.ndarray,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, kh, g, hd = q.shape
+    q, g, g_real = _lane_align_q(q)
     s = kq.shape[1]
     bk = effective_block_k(s, block_k)
     nblk = s // bk
@@ -219,7 +247,7 @@ def decode_attention(q: jnp.ndarray,
             pltpu.VMEM((g, hd), jnp.float32),     # accumulator
         ],
     )
-    return pl.pallas_call(
+    ctx, okq, oks, ovq, ovs = pl.pallas_call(
         functools.partial(_decode_attn_kernel, bk=bk, nblk=nblk, scale=scale,
                           qmin=qmin, qmax=qmax),
         grid_spec=grid_spec,
@@ -237,6 +265,7 @@ def decode_attention(q: jnp.ndarray,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos, q, kq, ks, vq, vs, new_k, new_v)
+    return _lane_trim_ctx(ctx, g_real), okq, oks, ovq, ovs
 
 
 def _paged_decode_attn_kernel(pos_ref, pt_ref, *refs, **kw):
@@ -280,6 +309,7 @@ def decode_attention_paged(q: jnp.ndarray,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, kh, g, hd = q.shape
+    q, g, g_real = _lane_align_q(q)
     npages, page = kq.shape[0], kq.shape[1]
     maxp = page_table.shape[1]
     scale = 1.0 / math.sqrt(hd)
@@ -341,7 +371,7 @@ def decode_attention_paged(q: jnp.ndarray,
             pltpu.VMEM((g, hd), jnp.float32),     # accumulator
         ],
     )
-    return pl.pallas_call(
+    ctx, okq, oks, ovq, ovs = pl.pallas_call(
         functools.partial(_paged_decode_attn_kernel, bk=page, nblk=maxp,
                           scale=scale, qmin=qmin, qmax=qmax),
         grid_spec=grid_spec,
@@ -359,6 +389,81 @@ def decode_attention_paged(q: jnp.ndarray,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos, page_table, q, kq, ks, vq, vs, new_k, new_v)
+    return _lane_trim_ctx(ctx, g_real), okq, oks, ovq, ovs
+
+
+# ---------------------------------------------------------------------------
+# SPMD dispatch: shard_map the decode kernels over the KV-head axis
+# ---------------------------------------------------------------------------
+
+def spmd_head_shardable(n_kv_heads: int, rules) -> bool:
+    """Can the fused decode kernels run per-shard over the kv-head axis of
+    ``rules.mesh``?  True when the rules map ``kv`` to exactly one mesh axis
+    whose size divides the head count -- each shard then launches the
+    unchanged Pallas kernel on its local ``K // tp`` head slice (the grid's
+    kv-head dim is embarrassingly parallel: no cross-head reduction
+    anywhere).  Otherwise callers fall back to the gather/reference path."""
+    if rules is None:
+        return False
+    ax = rules.axis_map.get("kv") or ()
+    if len(ax) != 1:
+        return False
+    size = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))[ax[0]]
+    return n_kv_heads % size == 0
+
+
+def decode_attention_spmd(q, kq, ks, vq, vs, new_k, new_v, pos, *,
+                          mesh, kv_axis: str = "model",
+                          qmin: int = -128, qmax: int = 127,
+                          block_k: Optional[int] = None,
+                          interpret: Optional[bool] = None):
+    """:func:`decode_attention` under SPMD: shard_map over the kv-head axis,
+    each shard running the Pallas kernel on its local head slice of the
+    cache (payloads AND scale sidecars arrive pre-sharded -- the per-shard
+    BlockSpec DMA never crosses chips).  Math is bitwise identical to the
+    single-device kernel: per-(slot, head) online softmax has no cross-shard
+    reduction.  ``pos`` is replicated (host-side slot bookkeeping)."""
+    from repro.parallel.compat import shard_map
+    from jax.sharding import PartitionSpec as P
+    kv4 = P(None, None, kv_axis, None)
+
+    def f(q_, kq_, ks_, vq_, vs_, nk_, nv_, pos_):
+        return decode_attention(q_, kq_, ks_, vq_, vs_, nk_, nv_, pos_,
+                                qmin=qmin, qmax=qmax, block_k=block_k,
+                                interpret=interpret)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(P(None, kv_axis, None, None), kv4, kv4, kv4, kv4,
+                  P(None, kv_axis, None), P(None, kv_axis, None), P()),
+        out_specs=(P(None, kv_axis, None, None), kv4, kv4, kv4, kv4),
+    )(q, kq, ks, vq, vs, new_k, new_v, pos)
+
+
+def decode_attention_paged_spmd(q, kq, ks, vq, vs, new_k, new_v, pos,
+                                page_table, *,
+                                mesh, kv_axis: str = "model",
+                                qmin: int = -128, qmax: int = 127,
+                                interpret: Optional[bool] = None):
+    """:func:`decode_attention_paged` under SPMD: the page pools shard over
+    their kv-head dim (``PAGED_POOL_AXES``), the page table and ``pos`` are
+    replicated scalar bookkeeping, and every shard DMAs pages of its local
+    head slice only."""
+    from repro.parallel.compat import shard_map
+    from jax.sharding import PartitionSpec as P
+    pool4 = P(None, None, kv_axis, None)
+
+    def f(q_, kq_, ks_, vq_, vs_, nk_, nv_, pos_, pt_):
+        return decode_attention_paged(q_, kq_, ks_, vq_, vs_, nk_, nv_,
+                                      pos_, pt_, qmin=qmin, qmax=qmax,
+                                      interpret=interpret)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(P(None, kv_axis, None, None), pool4, pool4, pool4, pool4,
+                  P(None, kv_axis, None), P(None, kv_axis, None), P(), P()),
+        out_specs=(P(None, kv_axis, None, None), pool4, pool4, pool4, pool4),
+    )(q, kq, ks, vq, vs, new_k, new_v, pos, page_table)
 
 
 def decode_kv_read_bytes(mode: str, batch: int, max_seq: int,

@@ -218,6 +218,96 @@ def _build_decode_paged(config: str):
     return hlo, specs, []
 
 
+def _sharded_decode_hlo(config: str) -> Tuple[str, Tuple[int, ...], int]:
+    """(compiled HLO text, per-shard dense cache shape, n_layers) for the
+    fused int8-KV decode step lowered under a dp4 x tp2 mesh.
+
+    The lint process usually sees one CPU device, so the mesh build runs in
+    a child interpreter with ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=8`` (the same forced host mesh the sharded-serve tests use); when
+    the current process already has >= 8 devices the build stays in-process.
+    """
+    config = _norm_config(config)
+
+    def build():
+        import dataclasses as _dc
+
+        import numpy as np
+        from jax.sharding import Mesh
+
+        from repro.configs import get_smoke_config
+        from repro.infer import Engine
+        from repro.models import build_model
+        cfg = _dc.replace(get_smoke_config(config), dtype="float32")
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(4, 2),
+                    ("data", "model"))
+        eng = Engine(model, params, "kv_cache=a8t,*=w8c",
+                     max_slots=2, max_seq=32, mesh=mesh, aot=False)
+        hlo = eng.lowered_decode_hlo()
+        return hlo, tuple(eng._state["caches"]["k"].shape), cfg.n_layers
+
+    if jax.device_count() >= 8:
+        return build()
+
+    import json
+    import subprocess
+    import sys
+
+    import repro
+    src_root = os.path.dirname(list(repro.__path__)[0])
+    prog = (
+        "import json, sys\n"
+        "import jax\n"
+        "from repro.lint.contracts import _sharded_decode_hlo\n"
+        f"hlo, shape, nl = _sharded_decode_hlo({config!r})\n"
+        "json.dump({'hlo': hlo, 'shape': shape, 'n_layers': nl},"
+        " sys.stdout)\n")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               REPRO_FUSED_DECODE="1",
+               PYTHONPATH=src_root + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if out.returncode != 0:
+        raise RuntimeError("sharded decode build subprocess failed:\n"
+                           + out.stderr[-4000:])
+    blob = json.loads(out.stdout)
+    return blob["hlo"], tuple(blob["shape"]), blob["n_layers"]
+
+
+def _build_decode_sharded(config: str):
+    """Fused int8-KV decode under SPMD (dp4 x tp2 forced host mesh): the
+    per-shard partitioned module must keep every single-device invariant --
+    zero weight-quant rounds beyond the per-stack cache-row writes, no
+    whole-cache dequantize at the *local* (kv-heads / tp) shard shape, and
+    the donated per-shard decode state copy-free."""
+    hlo, cache_shape, n_layers = _sharded_decode_hlo(config)
+    # the compiled SPMD module is the per-partition program: cache dims are
+    # already local (kv axis divided by tp), so thresholds derive from them
+    _, b, s, kh_local, hd = cache_shape
+    tp = 2
+    kh_local //= tp
+    cache_elems = b * s * kh_local * hd
+    specs = [RuleSpec("no-whole-cache-dequant",
+                      {"min_elems": cache_elems,
+                       "dims": (b, s, kh_local, hd)}),
+             RuleSpec("copy-free-aliasing", {"min_bytes": _COPY_MIN_BYTES}),
+             RuleSpec("double-quantize"),
+             # zero weight-quant rounds: the only rounds sharding may leave
+             # in-trace are the per-stack new K/V row writes (2 per layer),
+             # exactly the single-device fused-kv budget -- a partitioner
+             # that re-quantized weights or re-encoded shards would exceed it
+             RuleSpec("op-count",
+                      {"op_prefix": "round-nearest",
+                       "min_count": 0, "max_count": 2 * n_layers},
+                      severity=Severity.ERROR)]
+    return hlo, specs, []
+
+
 def _build_train_int8(config: str):
     """Real-int8 train step (fwd + bwd + optimizer): integer MXU dots must
     be present -- 3 s32-result dots (fwd, dx, dw) per quantized linear
@@ -280,6 +370,13 @@ CONTRACTS: List[PathContract] = [
                     "whole-view gather/dequant, pools copy-free",
         env={"REPRO_FUSED_DECODE": "1"},
         build=_build_decode_paged),
+    PathContract(
+        name="decode-sharded",
+        path="decode",
+        description="SPMD fused int8-KV decode (dp4 x tp2 host mesh): "
+                    "per-shard module keeps every single-device invariant",
+        env={"REPRO_FUSED_DECODE": "1"},
+        build=_build_decode_sharded),
     PathContract(
         name="train-int8",
         path="train",

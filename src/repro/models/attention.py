@@ -170,14 +170,26 @@ def _pick_chunk(sq: int, skv: int, b: int, h: int, rules,
     return max(chunk, 1)
 
 
-def _fused_kv_ok(policy, rules, kv_source) -> bool:
+def _fused_kv_ok(policy, rules, kv_source,
+                 n_kv_heads: Optional[int] = None) -> bool:
     """Static gate for the int8-KV attention kernels (fused decode + q8
-    prefill): single-host (no sharding rules), self-attention, a registered
-    backend whose kernels consume the stored spec directly, and the
-    ``REPRO_FUSED_DECODE`` switch (default: TPU only -- interpret mode keeps
-    the bit-compared dequantize-on-read path as the oracle)."""
-    if rules is not None or kv_source is not None:
+    prefill): self-attention, a registered backend whose kernels consume the
+    stored spec directly, and the ``REPRO_FUSED_DECODE`` switch (default:
+    TPU only -- interpret mode keeps the bit-compared dequantize-on-read
+    path as the oracle).
+
+    Under sharding rules the gate is decode-only: callers pass
+    ``n_kv_heads`` and the kernels run per-shard via ``shard_map`` over the
+    kv-head axis when the head count divides the mesh
+    (:func:`~repro.kernels.decode_attn.spmd_head_shardable`); otherwise --
+    and always for the q8 *prefill* kernel, which is not shard_mapped --
+    SPMD keeps the XLA gather/reference path."""
+    if kv_source is not None:
         return False
+    if rules is not None:
+        from repro.kernels.decode_attn import spmd_head_shardable
+        if n_kv_heads is None or not spmd_head_shardable(n_kv_heads, rules):
+            return False
     from repro.kernels.decode_attn import fused_decode_enabled
     if not fused_decode_enabled():
         return False
@@ -291,14 +303,24 @@ def _paged_decode(q, k, v, cache, page_table, pos_vec, cfg, *,
     page = cache["k"].shape[1]
     maxp = page_table.shape[1]
     quantized = "k_scale" in cache
-    if quantized and _fused_kv_ok(policy, rules, kv_source):
-        from repro.kernels.decode_attn import decode_attention_paged
+    if quantized and _fused_kv_ok(policy, rules, kv_source, n_kv_heads=kh):
+        from repro.kernels.decode_attn import (decode_attention_paged,
+                                               decode_attention_paged_spmd)
         kv_spec = policy.kv_spec()
         qg = q[:, 0].reshape(b, kh, h // kh, hd)
-        ctx, nkq, nks, nvq, nvs = decode_attention_paged(
-            qg, cache["k"], cache["k_scale"], cache["v"], cache["v_scale"],
-            k[:, 0], v[:, 0], pos_vec, page_table,
-            qmin=kv_spec.qmin, qmax=kv_spec.qmax)
+        if rules is not None:
+            ctx, nkq, nks, nvq, nvs = decode_attention_paged_spmd(
+                qg, cache["k"], cache["k_scale"],
+                cache["v"], cache["v_scale"],
+                k[:, 0], v[:, 0], pos_vec, page_table,
+                mesh=rules.mesh, kv_axis=rules.axis_map["kv"][0],
+                qmin=kv_spec.qmin, qmax=kv_spec.qmax)
+        else:
+            ctx, nkq, nks, nvq, nvs = decode_attention_paged(
+                qg, cache["k"], cache["k_scale"],
+                cache["v"], cache["v_scale"],
+                k[:, 0], v[:, 0], pos_vec, page_table,
+                qmin=kv_spec.qmin, qmax=kv_spec.qmax)
         new_cache = {"k": nkq, "v": nvq, "k_scale": nks, "v_scale": nvs}
         return ctx.reshape(b, 1, h * hd), None, None, new_cache
     # gather reference: same values at the same logical rows as the dense
@@ -405,21 +427,31 @@ def attn_apply(params, x: jnp.ndarray, cfg, *,
             # oracle) quantize the new rows here and dequantize the whole
             # buffer for the attention read.
             kv_spec = policy.kv_spec()
-            fused = _fused_kv_ok(policy, rules, kv_source)
-            if fused and s == 1:
+            fused_dec = _fused_kv_ok(policy, rules, kv_source, n_kv_heads=kh)
+            fused_pre = _fused_kv_ok(policy, rules, kv_source)
+            if fused_dec and s == 1:
                 # fused decode: one read of the int8 cache, one int8 row
                 # write; the kernel quantizes and scatters this step's rows
                 # (decode contract: ``cache_offset`` IS the per-slot count of
                 # valid prior rows, matching the caller's validity mask)
-                from repro.kernels.decode_attn import decode_attention
+                from repro.kernels.decode_attn import (decode_attention,
+                                                       decode_attention_spmd)
                 pos = jnp.broadcast_to(
                     jnp.asarray(cache_offset, jnp.int32).reshape(-1), (b,))
                 qg = q[:, 0].reshape(b, kh, h // kh, hd)
-                ctx, nkq, nks, nvq, nvs = decode_attention(
-                    qg, cache["k"], cache["k_scale"],
-                    cache["v"], cache["v_scale"],
-                    k[:, 0], v[:, 0], pos,
-                    qmin=kv_spec.qmin, qmax=kv_spec.qmax)
+                if rules is not None:
+                    ctx, nkq, nks, nvq, nvs = decode_attention_spmd(
+                        qg, cache["k"], cache["k_scale"],
+                        cache["v"], cache["v_scale"],
+                        k[:, 0], v[:, 0], pos,
+                        mesh=rules.mesh, kv_axis=rules.axis_map["kv"][0],
+                        qmin=kv_spec.qmin, qmax=kv_spec.qmax)
+                else:
+                    ctx, nkq, nks, nvq, nvs = decode_attention(
+                        qg, cache["k"], cache["k_scale"],
+                        cache["v"], cache["v_scale"],
+                        k[:, 0], v[:, 0], pos,
+                        qmin=kv_spec.qmin, qmax=kv_spec.qmax)
                 new_cache = {"k": nkq, "v": nvq,
                              "k_scale": nks, "v_scale": nvs}
                 ctx = ctx.reshape(b, 1, h * hd)
@@ -434,7 +466,7 @@ def attn_apply(params, x: jnp.ndarray, cfg, *,
                     "v_scale": _cache_update(cache["v_scale"], vs,
                                              cache_offset),
                 }
-                if (fused and s > 1 and isinstance(mask, dict)
+                if (fused_pre and s > 1 and isinstance(mask, dict)
                         and mask["kind"] == "causal"
                         and isinstance(cache_offset, int)):
                     # int8-KV prefill: flash forward with a dequant prologue

@@ -121,6 +121,15 @@ _TRAIN_MAP = {
 _SERVE_MAP = dict(_TRAIN_MAP, embed=(), seq=())  # no FSDP/SP at serve time
 _SERVE_SP_MAP = dict(_SERVE_MAP, kv_seq=("model",))   # long-context decode
 
+# Multi-chip serving (the Engine's mesh mode): weights FSDP-shard over the
+# data axis -- prepared int8 QState payloads live sharded and GSPMD gathers
+# the (cheap, integer) payload per layer -- while heads/kv/mlp/vocab stay
+# tensor-parallel over the model axis, which is what shards the KV cache by
+# kv-head.  Batch (decode slots) and sequence are replicated: admission is
+# host-side bookkeeping and must stay shard-local, and the decode kernels
+# shard_map over the kv-head axis only.
+_SERVE_FSDP_MAP = dict(_SERVE_MAP, embed=("data",), batch=())
+
 # Flat FSDP-256 (beyond-paper perf remap, EXPERIMENTS.md Section Perf):
 # batch shards over BOTH mesh axes (4096 tokens/chip at train_4k) and every
 # parameter FSDP-shards over the flat 256; no tensor parallelism.  Megatron
@@ -139,7 +148,8 @@ _TRAIN_FSDP_MAP = {
 
 
 def make_rules(mesh: Mesh, mode: str = "train", cfg=None) -> Rules:
-    """mode: train | serve | serve_sp (sequence-sharded KV for long decode).
+    """mode: train | serve | serve_sp (sequence-sharded KV for long decode)
+    | serve_fsdp (multi-chip Engine: FSDP weights + TP kv-heads).
 
     ``cfg`` enables head-count-aware TP: a GQA projection whose FLAT dim
     divides the axis (e.g. 8 kv heads x 128 = 1024 on a 16-way axis) but
@@ -150,7 +160,8 @@ def make_rules(mesh: Mesh, mode: str = "train", cfg=None) -> Rules:
     """
     names = set(mesh.axis_names)
     amap = {"train": _TRAIN_MAP, "serve": _SERVE_MAP,
-            "serve_sp": _SERVE_SP_MAP, "train_fsdp": _TRAIN_FSDP_MAP}[mode]
+            "serve_sp": _SERVE_SP_MAP, "serve_fsdp": _SERVE_FSDP_MAP,
+            "train_fsdp": _TRAIN_FSDP_MAP}[mode]
     amap = {k: tuple(a for a in v if a in names) for k, v in amap.items()}
     if mode == "train_fsdp":
         dp_axes = tuple(a for a in ("pod", "data", "model") if a in names)

@@ -17,8 +17,9 @@ from repro.configs import get_smoke_config
 from repro.core import as_policy, parse_policy
 from repro.core.qconfig import Granularity, QuantSpec
 from repro.core.quantizer import quantize_int
-from repro.kernels.decode_attn import (decode_attention, decode_kv_read_bytes,
-                                       default_block_k, fused_decode_enabled)
+from repro.kernels.decode_attn import (Q_TILE_SUBLANES, decode_attention,
+                                       decode_kv_read_bytes, default_block_k,
+                                       fused_decode_enabled)
 from repro.kernels.flash_attn import flash_attention_fwd_q8
 from repro.models import build_model
 
@@ -61,6 +62,31 @@ def test_fused_scatter_exact_and_rows_untouched():
     assert jnp.array_equal(fkq, rkq) and jnp.array_equal(fvq, rvq)
     np.testing.assert_allclose(np.asarray(fks), np.asarray(rks), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(fvs), np.asarray(rvs), rtol=1e-6)
+
+
+@pytest.mark.parametrize("g", [1, 2, 4])
+def test_lane_align_small_g_bitwise_inert(g):
+    """Small-GQA query tiles (G < the 8-sublane VPU tile) are zero-padded to
+    lane width inside the kernel; the pad rows are softmax-inert, so the
+    trimmed output must be *bitwise* what an explicitly lane-wide launch
+    computes for the real rows -- and the cache scatter identical."""
+    assert g < Q_TILE_SUBLANES
+    q, kq, ks, vq, vs, nk, nv, pos = _inputs(2, 12, 2, g, 8,
+                                             lengths=[4, 9], seed=7)
+    small = decode_attention(q, kq, ks, vq, vs, nk, nv, pos,
+                             block_k=4, interpret=True)
+    qp = jnp.concatenate(
+        [q, jnp.zeros((2, 2, Q_TILE_SUBLANES - g, 8), q.dtype)], axis=2)
+    wide = decode_attention(qp, kq, ks, vq, vs, nk, nv, pos,
+                            block_k=4, interpret=True)
+    assert small[0].shape == q.shape
+    assert jnp.array_equal(small[0], wide[0][:, :, :g])
+    for a, b in zip(small[1:], wide[1:]):      # scatter payloads + scales
+        assert jnp.array_equal(a, b)
+    # and the aligned path still matches the dequantize-whole-buffer oracle
+    ref, _ = _ref_decode(q, kq, ks, vq, vs, nk, nv, pos)
+    np.testing.assert_allclose(np.asarray(small[0]), np.asarray(ref),
+                               atol=1e-5)
 
 
 def test_tile_size_invariance():

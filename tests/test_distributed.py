@@ -1,30 +1,12 @@
 """Distributed-path tests: run in subprocesses with 8 forced host devices
-(the main test process must keep the single real CPU device)."""
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+(the main test process must keep the single real CPU device); the runner is
+the shared ``forced8_run`` conftest fixture."""
 
 
-def _run(snippet: str, timeout: int = 420) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
-                         capture_output=True, text=True, timeout=timeout,
-                         env=env)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
-
-
-def test_mini_dryrun_train_compiles_on_mesh():
+def test_mini_dryrun_train_compiles_on_mesh(forced8_run):
     """Smoke configs lower+compile+run on a (2,4) data x model mesh; the
     sharded loss equals the single-device loss."""
-    print(_run("""
+    print(forced8_run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_smoke_config
         from repro.models import build_model
@@ -59,9 +41,9 @@ def test_mini_dryrun_train_compiles_on_mesh():
     """))
 
 
-def test_moe_shard_map_modes_match_local():
+def test_moe_shard_map_modes_match_local(forced8_run):
     """a2a EP / masked EP / ff-sharded outputs == single-device dispatch."""
-    print(_run("""
+    print(forced8_run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_smoke_config
         from repro.models.moe import moe_apply, moe_spec
@@ -90,8 +72,8 @@ def test_moe_shard_map_modes_match_local():
     """))
 
 
-def test_compressed_allreduce_close_to_exact():
-    print(_run("""
+def test_compressed_allreduce_close_to_exact(forced8_run):
+    print(forced8_run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.parallel.compat import shard_map
@@ -118,11 +100,11 @@ def test_compressed_allreduce_close_to_exact():
     """))
 
 
-def test_compressed_allreduce_tree_matches_fp_psum():
+def test_compressed_allreduce_tree_matches_fp_psum(forced8_run):
     """compressed_allreduce over a gradient pytree vs the exact fp psum on a
     1-D mesh: same tree structure, <2% relative error per leaf, and the
     ragged leaf exercises the wire padding."""
-    print(_run("""
+    print(forced8_run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.parallel.compat import shard_map
@@ -153,8 +135,8 @@ def test_compressed_allreduce_tree_matches_fp_psum():
     """))
 
 
-def test_serve_prefill_decode_sharded():
-    print(_run("""
+def test_serve_prefill_decode_sharded(forced8_run):
+    print(forced8_run("""
         import jax, jax.numpy as jnp
         from repro.configs import get_smoke_config
         from repro.models import build_model
