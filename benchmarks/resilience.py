@@ -1,0 +1,283 @@
+"""Resilience gate: drive the fault-injection harness through every guard.
+
+Each scenario plants a deterministic fault (``train.faults.FaultPlan``) and
+asserts the matching defense absorbed it:
+
+    detect_and_skip    nan_grad mid-run, no checkpoint: the sentinel skips
+                       the poisoned updates; params stay finite.
+    recovery_ladder    nan_grad with checkpointing + a compiled fallback
+                       step: skip -> rollback to the newest checkpoint ->
+                       fallback window past the fault -> re-engage; the run
+                       finishes with a full complement of applied updates.
+    rotation_fallback  the newest checkpoint is corrupted on disk before
+                       the rollback needs it: ``restore_latest`` walks the
+                       rotation to the previous intact one.
+    atomic_save        SIGTERM lands in the payload/commit window of a
+                       save: nothing half-written is ever restorable.
+    sched_watchdog     the serving scheduler's background thread dies:
+                       blocked ``wait()`` callers are woken and re-raise
+                       instead of hanging.
+    request_timeout    a request past its deadline is cancelled (finish
+                       reason ``"timeout"``), its slot freed, the engine
+                       immediately reusable.
+
+``--smoke`` runs all scenarios, asserts every gate AND that every planned
+fault actually fired, then writes ``BENCH_resilience.json`` (the CI
+artifact).  Default (no flag) prints the same CSV rows as benchmarks.run.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.resilience [--smoke] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Shared smoke-trainer scaffolding
+# ---------------------------------------------------------------------------
+
+def _trainer_parts():
+    from repro.configs import get_smoke_config
+    from repro.core import beyond_paper_recipe
+    from repro.data import Loader, SyntheticCorpus
+    from repro.models import build_model
+    from repro.optim import OptConfig
+    from repro.train import init_train_state
+
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
+    recipe = beyond_paper_recipe()
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=100,
+                    state_storage="int")
+    loader = Loader(corpus, cfg, batch_size=4, seq_len=32)
+    state = init_train_state(model, KEY, recipe, opt)
+    return cfg, model, recipe, opt, loader, state
+
+
+def _guarded_run(fault_spec: str, tmp_dir, *, total_steps: int = 12,
+                 ckpt_every: int = 10 ** 9, fallback: bool = False,
+                 sentinel_kw=None):
+    from repro.checkpoint import CheckpointManager
+    from repro.core import fallback_policy
+    from repro.train import (FaultPlan, LoopConfig, SentinelConfig,
+                             StabilitySentinel, Trainer, make_train_step)
+
+    _, model, recipe, opt, loader, state = _trainer_parts()
+    faults = FaultPlan.parse(fault_spec)
+    step = jax.jit(make_train_step(model, recipe, opt, faults=faults,
+                                   health=True))
+    fb = (jax.jit(make_train_step(model, fallback_policy(recipe), opt,
+                                  health=True))
+          if fallback else None)
+    cfg_kw = dict(window=8, min_history=2, skip_limit=1, fallback_steps=4,
+                  max_rollbacks=3)
+    cfg_kw.update(sentinel_kw or {})
+    sentinel = StabilitySentinel(SentinelConfig(**cfg_kw))
+    mgr = CheckpointManager(str(tmp_dir)) if ckpt_every < 10 ** 9 else None
+    t = Trainer(step, None, state, loader, ckpt=mgr,
+                loop_cfg=LoopConfig(total_steps=total_steps,
+                                    ckpt_every=ckpt_every, log_every=1),
+                sentinel=sentinel, fallback_step=fb, faults=faults)
+    hist = t.run(rng=KEY)
+    summary = t.resilience_summary()
+    summary["final_ce"] = float(hist[-1]["ce"]) if hist else float("nan")
+    summary["params_finite"] = all(
+        bool(jnp.all(jnp.isfinite(p))) for p in
+        jax.tree_util.tree_leaves(t.state.params))
+    summary["opt_step"] = int(t.state.opt.step)
+    return summary
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+def scenario_detect_and_skip(tmp_dir) -> dict:
+    s = _guarded_run("nan_grad@3", tmp_dir, sentinel_kw={"skip_limit": 99})
+    ok = (s["skipped_batches"] >= 1 and s["restores"] == 0
+          and s["params_finite"] and math.isfinite(s["final_ce"])
+          and "nan_grad@3" in s["faults_fired"])
+    return {"ok": ok, "skipped": s["skipped_batches"],
+            "final_ce": s["final_ce"]}
+
+
+def scenario_recovery_ladder(tmp_dir) -> dict:
+    s = _guarded_run("nan_grad@5", tmp_dir, ckpt_every=3, fallback=True)
+    sent = s["sentinel"]
+    ok = (sent["rollbacks"] >= 1 and s["restores"] >= 1
+          and sent["fallback_steps_run"] >= 1 and s["params_finite"]
+          and s["opt_step"] == 12 and math.isfinite(s["final_ce"])
+          and "nan_grad@5" in s["faults_fired"])
+    return {"ok": ok, "rollbacks": sent["rollbacks"],
+            "restores": s["restores"], "skipped": s["skipped_batches"],
+            "fallback_steps": sent["fallback_steps_run"],
+            "opt_step": s["opt_step"], "final_ce": s["final_ce"]}
+
+
+def scenario_rotation_fallback(tmp_dir) -> dict:
+    # the 2nd completed save (the newest at rollback time) is corrupted on
+    # disk; restore_latest must fall back to the older intact checkpoint
+    s = _guarded_run("nan_grad@5;corrupt_ckpt@2:mode=flip", tmp_dir,
+                     ckpt_every=2, fallback=True)
+    sent = s["sentinel"]
+    ok = (sent["rollbacks"] >= 1 and s["restores"] >= 1
+          and s["params_finite"] and math.isfinite(s["final_ce"])
+          and set(s["faults_fired"]) >= {"nan_grad@5",
+                                         "corrupt_ckpt@2:mode=flip"})
+    return {"ok": ok, "rollbacks": sent["rollbacks"],
+            "restores": s["restores"], "final_ce": s["final_ce"]}
+
+
+def scenario_atomic_save(tmp_dir) -> dict:
+    from repro.checkpoint import CheckpointManager
+    from repro.train import FaultPlan
+
+    plan = FaultPlan.parse("sigterm_save@1")
+    mgr = CheckpointManager(str(tmp_dir))
+    plan.install(mgr)
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    aborted = False
+
+    def raise_term(signum, frame):
+        raise RuntimeError("SIGTERM")
+
+    old = signal.signal(signal.SIGTERM, raise_term)
+    try:
+        try:
+            mgr.save(1, tree)
+        except RuntimeError:
+            aborted = True
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    none_after_abort = mgr.all_steps() == []
+    mgr.save(2, tree)                            # the fault is one-shot
+    mgr.restore(2, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    ok = (aborted and none_after_abort and mgr.all_steps() == [2]
+          and plan.fired == ["sigterm_save@1"])
+    return {"ok": ok, "aborted": aborted,
+            "none_after_abort": none_after_abort}
+
+
+def _engine(max_slots=1, max_seq=256):
+    from repro.configs import get_smoke_config
+    from repro.infer import Engine
+    from repro.models import build_model
+
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    return Engine(model, params, max_slots=max_slots, max_seq=max_seq)
+
+
+def scenario_sched_watchdog() -> dict:
+    from repro.infer import Request
+    from repro.train import FaultInjected, FaultPlan
+
+    eng = _engine(max_slots=2, max_seq=64)
+    sched = eng.scheduler
+    plan = FaultPlan.parse("dead_sched@2")
+    sched.fault_hook = plan.scheduler_hook()
+    sched.start()
+    rid = eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=50))
+    t0 = time.monotonic()
+    wait_raised = stop_raised = False
+    try:
+        sched.wait([rid], timeout=60)
+    except FaultInjected:
+        wait_raised = True
+    try:
+        sched.stop()
+    except FaultInjected:
+        stop_raised = True
+    woke_s = time.monotonic() - t0
+    ok = (wait_raised and stop_raised and woke_s < 60
+          and plan.fired == ["dead_sched@2"])
+    return {"ok": ok, "wait_raised": wait_raised, "stop_raised": stop_raised,
+            "woke_s": woke_s}
+
+
+def scenario_request_timeout() -> dict:
+    from repro.infer import Request
+
+    eng = _engine(max_slots=1, max_seq=256)
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=200,
+                       timeout_s=0.01))
+    [r] = eng.run()
+    timed_out = r.finish_reason == "timeout" and len(r.tokens) < 200
+    slot_freed = not eng._running and len(eng._free) == 1
+    # the engine stays serviceable after the cancel
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=3))
+    [r2] = eng.run()
+    reusable = r2.finish_reason == "length" and len(r2.tokens) == 3
+    ok = timed_out and slot_freed and reusable
+    return {"ok": ok, "finish_reason": r.finish_reason,
+            "partial_tokens": len(r.tokens), "slot_freed": slot_freed,
+            "reusable": reusable}
+
+
+# ---------------------------------------------------------------------------
+# Harness
+# ---------------------------------------------------------------------------
+
+def run_all(out_path: str = "BENCH_resilience.json", smoke: bool = False,
+            emit_json: bool = False) -> dict:
+    import tempfile
+
+    results = {}
+    t_all = time.monotonic()
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2, \
+            tempfile.TemporaryDirectory() as d3, \
+            tempfile.TemporaryDirectory() as d4:
+        for name, fn in (
+                ("detect_and_skip", lambda: scenario_detect_and_skip(d1)),
+                ("recovery_ladder", lambda: scenario_recovery_ladder(d2)),
+                ("rotation_fallback", lambda: scenario_rotation_fallback(d3)),
+                ("atomic_save", lambda: scenario_atomic_save(d4)),
+                ("sched_watchdog", scenario_sched_watchdog),
+                ("request_timeout", scenario_request_timeout)):
+            t0 = time.monotonic()
+            r = fn()
+            r["wall_s"] = round(time.monotonic() - t0, 2)
+            results[name] = r
+            if not emit_json:
+                print(f"resilience::{name},0.0,"
+                      + ";".join(f"{k}={v}" for k, v in r.items()),
+                      flush=True)
+    results["total_wall_s"] = round(time.monotonic() - t_all, 2)
+    if smoke:
+        failed = [n for n, r in results.items()
+                  if isinstance(r, dict) and not r.get("ok")]
+        assert not failed, f"resilience scenarios failed: {failed}"
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"resilience smoke ok: 6 scenarios in "
+              f"{results['total_wall_s']:.1f}s -> {out_path}")
+    if emit_json:
+        print(json.dumps(results, indent=2))
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert every gate; write BENCH_resilience.json")
+    ap.add_argument("--json", action="store_true",
+                    help="print results as JSON instead of CSV rows")
+    args = ap.parse_args()
+    run_all(smoke=args.smoke, emit_json=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -235,6 +235,14 @@ def bench_serve_aot() -> None:
         f"decode_tok_s={r['decode_tok_s']:.1f};path={r['path']}")
 
 
+def bench_resilience() -> None:
+    """Fault-injection gates: sentinel skip/rollback/fallback ladder,
+    checkpoint rotation fallback + atomic saves, scheduler watchdog and
+    request deadlines (emits rows; the CI gate is --smoke)."""
+    from benchmarks.resilience import run_all
+    run_all(smoke=False)        # prints matching CSV rows itself
+
+
 def bench_decode_attention() -> None:
     """Decode-attention hot path: fp cache vs int8 dequant-on-read vs the
     fused int8-KV kernel (per-step ms + analytic KV-bytes-read counter;
@@ -274,6 +282,7 @@ def main() -> None:
     bench_serve_trace()
     bench_serve_aot()
     bench_decode_attention()
+    bench_resilience()
     table_paper_results()
     table_memory_and_linear_share()
     table_roofline()

@@ -1,31 +1,62 @@
 """Fault-tolerant checkpointing (orbax is unavailable; built from scratch).
 
 Properties required at 1000+-node scale:
-  * atomic: write to a temp dir, fsync, rename -- a preempted writer never
-    corrupts the latest checkpoint;
-  * rotating: keep_n most recent checkpoints + optional keep_every milestone;
+  * atomic: write to a unique temp dir, fsync, write a digest commit marker,
+    rename -- a preempted or crashed writer never corrupts the latest
+    checkpoint and never collides with a concurrent writer's temp dir;
+  * verified: every leaf carries a CRC32 in the manifest, and the manifest
+    itself is pinned by a sha256 commit marker (``COMMIT``) written last --
+    bit rot, truncation and half-written checkpoints are *detected at
+    restore time*, not silently loaded;
+  * rotating: keep_n most recent checkpoints; rotation never deletes a
+    checkpoint that a concurrent :meth:`restore` is currently reading;
   * async: snapshot to host memory synchronously (cheap), serialize on a
-    background thread so the train loop is not blocked by disk;
+    background thread so the train loop is not blocked by disk; a second
+    ``save()`` joins the in-flight write first (never interleaves), and an
+    exception on the writer thread propagates to the next ``save()`` /
+    ``wait()`` instead of vanishing with the daemon thread;
   * elastic / mesh-agnostic: leaves are saved as full logical arrays; restore
     takes a sharding tree and ``jax.device_put``s onto whatever mesh the new
     job has (different pod count / axis sizes are fine);
-  * self-describing: manifest.json records step, leaf paths/dtypes/shapes and
-    arbitrary user metadata (loader state, recipe, config digest).
+  * self-describing: manifest.json records step, leaf paths/dtypes/shapes/
+    CRCs and arbitrary user metadata (loader state, recipe, config digest).
+    Integer-stored optimizer moments (``qadam.QState`` int8 payloads + fp32
+    scale/zero sidecars) are ordinary leaves and round-trip bit-exactly.
+
+Recovery entry point: :meth:`restore_latest` walks the rotation newest-first,
+verifies each candidate, and loads the first intact one -- a corrupt or
+half-written newest checkpoint costs one rotation slot, not the run.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
 
 PyTree = Any
 _SEP = "/"
+
+#: manifest schema version: 2 adds per-leaf crc32 + the COMMIT digest marker
+MANIFEST_VERSION = 2
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed verification (missing files, digest mismatch,
+    CRC mismatch, unreadable payload).  Carries the offending step/path."""
+
+    def __init__(self, msg: str, step: Optional[int] = None,
+                 path: Optional[str] = None):
+        super().__init__(msg)
+        self.step = step
+        self.path = path
 
 
 def _flatten(tree: PyTree) -> List[Tuple[str, Any]]:
@@ -47,6 +78,36 @@ def _key_str(k) -> str:
     return str(k)
 
 
+def _crc(arr: np.ndarray) -> int:
+    """CRC32 of the leaf payload bytes (C-contiguous view)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _manifest_digest(manifest: Dict) -> str:
+    """sha256 over the canonicalized manifest content: step + leaf table
+    (file keys, dtypes, shapes, CRCs).  Metadata is covered too -- the
+    loader state a resume replays from must be as trustworthy as the
+    params."""
+    body = json.dumps({"step": manifest["step"],
+                       "leaves": manifest["leaves"],
+                       "metadata": manifest.get("metadata", {})},
+                      sort_keys=True).encode()
+    return hashlib.sha256(body).hexdigest()
+
+
+def _fsync_file(path: str) -> None:
+    with open(path, "rb") as f:
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep_n: int = 3,
                  async_write: bool = False):
@@ -54,69 +115,137 @@ class CheckpointManager:
         self.keep_n = keep_n
         self.async_write = async_write
         self._thread: Optional[threading.Thread] = None
+        self._write_error: Optional[BaseException] = None
+        self._save_lock = threading.Lock()     # serializes writes + rotation
+        self._tmp_seq = 0
+        self._reading: Set[int] = set()        # steps a restore() is inside
+        #: test hooks (see train/faults.py): called with (step) after the
+        #: array payload is on disk but before the commit marker, and with
+        #: (step, final_path) after a completed write + rotation.
+        self.on_mid_write: Optional[Callable[[int], None]] = None
+        self.on_after_write: Optional[Callable[[int, str], None]] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- write --------------------------------------------------------------
 
     def save(self, step: int, tree: PyTree,
              metadata: Optional[Dict] = None) -> str:
-        """Snapshot to host (synchronous) then serialize (async optional)."""
+        """Snapshot to host (synchronous) then serialize (async optional).
+        Joins any in-flight async write first -- two writers never share a
+        temp dir -- and re-raises an error the previous background write hit
+        (a silently-lost checkpoint must fail the *next* save, not nothing).
+        """
+        self.wait()                             # joins + propagates errors
         named = _flatten(tree)
         host = [(n, np.asarray(x)) for n, x in named]   # device->host copy now
         meta = dict(metadata or {})
         if self.async_write:
-            self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, host, meta), daemon=True)
+                target=self._write_guarded, args=(step, host, meta),
+                daemon=True)
             self._thread.start()
             return self._ckpt_dir(step)
         return self._write(step, host, meta)
 
     def wait(self) -> None:
+        """Join the in-flight async write; raise its error, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._write_error is not None:
+            err, self._write_error = self._write_error, None
+            raise err
+
+    def _write_guarded(self, step: int, host, meta) -> None:
+        try:
+            self._write(step, host, meta)
+        except BaseException as e:              # lint: except-ok
+            # daemon thread: park the error for the next save()/wait()
+            self._write_error = e
 
     def _ckpt_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:010d}")
 
     def _write(self, step: int, host, meta) -> str:
+        with self._save_lock:
+            return self._write_locked(step, host, meta)
+
+    def _write_locked(self, step: int, host, meta) -> str:
         final = self._ckpt_dir(step)
-        tmp = final + ".tmp"
+        # unique temp dir per write attempt: a crashed/preempted writer's
+        # leftovers can never be half-reused by the next attempt
+        self._tmp_seq += 1
+        tmp = f"{final}.tmp-{os.getpid()}-{self._tmp_seq}"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest = {"step": step, "time": time.time(), "metadata": meta,
-                    "leaves": {}}
+        manifest = {"version": MANIFEST_VERSION, "step": step,
+                    "time": time.time(), "metadata": meta, "leaves": {}}
         arrays = {}
         for name, arr in host:
             key = name.replace(_SEP, "__")
             arrays[key] = arr
             manifest["leaves"][name] = {
                 "file_key": key, "dtype": str(arr.dtype),
-                "shape": list(arr.shape)}
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                "shape": list(arr.shape), "crc32": _crc(arr)}
+        apath = os.path.join(tmp, "arrays.npz")
+        np.savez(apath, **arrays)
+        _fsync_file(apath)
+        if self.on_mid_write is not None:
+            # the preemption window the fault harness targets: payload on
+            # disk, manifest/commit marker not yet -- the checkpoint must
+            # not be restorable from this state
+            self.on_mid_write(step)
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
             json.dump(manifest, f, indent=1)
-        with open(os.path.join(tmp, "manifest.json")) as f:
-            f.read()                                    # flush sanity
+            f.flush()
+            os.fsync(f.fileno())
+        # commit marker written LAST: its presence certifies every earlier
+        # byte; its content pins the manifest (and through the CRCs, the
+        # payload) against bit rot and truncation
+        cpath = os.path.join(tmp, "COMMIT")
+        with open(cpath, "w") as f:
+            f.write(_manifest_digest(manifest))
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
-        self._rotate()
+        _fsync_dir(self.directory)
+        self._rotate_locked()
+        if self.on_after_write is not None:
+            self.on_after_write(step, final)
         return final
 
-    def _rotate(self) -> None:
+    def _rotate_locked(self) -> None:
         steps = self.all_steps()
         for s in steps[:-self.keep_n] if self.keep_n else []:
+            if s in self._reading:
+                # a concurrent restore() holds this step open: deleting it
+                # under the reader is the race this guard exists for.  It
+                # will be collected by a later save's rotation.
+                continue
             shutil.rmtree(self._ckpt_dir(s), ignore_errors=True)
+
+    def prune_incomplete(self) -> List[str]:
+        """Remove leftover ``*.tmp-*`` dirs from crashed writers (safe on
+        startup: no live writer shares our pid+seq namespace)."""
+        removed = []
+        for name in sorted(os.listdir(self.directory)):
+            if ".tmp" in name and name.startswith("step_"):
+                p = os.path.join(self.directory, name)
+                shutil.rmtree(p, ignore_errors=True)
+                removed.append(p)
+        return removed
 
     # -- read ---------------------------------------------------------------
 
     def all_steps(self) -> List[int]:
         out = []
         for name in os.listdir(self.directory):
-            if name.startswith("step_") and not name.endswith(".tmp"):
+            if name.startswith("step_") and ".tmp" not in name:
                 try:
                     out.append(int(name[5:]))
                 except ValueError:
@@ -127,15 +256,79 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def verify(self, step: int, check_payload: bool = True) -> Dict:
+        """Validate one checkpoint: commit marker present and matching the
+        manifest digest; every manifest leaf present in the payload with a
+        matching CRC32.  Returns the parsed manifest on success, raises
+        :class:`CheckpointCorrupt` otherwise.  ``check_payload=False`` skips
+        the (full-read) CRC pass and only checks the commit marker."""
+        path = self._ckpt_dir(step)
+        mpath = os.path.join(path, "manifest.json")
+        cpath = os.path.join(path, "COMMIT")
+        if not os.path.isdir(path):
+            raise CheckpointCorrupt(f"no checkpoint at {path}", step, path)
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorrupt(
+                f"step {step}: unreadable manifest ({e})", step, path) from e
+        if manifest.get("version", 1) >= 2:
+            try:
+                with open(cpath) as f:
+                    commit = f.read().strip()
+            except OSError as e:
+                raise CheckpointCorrupt(
+                    f"step {step}: missing COMMIT marker (half-written "
+                    "checkpoint?)", step, path) from e
+            if commit != _manifest_digest(manifest):
+                raise CheckpointCorrupt(
+                    f"step {step}: manifest digest mismatch", step, path)
+        if not check_payload:
+            return manifest
+        try:
+            with np.load(os.path.join(path, "arrays.npz")) as data:
+                for name, info in manifest["leaves"].items():
+                    if info["file_key"] not in data.files:
+                        raise CheckpointCorrupt(
+                            f"step {step}: payload missing leaf {name!r}",
+                            step, path)
+                    arr = data[info["file_key"]]
+                    crc = info.get("crc32")
+                    if crc is not None and _crc(arr) != crc:
+                        raise CheckpointCorrupt(
+                            f"step {step}: CRC mismatch on leaf {name!r}",
+                            step, path)
+        except CheckpointCorrupt:
+            raise
+        except Exception as e:                   # zip/npz decode errors
+            raise CheckpointCorrupt(
+                f"step {step}: unreadable payload ({e})", step, path) from e
+        return manifest
+
     def restore(self, step: int, target: PyTree,
-                shardings: Optional[PyTree] = None
-                ) -> Tuple[PyTree, Dict]:
+                shardings: Optional[PyTree] = None,
+                verify: bool = True) -> Tuple[PyTree, Dict]:
         """Rebuild ``target``-structured tree from disk.  ``shardings`` (same
         structure, NamedSharding leaves) places leaves onto the current mesh
-        -- this is the elastic-restore path: the saved mesh is irrelevant."""
+        -- this is the elastic-restore path: the saved mesh is irrelevant.
+        With ``verify`` (default) the commit marker and per-leaf CRCs are
+        checked first; corruption raises :class:`CheckpointCorrupt` (see
+        :meth:`restore_latest` for the falls-back-through-rotation form).
+        """
+        self._reading.add(step)                 # rotation must not delete us
+        try:
+            return self._restore_inner(step, target, shardings, verify)
+        finally:
+            self._reading.discard(step)
+
+    def _restore_inner(self, step, target, shardings, verify):
         path = self._ckpt_dir(step)
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
+        if verify:
+            manifest = self.verify(step)
+        else:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
         data = np.load(os.path.join(path, "arrays.npz"))
         named = _flatten(target)
         shard_leaves = (None if shardings is None
@@ -150,6 +343,12 @@ class CheckpointManager:
                 raise ValueError(
                     f"shape mismatch for {name}: ckpt {arr.shape} vs "
                     f"target {leaf.shape}")
+            if hasattr(leaf, "dtype") and arr.dtype != np.dtype(leaf.dtype):
+                # int8 payloads / fp32 sidecars must come back as stored --
+                # a silent cast here would break bit-exact resume
+                raise ValueError(
+                    f"dtype mismatch for {name}: ckpt {arr.dtype} vs "
+                    f"target {np.dtype(leaf.dtype)}")
             if shard_leaves is not None and shard_leaves[i] is not None:
                 leaves.append(jax.device_put(arr, shard_leaves[i]))
             else:
@@ -157,3 +356,25 @@ class CheckpointManager:
         _, treedef = jax.tree_util.tree_flatten(target)
         return (jax.tree_util.tree_unflatten(treedef, leaves),
                 manifest["metadata"])
+
+    def restore_latest(self, target: PyTree,
+                       shardings: Optional[PyTree] = None
+                       ) -> Tuple[PyTree, Dict, int]:
+        """Restore the newest *intact* checkpoint, falling back through the
+        rotation when verification fails: a corrupt / truncated / half-
+        written newest checkpoint costs one rotation slot, not the run.
+        Returns ``(tree, metadata, step)``; raises
+        :class:`CheckpointCorrupt` when no candidate survives."""
+        steps = self.all_steps()
+        errors: List[str] = []
+        for step in reversed(steps):
+            try:
+                tree, meta = self.restore(step, target, shardings)
+                return tree, meta, step
+            except CheckpointCorrupt as e:
+                errors.append(str(e))
+        raise CheckpointCorrupt(
+            "no intact checkpoint in "
+            f"{self.directory!r} (candidates: {steps}); "
+            + "; ".join(errors) if errors else
+            f"no checkpoint in {self.directory!r}")

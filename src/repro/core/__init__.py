@@ -8,7 +8,8 @@ from repro.core.qlinear import (int8_backend_supported, int8_bwd_supported,
                                 int8_quantized_linear, quantized_linear)
 from repro.core.qpolicy import (FP_POLICY, KERNEL_BACKENDS, LinearCtx,
                                 PolicyRule, QuantPolicy, ROLES, as_policy,
-                                parse_policy, register_backend)
+                                fallback_policy, parse_policy,
+                                register_backend)
 from repro.core.quantizer import (compute_scale_zero, dequantize_int,
                                   fake_quant, fake_quant_nograd,
                                   maybe_fake_quant, quant_error, quantize_int)
@@ -20,7 +21,8 @@ __all__ = [
     "QState", "quantized_linear", "int8_backend_supported",
     "int8_bwd_supported", "int8_quantized_linear",
     "FP_POLICY", "KERNEL_BACKENDS", "LinearCtx", "PolicyRule", "QuantPolicy",
-    "ROLES", "as_policy", "parse_policy", "register_backend",
+    "ROLES", "as_policy", "fallback_policy", "parse_policy",
+    "register_backend",
     "compute_scale_zero", "dequantize_int", "fake_quant", "fake_quant_nograd",
     "maybe_fake_quant", "quant_error", "quantize_int",
 ]

@@ -9,10 +9,24 @@
   random perturbations of radius rho on a batch.
 * zero-bin fraction (Fig. 12): how much of a tensor quantizes to exactly 0 --
   the mechanism behind Adam-m2 divergence.
+
+Plus the *online* quantization-health counters the training stability
+sentinel (``train/sentinel.py``) watches every step:
+
+* int8 saturation rate against a *stored* scale sidecar
+  (:func:`saturation_rate`): the overflow guard -- when incoming values
+  outgrow the codec scale learned from previous steps, payloads pin at the
+  grid edge and the quantized path silently loses magnitude information;
+* relative quantization error (:func:`relative_quant_error`): per-step drift
+  of the injected error -- a jump means the tensor's distribution left the
+  regime the spec's granularity can represent;
+* gradient-vs-moment saturation (:func:`moment_saturation_rate`): fraction
+  of gradient blocks whose absmax exceeds what the stored int8 Adam-moment
+  scales can absorb (the paper's m2-divergence mechanism, measured live).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +73,106 @@ def quant_snr_db(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
     err = xf - fake_quant_nograd(xf, spec)
     return 10.0 * jnp.log10(jnp.sum(xf ** 2) /
                             jnp.maximum(jnp.sum(err ** 2), 1e-20))
+
+
+def saturation_rate(x: jnp.ndarray, spec: QuantSpec,
+                    scale: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of entries that would pin at the integer grid edge when
+    quantized with the given *stored* scale (an overflow counter).
+
+    Against a fresh absmax scale the top bin is occupied by construction;
+    saturation only means something against a scale carried from previous
+    steps (a ``QState`` sidecar) -- entries with ``|x| > qmax * scale`` are
+    the mass the codec can no longer represent.  ``scale`` broadcasts
+    against ``x`` (scalar, per-channel keepdims, or blockwise rows)."""
+    xf = jnp.abs(x.astype(jnp.float32))
+    lim = spec.qmax * jnp.maximum(scale.astype(jnp.float32), 1e-30)
+    return jnp.mean((xf > lim).astype(jnp.float32))
+
+
+def relative_quant_error(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """||x - qdq(x)|| / ||x||: the per-step size of the injected
+    quantization error.  The sentinel tracks its drift -- a jump means the
+    tensor's distribution left the regime the spec's granularity absorbs
+    (e.g. emergent channel outliers, Fig. 6)."""
+    xf = x.astype(jnp.float32)
+    err = xf - fake_quant_nograd(xf, spec)
+    return jnp.sqrt(jnp.sum(jnp.square(err))) \
+        / jnp.maximum(jnp.sqrt(jnp.sum(jnp.square(xf))), 1e-20)
+
+
+def moment_saturation_rate(grads, moments, spec: Optional[QuantSpec],
+                           beta1: float = 0.9,
+                           headroom: float = 4.0) -> Optional[jnp.ndarray]:
+    """Saturation rate of the *candidate* first moments against the stored
+    int8 moment scales, over every integer-stored leaf.
+
+    This is the live form of the paper's m2-divergence mechanism: the moment
+    codec's scales were fit to previous steps' statistics, so the entries
+    whose next value ``beta1 * dequant(m1) + (1 - beta1) * g`` exceeds
+    ``headroom * qmax * stored_scale`` are the mass the codec cannot absorb
+    by an ordinary blockwise re-fit.  The ``headroom`` margin is what makes
+    this a *spike* detector rather than a drift meter: while the EMA warms
+    up (or whenever the regime shifts slowly) the candidate routinely
+    outgrows the previous step's absmax by small factors, which the next
+    re-fit absorbs for ~lg(headroom) bits of transient resolution -- only
+    mass beyond the margin signals a step change the codec must clip.
+    Entries whose stored scale sits at the quantizer's absmax floor
+    (``_EPS``-clamped, i.e. the block was all-zero when fit -- fresh init
+    or a dead block) are excluded: such a scale encodes no regime, so
+    "outgrowing" it is meaningless.  Returns None when no leaf stores
+    integer moments (fp / fake storage -- nothing can saturate)."""
+    from repro.core import qadam          # local: avoid import cycle at init
+    if spec is None:
+        return None
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    m_leaves = treedef.flatten_up_to(moments)
+    hits = []
+    valid = []
+    for g, m in zip(g_leaves, m_leaves):
+        if not isinstance(m, qadam.QState):
+            continue
+        if spec.block_size:
+            gb = qadam.flatten_blocks(g.astype(jnp.float32), spec.block_size)
+        else:
+            gb = g.astype(jnp.float32)
+        scale = m.scale.astype(jnp.float32)
+        m1 = (m.q.astype(jnp.float32) + m.zero.astype(jnp.float32)) * scale
+        cand = beta1 * m1 + (1.0 - beta1) * gb
+        lim = headroom * spec.qmax * scale
+        # quantizer.py clamps absmax to _EPS=1e-12: a scale at (or under)
+        # the floor encodes an all-zero block, not a fitted regime
+        fitted = jnp.broadcast_to(scale * spec.qmax > 2e-12, gb.shape)
+        hits.append(jnp.sum((jnp.abs(cand) > lim) & fitted))
+        valid.append(jnp.sum(fitted))
+    if not hits:
+        return None
+    n = jnp.sum(jnp.stack(valid))
+    return jnp.sum(jnp.stack(hits)) / jnp.maximum(n, 1.0)
+
+
+def grad_quant_health(grads, moments, m1_spec: Optional[QuantSpec],
+                      err_spec: Optional[QuantSpec],
+                      beta1: float = 0.9) -> Dict[str, jnp.ndarray]:
+    """The quant-health metric dict the train step emits for the sentinel
+    (all scalars; cheap: two passes over the gradient leaves).
+
+    * ``grad_sat``: :func:`moment_saturation_rate` vs the stored m1 scales;
+    * ``grad_qerr``: :func:`relative_quant_error` of the concatenated 2-D+
+      gradient leaves under ``err_spec`` (the policy's gradient/activation
+      spec) -- its *drift* is the signal, not its level.
+    """
+    out: Dict[str, jnp.ndarray] = {}
+    sat = moment_saturation_rate(grads, moments, m1_spec, beta1)
+    if sat is not None:
+        out["grad_sat"] = sat
+    if err_spec is not None:
+        flat = [g.astype(jnp.float32).reshape(-1)
+                for g in jax.tree_util.tree_leaves(grads) if g.ndim >= 2]
+        if flat:
+            out["grad_qerr"] = relative_quant_error(
+                jnp.concatenate(flat), err_spec)
+    return out
 
 
 def m_sharpness(loss_fn: Callable, params, batch, key: jax.Array,

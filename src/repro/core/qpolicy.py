@@ -416,6 +416,48 @@ class QuantPolicy:
 FP_POLICY = QuantPolicy()
 
 
+def fallback_policy(policy: "QuantPolicy", mode: str = "fake_quant"
+                    ) -> "QuantPolicy":
+    """Stability-fallback variant of a policy -- the train sentinel's
+    recovery action after a rollback (a temporary, step-indexed override:
+    the trainer runs the fallback-compiled step for N steps, then re-engages
+    the primary policy; see ``train/sentinel.py``).
+
+    ``mode='fake_quant'`` keeps every resolved recipe (the quantization
+    *error* stays, preserving the paper's methodology) but forces every rule
+    and the policy default off the real-int8 kernels onto the ``fake_quant``
+    reference einsum -- recovery from kernel-path numerical trouble without
+    changing the optimization problem.
+
+    ``mode='fp'`` additionally drops linear quantization (weights/acts/grads
+    -> fp) from every rule and the default -- the Nielsen-et-al-style
+    precision transition for when the int8 formulation itself destabilizes.
+
+    Both modes PRESERVE the optimizer-moment specs (``adam_m1``/``adam_m2``)
+    of the default recipe: the fallback step must consume and produce the
+    exact same ``AdamState`` pytree (int8 ``QState`` payloads + sidecars) as
+    the primary step, or rollback/re-engage could not hand states across.
+    """
+    if mode not in ("fake_quant", "fp"):
+        raise ValueError(f"unknown fallback mode {mode!r} "
+                         "(want 'fake_quant' or 'fp')")
+    policy = as_policy(policy)
+
+    def degrade(recipe: Optional[QuantRecipe]) -> Optional[QuantRecipe]:
+        if recipe is None:
+            return None
+        if mode == "fake_quant":
+            return recipe
+        return dataclasses.replace(recipe, weights=None, acts=None,
+                                   grads=None, grads_dx=None)
+
+    rules = tuple(dataclasses.replace(r, recipe=degrade(r.recipe),
+                                      backend="fake_quant")
+                  for r in policy.rules)
+    return QuantPolicy(rules=rules, default=degrade(policy.default),
+                       backend="fake_quant")
+
+
 def as_policy(obj: Union[None, QuantRecipe, QuantPolicy, str]) -> QuantPolicy:
     """Normalize the public ``recipe=`` / ``policy=`` surface: accepts None
     (fp), a QuantRecipe (wrapped via from_recipe), a QuantPolicy, or a policy

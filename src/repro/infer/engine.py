@@ -142,10 +142,14 @@ def _pad_rows(a: np.ndarray, n: int, fill=0) -> np.ndarray:
 class Request:
     """One generation request.  ``eos_id`` stops the sequence when sampled
     (the eos token is not included in the response's tokens -- this applies
-    to the very first sampled token too)."""
+    to the very first sampled token too).  ``timeout_s`` bounds the wall
+    clock from submit: a request still queued or decoding past its deadline
+    is cancelled by the scheduler (finish reason ``"timeout"``, tokens
+    generated so far included, slot and pages freed)."""
     tokens: Sequence[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    timeout_s: Optional[float] = None
     request_id: Optional[int] = None         # assigned by submit()
 
 
@@ -154,7 +158,7 @@ class Response:
     request_id: int
     prompt: List[int]
     tokens: List[int]                        # generated, eos excluded
-    finish_reason: str                       # "eos" | "length"
+    finish_reason: str                       # "eos" | "length" | "timeout"
     text: Optional[str] = None               # set by the emit thread when the
     #                                          engine has a detokenizer
 
@@ -464,6 +468,29 @@ class Engine:
                     + " or pass eos_id")
             out[i, :len(t)] = t
         return jnp.asarray(out)
+
+    def cancel(self, request_id: int, reason: str = "timeout") -> bool:
+        """Cancel a queued or running request (scheduler-thread only -- the
+        same thread that runs ``_admit``/``_step``).  Running: finished via
+        the normal path (slot and pages freed, tokens generated so far kept).
+        Queued: removed before admission (a preempted continuation keeps its
+        carry split, so the response still reports the original prompt).
+        Returns False when the request is unknown or already finished."""
+        for req in self._queue:
+            if req.request_id == request_id:
+                self._queue.remove(req)
+                self._skips.pop(request_id, None)
+                orig, prior = self._carry.pop(
+                    request_id, (list(req.tokens), []))
+                self._done.append(Response(request_id=request_id, prompt=orig,
+                                           tokens=prior,
+                                           finish_reason=reason))
+                return True
+        for st in self._running.values():
+            if st.req.request_id == request_id:
+                self._finish(st, reason)
+                return True
+        return False
 
     def cache_prefix(self, tokens: Sequence[int]) -> int:
         """Prefill ``tokens`` once and pin its whole-page KV as a shared

@@ -16,7 +16,18 @@ prefill / decode / page-in steps, the page pool, slot bookkeeping); the
   overlaps prefill/decode instead of serializing with them;
 * wall-clock **latency accounting** per request (submit -> finish),
   summarized by :meth:`latency_stats` (p50/p99 -- the serving numbers the
-  ROADMAP's "millions of users" item asks for).
+  ROADMAP's "millions of users" item asks for);
+* **per-request deadlines**: a ``Request.timeout_s`` is armed at submit;
+  the scheduling loop sweeps expired requests every tick and cancels them
+  through ``Engine.cancel`` (finish reason ``"timeout"``, slot and pages
+  freed) -- one stuck or oversized request cannot hold resources forever;
+* a **dead-loop watchdog**: if the background scheduling thread dies, every
+  pending completion event is set so blocked ``wait()`` callers wake up and
+  re-raise the loop's exception instead of hanging until their own timeout
+  (``stop()`` re-raises it too).  ``fault_hook`` (set by the resilience
+  harness from ``train.faults.FaultPlan.scheduler_hook``) is called with
+  the tick number at the top of every :meth:`step` to inject exactly this
+  failure deterministically.
 
 Two driving modes share every code path:
 
@@ -33,7 +44,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.infer.pages import CapacityError
 
@@ -60,17 +71,25 @@ class Scheduler:
         self._loop_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._loop_error: Optional[BaseException] = None
+        self._deadlines: Dict[int, float] = {}        # rid -> monotonic bound
+        #: test/resilience hook called with the tick number at the top of
+        #: every step() -- raising here simulates a dying loop thread
+        self.fault_hook: Optional[Callable[[int], None]] = None
         self.peak_live_bytes = 0
         self.steps = 0
+        self.timeouts = 0
 
     # -- submission (any thread) ------------------------------------------
 
     def enqueue(self, req) -> None:
         """Called by ``Engine.submit`` after validation: records the arrival
         time and hands the request to the scheduling loop."""
+        now = time.monotonic()
         with self._lock:
             self._events[req.request_id] = threading.Event()
-            self._times[req.request_id] = {"submit": time.monotonic()}
+            self._times[req.request_id] = {"submit": now}
+            if getattr(req, "timeout_s", None) is not None:
+                self._deadlines[req.request_id] = now + req.timeout_s
         self._inbox.put(req)
 
     # -- emit thread -------------------------------------------------------
@@ -110,11 +129,30 @@ class Scheduler:
             except queue.Empty:
                 return n
 
+    def _sweep_timeouts(self) -> None:
+        """Cancel every request past its deadline (queued or running); runs
+        on the scheduling thread, before admission, so an expired queued
+        request is never admitted."""
+        with self._lock:
+            if not self._deadlines:
+                return
+            now = time.monotonic()
+            expired = [rid for rid, dl in self._deadlines.items()
+                       if now >= dl]
+            for rid in expired:
+                del self._deadlines[rid]
+        for rid in expired:
+            if self.engine.cancel(rid, reason="timeout"):
+                self.timeouts += 1
+
     def step(self) -> bool:
-        """One scheduling tick: drain submissions, admit, decode one step,
-        emit finishes.  Returns False when fully idle."""
+        """One scheduling tick: drain submissions, sweep deadlines, admit,
+        decode one step, emit finishes.  Returns False when fully idle."""
+        if self.fault_hook is not None:
+            self.fault_hook(self.steps)
         eng = self.engine
         self._drain_inbox()
+        self._sweep_timeouts()
         eng._admit()
         if eng._running:
             eng._step()
@@ -123,12 +161,20 @@ class Scheduler:
         self.peak_live_bytes = max(self.peak_live_bytes,
                                    eng.live_kv_bytes())
         for resp in eng._drain_done():
+            with self._lock:
+                self._deadlines.pop(resp.request_id, None)
             self._ensure_emit_thread()
             self._emit_q.put(resp)
         if eng._queue and not eng._running:
             # nothing running and nothing admissible: the queued request can
-            # never fit (pinned prefixes shrank the pool below its need)
+            # never fit (pinned prefixes shrank the pool below its need).
+            # With a deadline armed we idle until the sweep cancels it
+            # (finish reason "timeout") instead of killing the loop.
             req = eng._queue[0]
+            with self._lock:
+                deadlined = req.request_id in self._deadlines
+            if deadlined:
+                return True
             raise CapacityError(
                 f"request {req.request_id} ({len(req.tokens)} tokens) is not "
                 "admissible into an idle engine: the page pool (minus pinned "
@@ -174,12 +220,24 @@ class Scheduler:
                 while not self._stop.is_set():
                     if not self.step():
                         time.sleep(1e-3)
-            except BaseException as e:          # surfaced by wait()/stop()
+            except BaseException as e:   # lint: except-ok -- the watchdog:
+                # park the error for wait()/stop() and wake every blocked
+                # waiter; swallowing it here would hang them forever
                 self._loop_error = e
+                self._wake_all()
 
         self._loop_thread = threading.Thread(target=loop, name="repro-sched",
                                              daemon=True)
         self._loop_thread.start()
+
+    def _wake_all(self) -> None:
+        """Dead-loop watchdog: set every pending completion event so blocked
+        ``wait()`` callers re-check ``_loop_error`` instead of hanging."""
+        with self._lock:
+            evs = [ev for rid, ev in self._events.items()
+                   if rid not in self._results]
+        for ev in evs:
+            ev.set()
 
     def stop(self) -> None:
         self._stop.set()
@@ -190,16 +248,27 @@ class Scheduler:
             raise self._loop_error
 
     def wait(self, rids: List[int], timeout: Optional[float] = None) -> None:
+        """Block until every listed request has a response.  Raises the
+        scheduling loop's exception if the loop thread died (before, during,
+        or after the wait -- the watchdog wakes blocked waiters) and
+        ``TimeoutError`` when the wall-clock ``timeout`` expires first."""
         deadline = None if timeout is None else time.monotonic() + timeout
         for rid in rids:
+            if self._loop_error is not None:
+                raise self._loop_error
             ev = self._events.get(rid)
             if ev is None:
                 continue
             left = None if deadline is None else deadline - time.monotonic()
             if not ev.wait(left):
+                if self._loop_error is not None:
+                    raise self._loop_error
                 raise TimeoutError(f"request {rid} not finished in time")
             if self._loop_error is not None:
-                raise self._loop_error
+                with self._lock:
+                    has_result = rid in self._results
+                if not has_result:
+                    raise self._loop_error
 
     def result(self, rid: int):
         with self._lock:

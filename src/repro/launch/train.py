@@ -17,13 +17,14 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_shape, get_smoke_config
-from repro.core import get_recipe, parse_policy
+from repro.core import fallback_policy, get_recipe, parse_policy
 from repro.data import Loader, SyntheticCorpus
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.optim import OptConfig
 from repro.parallel.sharding import make_rules
-from repro.train import (LoopConfig, Trainer, init_train_state,
+from repro.train import (FaultPlan, LoopConfig, SentinelConfig,
+                         StabilitySentinel, Trainer, init_train_state,
                          make_eval_step, make_train_step)
 from repro.train.step import batch_shardings, state_shardings
 
@@ -48,6 +49,20 @@ def main():
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--sentinel", action="store_true",
+                    help="guard every step with the stability sentinel "
+                         "(skip-batch / rollback / fallback-window ladder)")
+    ap.add_argument("--sentinel-window", type=int, default=32)
+    ap.add_argument("--sentinel-sigma", type=float, default=6.0)
+    ap.add_argument("--fallback-steps", type=int, default=16,
+                    help="length of the fp/fake-quant window after a rollback")
+    ap.add_argument("--fallback-mode", choices=("fake", "fp"), default="fake",
+                    help="degraded policy during the fallback window: "
+                         "'fake' keeps fake-quant (continual-QAT posture), "
+                         "'fp' drops quantization entirely")
+    ap.add_argument("--fault", default="",
+                    help="deterministic fault-injection spec (overrides the "
+                         "REPRO_FAULT env var), e.g. 'nan_grad@50'")
     args = ap.parse_args()
 
     if args.smoke:
@@ -75,15 +90,36 @@ def main():
     summary = train_path_summary(recipe, getattr(cfg, "n_layers", 0),
                                  opt_cfg=opt)
     print(f"train-path: {summary}")
+    faults = FaultPlan.from_env(args.fault or None)
+    if faults:
+        print(f"fault-plan: {faults.describe()}")
+    sentinel = fallback_step = None
+    if args.sentinel:
+        sentinel = StabilitySentinel(SentinelConfig(
+            window=args.sentinel_window, spike_sigma=args.sentinel_sigma,
+            fallback_steps=args.fallback_steps))
     state = init_train_state(model, jax.random.PRNGKey(0), recipe, opt)
     step_fn = make_train_step(model, recipe, opt, rules=rules,
-                              accum_steps=args.accum)
+                              accum_steps=args.accum,
+                              faults=faults if faults else None,
+                              health=args.sentinel)
     if multi:
         st_sh = state_shardings(rules, model, jax.eval_shape(lambda: state))
         step = jax.jit(step_fn, in_shardings=(st_sh, None, None),
                        out_shardings=(st_sh, None))
     else:
         step = jax.jit(step_fn)
+    if args.sentinel:
+        # the degraded policy keeps the AdamState structure (m1/m2 specs are
+        # preserved) so the two compiled steps hand the state back and forth
+        fb_policy = fallback_policy(
+            recipe, mode="fake_quant" if args.fallback_mode == "fake"
+            else "fp")
+        fb_fn = make_train_step(model, fb_policy, opt, rules=rules,
+                                accum_steps=args.accum, health=True)
+        fallback_step = (jax.jit(fb_fn, in_shardings=(st_sh, None, None),
+                                 out_shardings=(st_sh, None))
+                         if multi else jax.jit(fb_fn))
     eval_step = jax.jit(make_eval_step(model, recipe, rules=rules))
 
     corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
@@ -96,13 +132,19 @@ def main():
                           total_steps=args.steps,
                           ckpt_every=max(args.steps // 3, 50),
                           eval_every=max(args.steps // 5, 20),
-                          log_every=10))
+                          log_every=10),
+                      sentinel=sentinel, fallback_step=fallback_step,
+                      faults=faults if faults else None)
     trainer.install_preemption_handler()
     trainer.maybe_resume()
     for rowd in trainer.run(rng=jax.random.PRNGKey(0)):
         extra = f"  valid={rowd['valid_ce']:.4f}" if "valid_ce" in rowd else ""
+        if rowd.get("fallback"):
+            extra += "  [fallback]"
         print(f"step {rowd['step']:5d}  ce={rowd['ce']:.4f}"
               f"  {rowd['sec_per_step']*1e3:.0f}ms/step{extra}", flush=True)
+    if args.sentinel or faults:
+        print(f"resilience: {trainer.resilience_summary()}")
 
 
 if __name__ == "__main__":

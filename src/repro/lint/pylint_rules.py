@@ -31,6 +31,15 @@ This is a lexical single-file analysis on purpose: it cannot prove a
 helper *called from* traced code is clean (that is what the HLO contracts
 pin down), but it catches the direct form of the bug at review time for
 free, with zero tracing.
+
+A second rule (``swallowed-broad-except``) guards the fault-tolerance
+surface: inside the recovery-path modules (``checkpoint/``, the guarded
+train loop / sentinel / fault harness, the serving scheduler) a bare
+``except:`` or ``except Exception/BaseException`` handler that does not
+re-raise converts *detected* corruption into silent data loss -- exactly
+the failure the hardened checkpoints exist to rule out.  Handlers that
+re-raise (e.g. wrapping into ``CheckpointCorrupt``) pass; deliberate
+park-the-error sites carry ``# lint: except-ok`` on the except line.
 """
 from __future__ import annotations
 
@@ -164,13 +173,74 @@ def lint_source(source: str, filename: str = "<string>") -> List[Finding]:
     return findings
 
 
+EXCEPT_RULE_ID = "swallowed-broad-except"
+_EXCEPT_ALLOW = "# lint: except-ok"
+#: recovery-path modules where a swallowed broad except is a data-loss bug
+EXCEPT_SCOPE = ("checkpoint/", "train/loop.py", "train/sentinel.py",
+                "train/faults.py", "infer/scheduler.py")
+_BROAD_EXC = {"Exception", "BaseException"}
+
+
+def _is_broad_handler(node: ast.ExceptHandler) -> bool:
+    """Bare ``except:``, ``except Exception/BaseException``, or a tuple
+    containing one of them."""
+    t = node.type
+    if t is None:
+        return True
+    if isinstance(t, ast.Tuple):
+        return any(_tail_name(e) in _BROAD_EXC for e in t.elts)
+    return _tail_name(t) in _BROAD_EXC
+
+
+def in_except_scope(path: str) -> bool:
+    p = path.replace(os.sep, "/")
+    return any(seg in p for seg in EXCEPT_SCOPE)
+
+
+def lint_excepts(source: str, filename: str = "<string>") -> List[Finding]:
+    """The ``swallowed-broad-except`` rule for one recovery-path module:
+    flag every broad handler that neither re-raises (a ``raise`` anywhere
+    in the handler body, bare or wrapping) nor carries the
+    ``# lint: except-ok`` marker on its except line."""
+    tree = ast.parse(source, filename=filename)
+    lines = source.splitlines()
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if not _is_broad_handler(node):
+            continue
+        if (0 < node.lineno <= len(lines)
+                and _EXCEPT_ALLOW in lines[node.lineno - 1]):
+            continue
+        if any(isinstance(n, ast.Raise)
+               for stmt in node.body for n in ast.walk(stmt)):
+            continue
+        spelled = "except:" if node.type is None else \
+            f"except {_tail_name(node.type) or '...'}"
+        findings.append(Finding(
+            Severity.ERROR, EXCEPT_RULE_ID, f"line {node.lineno}", filename,
+            f"broad handler `{spelled}` (line {node.lineno}) swallows "
+            "errors on the recovery path: detected corruption or a dying "
+            "writer/scheduler thread must propagate, not vanish.  Narrow "
+            "the exception, re-raise (wrapping is fine), or mark the line "
+            f"`{_EXCEPT_ALLOW}` with a justification"))
+    return findings
+
+
 def lint_path(path: str) -> List[Finding]:
     with open(path, "r", encoding="utf-8") as f:
-        return lint_source(f.read(), filename=path)
+        source = f.read()
+    findings = lint_source(source, filename=path)
+    if in_except_scope(path):
+        findings.extend(lint_excepts(source, filename=path))
+    return findings
 
 
 def lint_tree(root: str) -> List[Finding]:
-    """Lint every ``*.py`` under ``root`` (the CI entry point)."""
+    """Lint every ``*.py`` under ``root`` (the CI entry point): the
+    env-read rule everywhere, the broad-except rule inside
+    :data:`EXCEPT_SCOPE`."""
     findings: List[Finding] = []
     for dirpath, _dirnames, filenames in os.walk(root):
         for fn in sorted(filenames):

@@ -1,10 +1,13 @@
+from repro.train.faults import FaultInjected, FaultPlan
 from repro.train.loop import LoopConfig, Trainer
+from repro.train.sentinel import SentinelConfig, StabilitySentinel, Verdict
 from repro.train.serve import greedy_generate, greedy_generate_reference
 from repro.train.step import (TrainState, batch_shardings, init_train_state,
                               make_eval_step, make_train_step,
                               state_shardings)
 
-__all__ = ["LoopConfig", "Trainer", "greedy_generate",
+__all__ = ["FaultInjected", "FaultPlan", "LoopConfig", "SentinelConfig",
+           "StabilitySentinel", "Trainer", "Verdict", "greedy_generate",
            "greedy_generate_reference", "TrainState", "batch_shardings",
            "init_train_state", "make_eval_step", "make_train_step",
            "state_shardings"]

@@ -1,0 +1,273 @@
+"""Deterministic fault injection for the resilience test/CI gate.
+
+A :class:`FaultPlan` is parsed from a compact spec (the ``REPRO_FAULT``
+environment variable, or passed explicitly by tests and
+``benchmarks/resilience.py``) and injects one of the failure modes the
+stability sentinel and the hardened checkpoint manager must survive:
+
+=====================  =====================================================
+``nan_grad@K``         every gradient leaf becomes NaN on train step K
+                       (injected *inside* the jitted step via ``jnp.where``
+                       on the traced step counter -- bitwise no-op on every
+                       other step, so the compiled artifact is unchanged)
+``sat_grad@K``         gradients scaled by ``factor`` (default 1e6) on step
+                       K: saturates the int8 moment codecs' stored scales
+                       and spikes the global grad norm
+``corrupt_ckpt@N``     the N-th (1-based) completed checkpoint write is
+                       corrupted in place: ``mode=flip`` (default) flips a
+                       payload byte (caught by per-leaf CRC32),
+                       ``mode=truncate`` truncates ``arrays.npz``,
+                       ``mode=manifest`` garbles the manifest (caught by
+                       the digest/commit marker)
+``sigterm_save@N``     SIGTERM is delivered in the *middle* of the N-th
+                       checkpoint write (after arrays hit disk, before the
+                       commit marker) -- proves the atomic tmp-dir protocol
+                       never ships a half-written checkpoint
+``sigterm_run@K``      SIGTERM is delivered right after train step K
+                       completes (preemption-resume tests)
+``dead_sched@N``       the serving scheduler's step thread raises on its
+                       N-th tick (dead-thread watchdog tests)
+=====================  =====================================================
+
+Entries are ``;``-separated; key=val args follow the step after ``:`` and
+are ``,``-separated, e.g.::
+
+    REPRO_FAULT='sat_grad@6:factor=1e7;corrupt_ckpt@1:mode=truncate'
+
+Steps are the 0-based train-loop step for ``*_grad`` / ``sigterm_run``
+(the value of ``state.opt.step`` entering the step), 1-based completed-save
+ordinals for the checkpoint faults, and 0-based scheduler ticks for
+``dead_sched``.  Everything is deterministic: the same spec against the
+same run injects at exactly the same point every time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ENV_VAR = "REPRO_FAULT"
+
+GRAD_KINDS = ("nan_grad", "sat_grad")
+CKPT_KINDS = ("corrupt_ckpt", "sigterm_save")
+KINDS = GRAD_KINDS + CKPT_KINDS + ("sigterm_run", "dead_sched")
+
+_CORRUPT_MODES = ("flip", "truncate", "manifest")
+
+
+class FaultInjected(RuntimeError):
+    """Raised by host-side faults that simulate a hard crash (the scheduler
+    step-thread death).  Deliberately NOT a subclass of anything the guarded
+    code paths catch."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    kind: str
+    at: int                       # step / save ordinal / scheduler tick
+    args: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def arg(self, key: str, default: str) -> str:
+        return self.args.get(key, default)
+
+    def describe(self) -> str:
+        s = f"{self.kind}@{self.at}"
+        if self.args:
+            s += ":" + ",".join(f"{k}={v}" for k, v in sorted(self.args.items()))
+        return s
+
+
+class FaultPlan:
+    """A parsed, immutable set of faults plus the mutable injection state
+    (how many saves have happened, whether a one-shot fault already fired)."""
+
+    def __init__(self, faults: Tuple[Fault, ...] = ()):
+        self.faults = tuple(faults)
+        self._saves_completed = 0
+        self._fired: List[str] = []          # descriptions, in firing order
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def parse(cls, spec: Optional[str]) -> "FaultPlan":
+        faults = []
+        for entry in (spec or "").replace("\n", ";").split(";"):
+            entry = entry.strip()
+            if not entry:
+                continue
+            if "@" not in entry:
+                raise ValueError(
+                    f"bad fault entry {entry!r} (want kind@step[:k=v,...])")
+            kind, rest = entry.split("@", 1)
+            kind = kind.strip()
+            if kind not in KINDS:
+                raise ValueError(f"unknown fault kind {kind!r}; kinds: {KINDS}")
+            args: Dict[str, str] = {}
+            if ":" in rest:
+                at_s, arg_s = rest.split(":", 1)
+                for kv in arg_s.split(","):
+                    kv = kv.strip()
+                    if not kv:
+                        continue
+                    if "=" not in kv:
+                        raise ValueError(f"bad fault arg {kv!r} in {entry!r} "
+                                         "(want key=val)")
+                    k, v = kv.split("=", 1)
+                    args[k.strip()] = v.strip()
+            else:
+                at_s = rest
+            try:
+                at = int(at_s.strip())
+            except ValueError:
+                raise ValueError(f"bad fault step {at_s!r} in {entry!r}") \
+                    from None
+            mode = args.get("mode")
+            if kind == "corrupt_ckpt" and mode is not None \
+                    and mode not in _CORRUPT_MODES:
+                raise ValueError(f"unknown corrupt_ckpt mode {mode!r}; "
+                                 f"modes: {_CORRUPT_MODES}")
+            faults.append(Fault(kind, at, args))
+        return cls(tuple(faults))
+
+    @classmethod
+    def from_env(cls, spec: Optional[str] = None) -> "FaultPlan":
+        """Plan from an explicit spec when given (CLI flag), else from the
+        ``REPRO_FAULT`` environment variable."""
+        if spec is None:
+            spec = os.environ.get(ENV_VAR)
+        return cls.parse(spec)
+
+    # -- introspection -----------------------------------------------------
+
+    def __bool__(self) -> bool:
+        return bool(self.faults)
+
+    def describe(self) -> str:
+        return ";".join(f.describe() for f in self.faults) or "none"
+
+    @property
+    def fired(self) -> List[str]:
+        """Faults that actually injected, in order -- the resilience gate
+        asserts every planned fault fired."""
+        return list(self._fired)
+
+    def _of(self, *kinds: str) -> List[Fault]:
+        return [f for f in self.faults if f.kind in kinds]
+
+    def _mark(self, fault: Fault) -> None:
+        self._fired.append(fault.describe())
+
+    # -- in-trace gradient faults ------------------------------------------
+
+    def has_grad_faults(self) -> bool:
+        return bool(self._of(*GRAD_KINDS))
+
+    def apply_grads(self, step: jnp.ndarray, grads):
+        """Poison the gradient tree when the traced ``step`` counter matches
+        a planned grad fault.  A single scalar multiplier is built from the
+        (static) plan and broadcast into every leaf, so off-fault steps
+        multiply by 1.0 and XLA folds the whole thing away when the plan is
+        empty.  Firing is recorded host-side by :meth:`note_step` (this
+        body runs once, at trace time)."""
+        faults = self._of(*GRAD_KINDS)
+        if not faults:
+            return grads
+        mult = jnp.float32(1.0)
+        for f in faults:
+            if f.kind == "nan_grad":
+                hit = jnp.float32(jnp.nan)
+            else:
+                hit = jnp.float32(float(f.arg("factor", "1e6")))
+            mult = jnp.where(step == f.at, hit, mult)
+        return jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * mult).astype(g.dtype), grads)
+
+    def grad_fault_steps(self) -> List[int]:
+        return sorted(f.at for f in self._of(*GRAD_KINDS))
+
+    def note_step(self, step: int) -> None:
+        """Host-side bookkeeping after train step ``step`` ran: record grad
+        faults whose step just executed, and deliver ``sigterm_run``."""
+        for f in self._of(*GRAD_KINDS):
+            if f.at == step:
+                self._mark(f)
+        for f in self._of("sigterm_run"):
+            if f.at == step and f.describe() not in self._fired:
+                self._mark(f)
+                os.kill(os.getpid(), signal.SIGTERM)
+
+    # -- checkpoint faults -------------------------------------------------
+
+    def install(self, manager) -> None:
+        """Bind the checkpoint faults to a ``CheckpointManager`` via its
+        ``on_mid_write`` / ``on_after_write`` test hooks."""
+        if not self._of(*CKPT_KINDS):
+            return
+        manager.on_mid_write = self._mid_write
+        manager.on_after_write = self._after_write
+
+    def _mid_write(self, step: int) -> None:
+        # called after the array payload is on disk, before the manifest /
+        # commit marker: the atomicity window a preemption can land in
+        ordinal = self._saves_completed + 1
+        for f in self._of("sigterm_save"):
+            if f.at == ordinal and f.describe() not in self._fired:
+                self._mark(f)
+                os.kill(os.getpid(), signal.SIGTERM)
+
+    def _after_write(self, step: int, path: str) -> None:
+        self._saves_completed += 1
+        for f in self._of("corrupt_ckpt"):
+            if f.at == self._saves_completed:
+                self._mark(f)
+                corrupt_checkpoint(path, f.arg("mode", "flip"))
+
+    # -- scheduler faults --------------------------------------------------
+
+    def scheduler_hook(self) -> Optional[Callable[[int], None]]:
+        """Hook for ``infer.scheduler.Scheduler.fault_hook``: raises
+        :class:`FaultInjected` on the planned tick (simulating a crashed
+        background step thread)."""
+        faults = self._of("dead_sched")
+        if not faults:
+            return None
+
+        def hook(tick: int) -> None:
+            for f in faults:
+                if f.at == tick and f.describe() not in self._fired:
+                    self._mark(f)
+                    raise FaultInjected(
+                        f"injected scheduler-thread death at tick {tick}")
+        return hook
+
+
+def corrupt_checkpoint(path: str, mode: str = "flip") -> str:
+    """Corrupt one on-disk checkpoint directory in place (test utility and
+    the ``corrupt_ckpt`` fault body).  Returns the damaged file's path."""
+    arrays = os.path.join(path, "arrays.npz")
+    manifest = os.path.join(path, "manifest.json")
+    if mode == "flip":
+        with open(arrays, "r+b") as f:
+            f.seek(0, os.SEEK_END)
+            size = f.tell()
+            # flip a byte well inside the payload region (past the zip
+            # local-file headers) so np.load still parses the container
+            f.seek(max(size // 2, 0))
+            b = f.read(1)
+            f.seek(max(size // 2, 0))
+            f.write(bytes([b[0] ^ 0xFF]))
+        return arrays
+    if mode == "truncate":
+        size = os.path.getsize(arrays)
+        with open(arrays, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+        return arrays
+    if mode == "manifest":
+        with open(manifest, "w") as f:
+            f.write('{"step": -1, "leaves": {}')      # invalid json
+        return manifest
+    raise ValueError(f"unknown corrupt mode {mode!r}; modes: {_CORRUPT_MODES}")

@@ -1,12 +1,23 @@
 """Training loop with fault tolerance.
 
 * periodic + preemption-triggered checkpointing (SIGTERM -> save & exit);
-* resume from latest checkpoint (params, optimizer, loader state);
+* resume from the newest *intact* checkpoint (params, optimizer, loader
+  state) -- restore falls back through the rotation past corrupt or
+  half-written checkpoints;
 * deterministic data sharding (step-keyed) so restarts and elastic
   rescaling replay the exact stream;
 * periodic validation on a disjoint split;
 * straggler posture: the step itself is a single pjit program (bulk-
-  synchronous); recovery is checkpoint-restart (DESIGN.md Section 4).
+  synchronous); recovery is checkpoint-restart (DESIGN.md Section 4);
+* **guarded stepping** (opt-in via ``sentinel=``): every step's metrics are
+  judged by a :class:`~repro.train.sentinel.StabilitySentinel` before the
+  update is committed, and its verdict drives the recovery ladder --
+  skip-batch (discard the poisoned update), rollback (restore the newest
+  intact checkpoint and rewind the loop), and a temporary fallback window
+  (the ``fallback_step``-compiled fp/fake-quant path runs for N steps
+  before the int8 path re-engages).  ``resilience_summary()`` reports what
+  the guards did.  Deterministic fault injection for all of it lives in
+  ``train/faults.py`` (``REPRO_FAULT``).
 """
 from __future__ import annotations
 
@@ -16,11 +27,12 @@ import time
 from typing import Callable, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointCorrupt, CheckpointManager
 from repro.data import Loader
+from repro.train.faults import FaultPlan
+from repro.train.sentinel import StabilitySentinel, Verdict
 from repro.train.step import TrainState
 
 
@@ -39,7 +51,10 @@ class Trainer:
                  ckpt: Optional[CheckpointManager] = None,
                  loop_cfg: Optional[LoopConfig] = None,
                  valid_loader: Optional[Loader] = None,
-                 metadata: Optional[Dict] = None):
+                 metadata: Optional[Dict] = None,
+                 sentinel: Optional[StabilitySentinel] = None,
+                 fallback_step: Optional[Callable] = None,
+                 faults: Optional[FaultPlan] = None):
         self.train_step = train_step
         self.eval_step = eval_step
         self.state = state
@@ -49,7 +64,15 @@ class Trainer:
         self.cfg = loop_cfg or LoopConfig(total_steps=100)
         self.metadata = metadata or {}
         self.history: List[Dict[str, float]] = []
+        self.sentinel = sentinel
+        self.fallback_step = fallback_step
+        self.faults = faults
+        if faults is not None and ckpt is not None:
+            faults.install(ckpt)
         self._preempted = False
+        self._start_step: Optional[int] = None
+        self._counters = {"saves": 0, "restores": 0, "skipped_batches": 0,
+                          "rollback_failures": 0}
 
     # -- fault tolerance ----------------------------------------------------
 
@@ -59,13 +82,18 @@ class Trainer:
         signal.signal(signal.SIGTERM, handler)
 
     def maybe_resume(self) -> int:
+        """Restore the newest intact checkpoint (falling back through the
+        rotation past corrupt ones) and resume its data stream.  Returns the
+        loop step to resume from (0 when nothing restorable exists)."""
         if self.ckpt is None:
             return 0
-        step = self.ckpt.latest_step()
-        if step is None:
+        try:
+            self.state, meta, step = self.ckpt.restore_latest(self.state)
+        except CheckpointCorrupt:
             return 0
-        self.state, meta = self.ckpt.restore(step, self.state)
         self.loader.load_state_dict(meta.get("loader", {"step": step}))
+        self._counters["restores"] += 1
+        self._start_step = step
         return step
 
     def _save(self, step: int) -> None:
@@ -74,32 +102,88 @@ class Trainer:
         meta = dict(self.metadata)
         meta["loader"] = self.loader.state_dict()
         self.ckpt.save(step, self.state, metadata=meta)
+        self._counters["saves"] += 1
+
+    def _rollback(self) -> Optional[int]:
+        """Recovery ladder rung 2: restore the newest intact checkpoint.
+        Returns the loop step to rewind to, or None when nothing is
+        restorable (the caller degrades to skip-batch)."""
+        if self.ckpt is None:
+            self._counters["rollback_failures"] += 1
+            return None
+        self.ckpt.wait()                    # surface async-write errors now
+        try:
+            self.state, meta, step = self.ckpt.restore_latest(self.state)
+        except CheckpointCorrupt:
+            self._counters["rollback_failures"] += 1
+            return None
+        self.loader.load_state_dict(meta.get("loader", {"step": step}))
+        self._counters["restores"] += 1
+        return step
 
     # -- loop ----------------------------------------------------------------
 
     def run(self, rng: Optional[jax.Array] = None) -> List[Dict[str, float]]:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
-        start = int(self.state.opt.step)
+        start = (self._start_step if self._start_step is not None
+                 else int(self.state.opt.step))
         t0 = time.time()
-        for step in range(start, self.cfg.total_steps):
+        executed = 0                        # steps actually run (incl. replays)
+        step = start
+        while step < self.cfg.total_steps:
             batch = next(self.loader)
             # step-keyed rng: resume replays the identical stream
             sub = jax.random.fold_in(rng, step)
-            self.state, metrics = self.train_step(self.state, batch, sub)
-            if (step + 1) % self.cfg.log_every == 0 or step == start:
+            guarded = self.sentinel is not None
+            use_fb = (guarded and self.fallback_step is not None
+                      and self.sentinel.in_fallback(step))
+            step_fn = self.fallback_step if use_fb else self.train_step
+            new_state, metrics = step_fn(self.state, batch, sub)
+            executed += 1
+            if guarded:
+                # the float() casts force a host sync -- the price of
+                # judging the step before committing it
                 row = {k: float(v) for k, v in metrics.items()}
+                verdict = self.sentinel.observe(step, row)
+            else:
+                row = None
+                verdict = Verdict.OK
+            if self.faults is not None:
+                self.faults.note_step(step)     # sigterm_run delivery point
+            if verdict is Verdict.OK:
+                self.state = new_state
+            elif verdict is Verdict.SKIP:
+                # rung 1: drop the poisoned update, keep the pre-step state;
+                # the batch is consumed (skip-batch semantics)
+                self._counters["skipped_batches"] += 1
+            else:                               # Verdict.ROLLBACK
+                at = self._rollback()
+                if at is None:
+                    # nothing to roll back to: degrade to skip-batch (the
+                    # sentinel has already armed the fallback window)
+                    self._counters["skipped_batches"] += 1
+                else:
+                    self.sentinel.notify_rollback(at)
+                    step = at
+                    continue                    # rewound: no log/save tick
+            if (step + 1) % self.cfg.log_every == 0 or step == start:
+                if row is None:
+                    row = {k: float(v) for k, v in metrics.items()}
                 row["step"] = step + 1
-                row["sec_per_step"] = (time.time() - t0) / max(
-                    step + 1 - start, 1)
+                row["sec_per_step"] = (time.time() - t0) / max(executed, 1)
+                if use_fb:
+                    row["fallback"] = 1.0
                 if (self.eval_step is not None and self.valid_loader is not None
                         and (step + 1) % self.cfg.eval_every == 0):
                     row["valid_ce"] = self.evaluate()
                 self.history.append(row)
-            if self.ckpt and (step + 1) % self.cfg.ckpt_every == 0:
+            if self.ckpt and (step + 1) % self.cfg.ckpt_every == 0 \
+                    and verdict is Verdict.OK:
                 self._save(step + 1)
             if self._preempted:
                 self._save(step + 1)
                 break
+            step += 1
         if self.ckpt:
             self.ckpt.wait()
         return self.history
@@ -111,3 +195,18 @@ class Trainer:
             m = self.eval_step(self.state.params, batch)
             losses.append(float(m["ce"]))
         return float(np.mean(losses))
+
+    # -- reporting -----------------------------------------------------------
+
+    def resilience_summary(self) -> Dict[str, object]:
+        """What the fault-tolerance machinery did this run: loop counters
+        (saves/restores/skips), the sentinel's ladder accounting, and which
+        planned faults actually fired."""
+        out: Dict[str, object] = dict(self._counters)
+        out["preempted"] = self._preempted
+        if self.sentinel is not None:
+            out["sentinel"] = self.sentinel.summary()
+        if self.faults is not None:
+            out["faults_planned"] = self.faults.describe()
+            out["faults_fired"] = self.faults.fired
+        return out

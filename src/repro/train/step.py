@@ -96,11 +96,29 @@ def init_train_state(model: Model, key: jax.Array, recipe,
                       opt=init_adam_state(params, policy, opt_cfg))
 
 
+def _health_err_spec(policy: QuantPolicy):
+    """Spec the ``grad_qerr`` drift counter measures against: the policy
+    default's gradient spec when one exists (that is the codec the backward
+    actually injects), else its activation spec, else nothing."""
+    r = policy.default
+    if r is None:
+        return None
+    return r.grads if r.grads is not None else r.acts
+
+
 def make_train_step(model: Model, recipe, opt_cfg: OptConfig, rules=None,
-                    accum_steps: int = 1):
+                    accum_steps: int = 1, faults=None, health: bool = False):
     """Gradient step with optional microbatch accumulation (accum_steps > 1
     splits the leading batch dim; gradients are averaged -- communication for
-    the DP reduction is deferred to the last microbatch by XLA)."""
+    the DP reduction is deferred to the last microbatch by XLA).
+
+    ``faults`` (a ``train.faults.FaultPlan``) injects its planned gradient
+    faults in-trace, keyed on the traced ``state.opt.step`` counter --
+    bitwise no-op on every other step.  ``health=True`` adds the sentinel's
+    quantization-health counters to the metrics (``grad_sat``: gradient
+    mass exceeding the stored int8 Adam-moment scales; ``grad_qerr``:
+    relative quantization error of the gradient under the policy's
+    grad/act spec) -- one extra pass over the gradient leaves."""
     policy = as_policy(recipe)
 
     def constrain_like_params(tree, ref):
@@ -153,6 +171,14 @@ def make_train_step(model: Model, recipe, opt_cfg: OptConfig, rules=None,
             loss = loss / accum_steps
             metrics = {"ce": loss, "loss": loss}
 
+        if faults is not None and faults.has_grad_faults():
+            grads = faults.apply_grads(state.opt.step, grads)
+        if health:
+            from repro.core.diagnostics import grad_quant_health
+            metrics = dict(metrics)
+            metrics.update(grad_quant_health(
+                grads, state.opt.m1, policy.adam_m1,
+                _health_err_spec(policy), beta1=opt_cfg.b1))
         new_params, new_opt, stats = adamw_update(
             state.params, grads, state.opt, opt_cfg, policy)
         metrics = dict(metrics)

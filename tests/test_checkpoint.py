@@ -119,3 +119,160 @@ def test_preemption_saves(tmp_path):
     t._preempted = True           # simulate SIGTERM delivery
     t.run(rng=KEY)
     assert len(mgr.all_steps()) == 1   # emergency checkpoint written
+
+
+# ---------------------------------------------------------------------------
+# Hardened-checkpoint properties: verification, corruption fallback, async
+# error propagation, rotation-vs-restore, atomicity under mid-save faults
+# ---------------------------------------------------------------------------
+
+def test_corruption_detected_and_rotation_falls_back(tmp_path):
+    """A flipped payload byte fails CRC verification; restore_latest walks
+    past the damaged newest checkpoint to the previous intact one."""
+    from repro.checkpoint import CheckpointCorrupt
+    from repro.train.faults import corrupt_checkpoint
+
+    mgr = CheckpointManager(str(tmp_path))
+    # large enough that the flipped mid-file byte lands in payload data,
+    # not in zip/npy header padding
+    t1 = {"a": jnp.arange(4096.0).reshape(64, 64),
+          "nested": {"b": jnp.ones((5,), jnp.int32)}}
+    t2 = jax.tree_util.tree_map(lambda x: x + 1, t1)
+    mgr.save(1, t1)
+    mgr.save(2, t2)
+    corrupt_checkpoint(mgr._ckpt_dir(2), mode="flip")
+    with pytest.raises(CheckpointCorrupt):
+        mgr.verify(2)
+    got, _, step = mgr.restore_latest(
+        jax.tree_util.tree_map(jnp.zeros_like, t1))
+    assert step == 1
+    for a, b in zip(jax.tree_util.tree_leaves(t1),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("mode", ["truncate", "manifest"])
+def test_truncation_and_manifest_damage_detected(tmp_path, mode):
+    from repro.checkpoint import CheckpointCorrupt
+    from repro.train.faults import corrupt_checkpoint
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    corrupt_checkpoint(mgr._ckpt_dir(1), mode=mode)
+    with pytest.raises(CheckpointCorrupt):
+        mgr.verify(1)
+    with pytest.raises(CheckpointCorrupt):
+        mgr.restore_latest(jax.tree_util.tree_map(jnp.zeros_like, _tree()))
+
+
+def test_missing_commit_marker_rejected(tmp_path):
+    """The commit marker certifies every earlier byte: a checkpoint dir
+    without one (writer died between payload and commit) must not load."""
+    from repro.checkpoint import CheckpointCorrupt
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    os.remove(os.path.join(mgr._ckpt_dir(1), "COMMIT"))
+    with pytest.raises(CheckpointCorrupt):
+        mgr.verify(1)
+
+
+def test_async_write_error_propagates_to_next_call(tmp_path):
+    """A background-write failure must surface on the next save()/wait(),
+    not vanish with the daemon thread."""
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+
+    def boom(step):
+        raise RuntimeError("disk on fire")
+
+    mgr.on_mid_write = boom
+    mgr.save(1, _tree())                 # starts the doomed background write
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        mgr.save(2, _tree())             # joins + re-raises before writing
+    mgr.on_mid_write = None
+    mgr.save(3, _tree())                 # error already consumed; clean write
+    mgr.wait()
+    assert mgr.all_steps() == [3]
+
+
+def test_rotation_never_deletes_checkpoint_being_read(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=1)
+    mgr.save(1, _tree())
+    mgr._reading.add(1)                  # simulate a restore() in flight
+    mgr.save(2, _tree())
+    mgr.save(3, _tree())
+    assert os.path.isdir(mgr._ckpt_dir(1))       # held open: survives
+    assert not os.path.isdir(mgr._ckpt_dir(2))   # normal rotation victim
+    mgr._reading.discard(1)
+    mgr.save(4, _tree())                 # next rotation collects it
+    assert mgr.all_steps() == [4]
+
+
+def test_int8_qstate_tree_roundtrips_bit_exact(tmp_path):
+    """Integer optimizer-state sidecar trees (int8 payload + fp32 scale/zero)
+    are ordinary leaves: restore returns the stored bytes, no casts."""
+    from repro.core import QState
+
+    k1, k2 = jax.random.split(KEY)
+    tree = {"m1": QState(
+                q=jax.random.randint(k1, (8, 16), -128, 128).astype(jnp.int8),
+                scale=jax.random.uniform(k2, (8, 1), jnp.float32),
+                zero=jnp.zeros((8, 1), jnp.float32)),
+            "w": jnp.linspace(-1.0, 1.0, 32).reshape(4, 8)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    got, _ = mgr.restore(1, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mid_save_abort_leaves_no_partial_checkpoint(tmp_path):
+    """A writer dying between payload and commit leaves only a temp dir:
+    nothing restorable, prune_incomplete cleans it, the final path never
+    appears (atomic-rename contract)."""
+    from repro.checkpoint import CheckpointCorrupt
+
+    mgr = CheckpointManager(str(tmp_path))
+
+    def die(step):
+        raise KeyboardInterrupt("preempted mid-save")
+
+    mgr.on_mid_write = die
+    with pytest.raises(KeyboardInterrupt):
+        mgr.save(1, _tree())
+    assert mgr.all_steps() == []
+    assert not os.path.isdir(mgr._ckpt_dir(1))
+    with pytest.raises(CheckpointCorrupt):
+        mgr.restore_latest(jax.tree_util.tree_map(jnp.zeros_like, _tree()))
+    leftovers = mgr.prune_incomplete()
+    assert len(leftovers) == 1 and ".tmp" in leftovers[0]
+    assert os.listdir(str(tmp_path)) == []
+
+
+def test_sigterm_mid_save_keeps_atomicity(tmp_path):
+    """The fault harness's sigterm_save lands in the payload/commit window;
+    with SIGTERM mapped to an exception the write aborts and the rotation
+    still holds only intact checkpoints."""
+    import signal
+    from repro.train import FaultPlan
+
+    plan = FaultPlan.parse("sigterm_save@1")
+    mgr = CheckpointManager(str(tmp_path))
+    plan.install(mgr)
+
+    def raise_term(signum, frame):
+        raise RuntimeError("SIGTERM")
+
+    old = signal.signal(signal.SIGTERM, raise_term)
+    try:
+        with pytest.raises(RuntimeError, match="SIGTERM"):
+            mgr.save(1, _tree())
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    assert mgr.all_steps() == []                  # nothing half-written
+    assert plan.fired == ["sigterm_save@1"]
+    mgr.save(2, _tree())                          # fault is one-shot
+    assert mgr.all_steps() == [2]
+    mgr.restore(2, jax.tree_util.tree_map(jnp.zeros_like, _tree()))

@@ -363,3 +363,56 @@ def test_contract_prepared_fires_on_unprepared_weights(gpt2):
         lambda p, s, t, q: model.decode(p, s, t, q, policy=policy)
     ).lower(params, state, tok, pos).compile().as_text()
     assert run_rules(hlo, [RuleSpec("no-weight-quant-rounds")])
+
+
+# ---------------------------------------------------------------------------
+# AST broad-except lint (recovery-path modules)
+# ---------------------------------------------------------------------------
+
+def test_except_lint_flags_swallowed_broad_handler():
+    from repro.lint.pylint_rules import lint_excepts
+    src = ("def restore():\n"
+           "    try:\n"
+           "        load()\n"
+           "    except Exception:\n"
+           "        pass\n")
+    found = lint_excepts(src)
+    assert len(found) == 1 and "swallows" in found[0].message
+    bare = ("def f():\n"
+            "    try:\n"
+            "        g()\n"
+            "    except:\n"
+            "        return None\n")
+    assert len(lint_excepts(bare)) == 1
+
+
+def test_except_lint_passes_reraise_marker_and_narrow():
+    from repro.lint.pylint_rules import lint_excepts
+    wraps = ("def verify():\n"
+             "    try:\n"
+             "        load()\n"
+             "    except Exception as e:\n"
+             "        raise Corrupt(str(e)) from e\n")
+    assert lint_excepts(wraps) == []
+    marked = ("def writer():\n"
+              "    try:\n"
+              "        write()\n"
+              "    except BaseException as e:  # lint: except-ok\n"
+              "        park(e)\n")
+    assert lint_excepts(marked) == []
+    narrow = ("def f():\n"
+              "    try:\n"
+              "        g()\n"
+              "    except (OSError, ValueError):\n"
+              "        return None\n")
+    assert lint_excepts(narrow) == []
+
+
+def test_except_lint_scope_covers_recovery_modules():
+    from repro.lint.pylint_rules import in_except_scope
+    assert in_except_scope("src/repro/checkpoint/manager.py")
+    assert in_except_scope("src/repro/train/loop.py")
+    assert in_except_scope("src/repro/train/faults.py")
+    assert in_except_scope("src/repro/infer/scheduler.py")
+    assert not in_except_scope("src/repro/core/quantizer.py")
+    assert not in_except_scope("benchmarks/run.py")

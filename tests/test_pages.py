@@ -349,3 +349,74 @@ def test_scheduler_detokenizer_emits_text(gpt2):
     eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4))
     [r] = eng.run()
     assert r.text == "|".join(map(str, r.tokens))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler robustness: per-request deadlines + the dead-loop watchdog
+# ---------------------------------------------------------------------------
+
+def test_running_request_timeout_frees_slot(gpt2):
+    """A request whose deadline expires mid-decode is cancelled through the
+    normal finish path: reason "timeout", partial tokens kept, slot freed
+    so the engine is immediately reusable."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=256)
+    rid = eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=200,
+                             timeout_s=0.01))
+    [r] = eng.run()
+    assert r.request_id == rid
+    assert r.finish_reason == "timeout"
+    assert len(r.tokens) < 200                    # cut off, not completed
+    assert not eng._running and len(eng._free) == 1
+    assert eng.scheduler.timeouts == 1
+    # the engine is healthy afterwards: a normal request completes
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=3))
+    [r2] = eng.run()
+    assert r2.finish_reason == "length" and len(r2.tokens) == 3
+
+
+def test_queued_request_timeout_cancelled_before_admission(gpt2):
+    """With every slot busy, a queued request past its deadline is removed
+    by the sweep before it is ever admitted (no tokens generated)."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=256)
+    r1 = eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=64))
+    r2 = eng.submit(Request(tokens=[4, 5, 6], max_new_tokens=64,
+                            timeout_s=0.01))
+    by_id = {r.request_id: r for r in eng.run()}
+    assert by_id[r1].finish_reason == "length"
+    assert by_id[r2].finish_reason == "timeout"
+    assert by_id[r2].tokens == []                 # never ran
+    assert eng.scheduler.timeouts == 1
+
+
+def test_timeout_on_paged_engine_frees_pages(gpt2):
+    cfg, model, params = gpt2
+    eng = Engine(model, params, "kv_cache=a8t,*=w8c", max_slots=2,
+                 max_seq=64, paged=True, page_size=8)
+    free0 = eng.pool.free_pages
+    eng.submit(Request(tokens=list(range(1, 20)), max_new_tokens=40,
+                       timeout_s=0.01))
+    [r] = eng.run()
+    assert r.finish_reason == "timeout"
+    assert eng.pool.free_pages == free0           # every page returned
+
+
+def test_dead_scheduler_loop_wakes_waiters(gpt2):
+    """If the background scheduling thread dies, blocked wait() callers are
+    woken by the watchdog and re-raise the loop's exception; stop()
+    re-raises it too.  Without the watchdog both would hang."""
+    from repro.train import FaultInjected, FaultPlan
+
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=2, max_seq=64)
+    sched = eng.scheduler
+    plan = FaultPlan.parse("dead_sched@2")
+    sched.fault_hook = plan.scheduler_hook()
+    sched.start()
+    rid = eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=50))
+    with pytest.raises(FaultInjected):
+        sched.wait([rid], timeout=60)
+    with pytest.raises(FaultInjected):
+        sched.stop()
+    assert plan.fired == ["dead_sched@2"]

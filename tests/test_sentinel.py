@@ -1,0 +1,368 @@
+"""Stability sentinel, fault injection, and the guarded train loop.
+
+Unit layer: FaultPlan parsing, the in-jit gradient fault, the sentinel's
+detection rules and escalation ladder, fallback_policy structure compat.
+Integration layer: a real (smoke-config) trainer driven through the full
+recovery ladder -- NaN gradients injected mid-run, skip, rollback to the
+checkpoint, fp/fake fallback window, re-engage -- and SIGTERM preemption
+resume producing a bit-identical loss curve.
+"""
+import math
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core import Granularity, QuantSpec, beyond_paper_recipe, \
+    fallback_policy
+from repro.core.qadam import QState
+from repro.data import Loader, SyntheticCorpus
+from repro.models import build_model
+from repro.optim import OptConfig, init_adam_state
+from repro.train import (FaultPlan, LoopConfig, SentinelConfig,
+                         StabilitySentinel, Trainer, Verdict,
+                         init_train_state, make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan parsing + in-jit injection
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse():
+    plan = FaultPlan.parse(
+        "nan_grad@3; sat_grad@5:factor=1e7 ;corrupt_ckpt@1:mode=truncate;"
+        "sigterm_save@2;dead_sched@4")
+    kinds = [f.kind for f in plan.faults]
+    assert kinds == ["nan_grad", "sat_grad", "corrupt_ckpt", "sigterm_save",
+                     "dead_sched"]
+    assert plan.faults[1].arg("factor", "1e6") == "1e7"
+    assert plan.faults[2].arg("mode", "flip") == "truncate"
+    assert plan.has_grad_faults()
+    assert plan.grad_fault_steps() == [3, 5]
+    assert bool(plan)
+    assert not bool(FaultPlan.parse(""))
+    assert not bool(FaultPlan.parse(None))
+
+
+@pytest.mark.parametrize("bad", [
+    "nan_grad",                     # no @step
+    "frobnicate@3",                 # unknown kind
+    "nan_grad@x",                   # non-integer step
+    "nan_grad@3:factor",            # arg without =
+    "corrupt_ckpt@1:mode=shred",    # unknown corrupt mode
+])
+def test_fault_plan_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(bad)
+
+
+def test_grad_fault_fires_only_at_its_step():
+    plan = FaultPlan.parse("nan_grad@3;sat_grad@5:factor=10")
+    grads = {"w": jnp.ones((2, 2), jnp.float32)}
+    poisoned = jax.jit(lambda s, g: plan.apply_grads(s, g))
+    ok = poisoned(jnp.int32(2), grads)["w"]
+    np.testing.assert_array_equal(np.asarray(ok), 1.0)   # bitwise no-op
+    nan = poisoned(jnp.int32(3), grads)["w"]
+    assert np.all(np.isnan(np.asarray(nan)))
+    sat = poisoned(jnp.int32(5), grads)["w"]
+    np.testing.assert_array_equal(np.asarray(sat), 10.0)
+
+
+def test_note_step_marks_fired_and_delivers_sigterm():
+    plan = FaultPlan.parse("nan_grad@2;sigterm_run@4")
+    hits = []
+    old = signal.signal(signal.SIGTERM, lambda *_: hits.append(True))
+    try:
+        for s in range(6):
+            plan.note_step(s)
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    assert hits == [True]
+    assert plan.fired == ["nan_grad@2", "sigterm_run@4"]
+
+
+# ---------------------------------------------------------------------------
+# Sentinel detection + ladder (pure host-side units)
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(window=16, min_history=4, spike_sigma=6.0, spike_floor=0.5,
+                skip_limit=2, fallback_steps=8, max_rollbacks=2)
+    base.update(kw)
+    return SentinelConfig(**base)
+
+
+def _feed_healthy(s, n, start=0, loss=2.0, gnorm=1.0, sat=0.05):
+    for i in range(n):
+        assert s.observe(start + i, {"loss": loss, "grad_norm": gnorm,
+                                     "grad_sat": sat}) is Verdict.OK
+    return start + n
+
+
+def test_sentinel_healthy_run_is_all_ok():
+    s = StabilitySentinel(_cfg())
+    _feed_healthy(s, 20)
+    assert s.counts["spikes"] == 0
+    assert not s.in_fallback(20)
+
+
+def test_sentinel_nonfinite_skips_immediately():
+    s = StabilitySentinel(_cfg())
+    assert s.observe(0, {"loss": float("nan")}) is Verdict.SKIP
+    assert s.observe(1, {"loss": 2.0,
+                         "grad_norm": float("inf")}) is Verdict.SKIP
+    assert s.spike_reasons == {"nonfinite-loss": 1, "nonfinite-grad": 1}
+
+
+def test_sentinel_loss_spike_needs_history():
+    # no history yet: a big (finite) loss is not judged...
+    s = StabilitySentinel(_cfg(min_history=4))
+    assert s.observe(0, {"loss": 50.0}) is Verdict.OK
+    # ...but with a healthy window behind it, the same loss is a spike
+    s = StabilitySentinel(_cfg(min_history=4))
+    step = _feed_healthy(s, 6)
+    assert s.observe(step, {"loss": 50.0}) is Verdict.SKIP
+    assert "loss-spike" in s.spike_reasons
+
+
+def test_sentinel_grad_norm_and_saturation_triggers():
+    s = StabilitySentinel(_cfg(sat_threshold=0.25))
+    step = _feed_healthy(s, 6)          # sat baseline 0.05 in the window
+    assert s.observe(step, {"loss": 2.0,
+                            "grad_norm": 100.0}) is Verdict.SKIP
+    assert s.observe(step + 1, {"loss": 2.0, "grad_norm": 1.0,
+                                "grad_sat": 0.5}) is Verdict.SKIP
+    assert set(s.spike_reasons) == {"grad-norm-spike", "moment-saturation"}
+
+
+def test_sentinel_saturation_needs_step_change_over_ambient():
+    # a warm-up plateau above the absolute floor is NOT a spike: the rate
+    # must also jump sat_factor-x over its own rolling median
+    s = StabilitySentinel(_cfg(sat_threshold=0.25))
+    step = _feed_healthy(s, 6, sat=0.3)
+    assert s.observe(step, {"loss": 2.0, "grad_norm": 1.0,
+                            "grad_sat": 0.35}) is Verdict.OK
+    assert s.observe(step + 1, {"loss": 2.0, "grad_norm": 1.0,
+                                "grad_sat": 0.9}) is Verdict.SKIP
+    assert s.spike_reasons == {"moment-saturation": 1}
+    # unarmed window (no sat history yet): never judged
+    s2 = StabilitySentinel(_cfg())
+    assert s2.observe(0, {"loss": 2.0, "grad_sat": 0.9}) is Verdict.OK
+
+
+def test_sentinel_escalates_after_skip_limit_then_fallback_absorbs():
+    s = StabilitySentinel(_cfg(skip_limit=2, fallback_steps=8))
+    step = _feed_healthy(s, 6)
+    bad = {"loss": float("nan")}
+    assert s.observe(step, bad) is Verdict.SKIP          # spike 1
+    assert s.observe(step + 1, bad) is Verdict.SKIP      # spike 2
+    v = s.observe(step + 2, bad)                         # spike 3 > limit
+    assert v is Verdict.ROLLBACK
+    assert s.in_fallback(step + 3)
+    # inside the fallback window further spikes only skip (no thrash)
+    assert s.observe(step + 3, bad) is Verdict.SKIP
+    assert s.counts["rollbacks"] == 1
+    # the window closes on schedule
+    assert not s.in_fallback(step + 2 + 8)
+
+
+def test_sentinel_rollback_budget_exhausts():
+    s = StabilitySentinel(_cfg(skip_limit=0, fallback_steps=1,
+                               max_rollbacks=1))
+    bad = {"loss": float("nan")}
+    assert s.observe(0, bad) is Verdict.ROLLBACK
+    # past the (1-step) window, next spike would escalate -- budget spent
+    assert s.observe(5, bad) is Verdict.SKIP
+    assert s.exhausted
+    assert s.observe(9, bad) is Verdict.SKIP
+    assert s.summary()["exhausted"] is True
+
+
+def test_sentinel_notify_rollback_extends_window():
+    s = StabilitySentinel(_cfg(skip_limit=0, fallback_steps=8))
+    assert s.observe(20, {"loss": float("nan")}) is Verdict.ROLLBACK
+    assert s.fallback_until == 28             # armed at spike step + window
+    # the restored step needs the window to cover the whole replayed region
+    s.notify_rollback(25)
+    assert s.fallback_until == 33
+
+
+# ---------------------------------------------------------------------------
+# fallback_policy keeps the optimizer-state structure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["fake_quant", "fp"])
+def test_fallback_policy_preserves_adam_state_structure(mode):
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init_params(KEY, jnp.float32)
+    primary = beyond_paper_recipe()
+    degraded = fallback_policy(primary, mode=mode)
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=10,
+                    state_storage="int")
+    a = init_adam_state(params, primary, opt)
+    b = init_adam_state(params, degraded, opt)
+    assert (jax.tree_util.tree_structure(a)
+            == jax.tree_util.tree_structure(b))
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        assert x.shape == y.shape and x.dtype == y.dtype
+    # and the degraded policy really is degraded: no int8 kernel backends
+    for role in ("attn_qkv", "mlp_up"):
+        backend, caps = degraded.effective_backend(role)
+        assert backend in ("fp", "fake_quant")
+        if mode == "fp":
+            r = degraded.resolve(role).recipe
+            assert r is None or (r.weights is None and r.acts is None)
+
+
+# ---------------------------------------------------------------------------
+# Guarded trainer integration: the full recovery ladder
+# ---------------------------------------------------------------------------
+
+def _smoke_trainer_parts():
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
+    recipe = beyond_paper_recipe()
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=100,
+                    state_storage="int")
+    loader = Loader(corpus, cfg, batch_size=4, seq_len=32)
+    state = init_train_state(model, KEY, recipe, opt)
+    return cfg, model, recipe, opt, loader, state
+
+
+def test_trainer_recovery_ladder(tmp_path):
+    """nan_grad mid-run: skip, escalate to rollback (restores the newest
+    checkpoint), run the fallback window past the fault, re-engage, and
+    finish with finite loss and a full complement of applied updates."""
+    _, model, recipe, opt, loader, state = _smoke_trainer_parts()
+    faults = FaultPlan.parse("nan_grad@5")
+    step = jax.jit(make_train_step(model, recipe, opt, faults=faults,
+                                   health=True))
+    fb = jax.jit(make_train_step(model, fallback_policy(recipe), opt,
+                                 health=True))
+    sentinel = StabilitySentinel(SentinelConfig(
+        window=8, min_history=2, skip_limit=1, fallback_steps=4,
+        max_rollbacks=3))
+    mgr = CheckpointManager(str(tmp_path))
+    t = Trainer(step, None, state, loader, ckpt=mgr,
+                loop_cfg=LoopConfig(total_steps=12, ckpt_every=3,
+                                    log_every=1),
+                sentinel=sentinel, fallback_step=fb, faults=faults)
+    t.run(rng=KEY)
+    summary = t.resilience_summary()
+    assert summary["sentinel"]["rollbacks"] == 1
+    assert summary["restores"] == 1
+    assert summary["skipped_batches"] >= 1
+    assert summary["sentinel"]["fallback_steps_run"] >= 1
+    assert "nan_grad@5" in summary["faults_fired"]
+    # the fault's update never landed, recovery re-ran the region, and the
+    # run completed every scheduled update
+    assert int(t.state.opt.step) == 12
+    for leaf in jax.tree_util.tree_leaves(t.state.params):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    assert math.isfinite(t.history[-1]["ce"])
+
+
+def test_trainer_skip_without_checkpoint_degrades(tmp_path):
+    """No checkpoint to roll back to: the ladder degrades to skip + fallback
+    window instead of dying."""
+    _, model, recipe, opt, loader, state = _smoke_trainer_parts()
+    faults = FaultPlan.parse("nan_grad@3")
+    step = jax.jit(make_train_step(model, recipe, opt, faults=faults,
+                                   health=True))
+    fb = jax.jit(make_train_step(model, fallback_policy(recipe), opt,
+                                 health=True))
+    sentinel = StabilitySentinel(SentinelConfig(
+        window=8, min_history=2, skip_limit=0, fallback_steps=4))
+    t = Trainer(step, None, state, loader, ckpt=None,
+                loop_cfg=LoopConfig(total_steps=8, ckpt_every=10**9,
+                                    log_every=1),
+                sentinel=sentinel, fallback_step=fb, faults=faults)
+    t.run(rng=KEY)
+    s = t.resilience_summary()
+    assert s["skipped_batches"] >= 1          # rollback degraded to skip
+    assert s["restores"] == 0
+    for leaf in jax.tree_util.tree_leaves(t.state.params):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+def test_preemption_resume_bit_exact_curve(tmp_path):
+    """SIGTERM delivered mid-run (sigterm_run fault): emergency save, then a
+    fresh process resumes and the remaining loss curve and final params are
+    bit-identical to an uninterrupted run."""
+    _, model, recipe, opt, loader, state = _smoke_trainer_parts()
+    step = jax.jit(make_train_step(model, recipe, opt))
+    lcfg = dict(total_steps=10, ckpt_every=10**9, log_every=1)
+
+    # reference: uninterrupted
+    ref = Trainer(step, None, state, loader,
+                  loop_cfg=LoopConfig(**lcfg))
+    ref_hist = ref.run(rng=KEY)
+
+    # interrupted at loop step 4 -> emergency checkpoint at 5
+    _, _, _, _, loader2, state2 = _smoke_trainer_parts()
+    faults = FaultPlan.parse("sigterm_run@4")
+    mgr = CheckpointManager(str(tmp_path))
+    t1 = Trainer(step, None, state2, loader2, ckpt=mgr,
+                 loop_cfg=LoopConfig(**lcfg), faults=faults)
+    old = signal.getsignal(signal.SIGTERM)
+    try:
+        t1.install_preemption_handler()
+        t1.run(rng=KEY)
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    assert t1._preempted
+    assert "sigterm_run@4" in faults.fired
+    assert mgr.all_steps() == [5]
+
+    # resume and finish
+    _, _, _, _, loader3, state3 = _smoke_trainer_parts()
+    t2 = Trainer(step, None, state3, loader3, ckpt=mgr,
+                 loop_cfg=LoopConfig(**lcfg))
+    assert t2.maybe_resume() == 5
+    t2.run(rng=KEY)
+
+    ref_tail = [r["ce"] for r in ref_hist if r["step"] > 5]
+    got_tail = [r["ce"] for r in t2.history if r["step"] > 5]
+    assert got_tail == ref_tail               # bit-identical curve
+    for a, b in zip(jax.tree_util.tree_leaves(ref.state.params),
+                    jax.tree_util.tree_leaves(t2.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # int8 optimizer moments resumed bit-exactly too
+    for a, b in zip(jax.tree_util.tree_leaves(ref.state.opt),
+                    jax.tree_util.tree_leaves(t2.state.opt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Quant-health counters feeding the sentinel
+# ---------------------------------------------------------------------------
+
+def test_moment_saturation_rate_counts_overflow():
+    from repro.core.diagnostics import moment_saturation_rate
+    spec = QuantSpec(8, Granularity.PER_CHANNEL, block_size=4)
+    g = jnp.full((2, 4), 10.0, jnp.float32)
+    m = QState(q=jnp.zeros((2, 4), jnp.int8),
+               scale=jnp.full((2, 1), 0.001, jnp.float32),
+               zero=jnp.zeros((2, 1), jnp.float32))
+    grads = {"w": g}
+    moments = {"w": m}
+    # candidate = 0.9 * 0 + 0.1 * 10 = 1.0 > qmax * 0.001 = 0.127: all over
+    assert float(moment_saturation_rate(grads, moments, spec)) == 1.0
+    # a scale fitted to the candidate's regime: nothing saturates
+    ok = QState(q=m.q, scale=jnp.full((2, 1), 1.0, jnp.float32), zero=m.zero)
+    assert float(moment_saturation_rate(grads, {"w": ok}, spec)) == 0.0
+    # never-fitted (zero-scale) blocks are excluded, not counted saturated
+    fresh = QState(q=m.q, scale=jnp.zeros((2, 1), jnp.float32), zero=m.zero)
+    assert float(moment_saturation_rate(grads, {"w": fresh}, spec)) == 0.0
+    # no integer-stored moments -> nothing can saturate
+    assert moment_saturation_rate(grads, {"w": g}, spec) is None
+    assert moment_saturation_rate(grads, moments, None) is None
