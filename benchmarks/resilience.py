@@ -20,6 +20,21 @@ asserts the matching defense absorbed it:
     request_timeout    a request past its deadline is cancelled (finish
                        reason ``"timeout"``), its slot freed, the engine
                        immediately reusable.
+    overload_shed      six submissions against a one-slot engine with a
+                       bounded submit queue: the overflow is rejected with
+                       finish reason ``"shed"`` + a retry-after hint, the
+                       admitted requests complete, no exception escapes.
+    nan_quarantine     a non-finite logits row mid-decode evicts only that
+                       request (finish reason ``"numerics"``); its batchmate
+                       and the engine are unharmed.
+    ladder_walk        a fused-kernel failure then repeated numeric faults
+                       walk the engine down its degradation ladder (paged
+                       fused -> dequant-on-read -> fp reference) exactly as
+                       scripted, then healthy steps re-engage rung by rung
+                       back to fused.
+    oom_preempt        an injected page-pool drain mid-decode forces
+                       preemption instead of CapacityError; every request
+                       still completes and the pages come back.
 
 ``--smoke`` runs all scenarios, asserts every gate AND that every planned
 fault actually fired, then writes ``BENCH_resilience.json`` (the CI
@@ -226,6 +241,135 @@ def scenario_request_timeout() -> dict:
             "reusable": reusable}
 
 
+def scenario_overload_shed() -> dict:
+    from repro.configs import get_smoke_config
+    from repro.infer import Engine, Request
+    from repro.models import build_model
+
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    eng = Engine(model, params, max_slots=1, max_seq=64, max_queue=2)
+    for _ in range(6):
+        eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4))
+    rs = eng.run()                       # no CapacityError may escape
+    shed = [r for r in rs if r.finish_reason == "shed"]
+    done = [r for r in rs if r.finish_reason == "length"]
+    stats = eng.scheduler.latency_stats()
+    ok = (len(rs) == 6 and len(shed) == 4 and len(done) == 2
+          and all(r.retry_after_s is not None and r.retry_after_s > 0
+                  for r in shed)
+          and all(not r.tokens for r in shed)
+          and all(len(r.tokens) == 4 for r in done)
+          and stats["shed"] == 4 and stats["completed"] == 2
+          and stats["n"] == 2)           # shed excluded from latency pctls
+    return {"ok": ok, "shed": len(shed), "completed": len(done),
+            "retry_after_s": (shed[0].retry_after_s if shed else None),
+            "goodput_tok_s": round(stats["goodput_tok_s"], 1)}
+
+
+def scenario_nan_quarantine() -> dict:
+    from repro.infer import Request
+    from repro.train import FaultPlan
+
+    eng = _engine(max_slots=2, max_seq=64)
+    plan = FaultPlan.parse("nan_logit@2:slot=0")
+    eng.fault_hooks = plan.engine_hooks()
+    rid_victim = eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=8))
+    rid_other = eng.submit(Request(tokens=[4, 5, 6], max_new_tokens=8))
+    rs = {r.request_id: r for r in eng.run()}
+    victim, other = rs[rid_victim], rs[rid_other]
+    quarantined = (victim.finish_reason == "numerics"
+                   and 0 < len(victim.tokens) < 8)
+    survivor_ok = (other.finish_reason == "length"
+                   and len(other.tokens) == 8)
+    # the engine keeps serving after the quarantine
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=3))
+    [r2] = eng.run()
+    reusable = r2.finish_reason == "length" and len(r2.tokens) == 3
+    s = eng.resilience_summary()
+    ok = (quarantined and survivor_ok and reusable
+          and s["quarantined"] == 1 and s["rung_index"] == 0
+          and plan.fired == ["nan_logit@2:slot=0"])
+    return {"ok": ok, "victim_reason": victim.finish_reason,
+            "victim_tokens": len(victim.tokens),
+            "survivor_tokens": len(other.tokens), "reusable": reusable}
+
+
+def scenario_ladder_walk() -> dict:
+    import os
+
+    from repro.configs import get_smoke_config
+    from repro.infer import Engine, MonitorConfig, Request
+    from repro.models import build_model
+    from repro.train import FaultPlan
+
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    old = os.environ.get("REPRO_FUSED_DECODE")
+    os.environ["REPRO_FUSED_DECODE"] = "1"
+    try:
+        eng = Engine(model, params, "kv_cache=a8t,*=w8c", max_slots=2,
+                     max_seq=64, paged=True, page_size=8, n_pages=16,
+                     monitor=MonitorConfig(reprobe_after=4, numeric_limit=2,
+                                           numeric_window=8))
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_FUSED_DECODE", None)
+        else:
+            os.environ["REPRO_FUSED_DECODE"] = old
+    plan = FaultPlan.parse(
+        "kernel_error@1;nan_logit@3:slot=1;nan_logit@5:slot=1")
+    eng.fault_hooks = plan.engine_hooks()
+    rid_a = eng.submit(Request(tokens=[1, 2, 3, 4], max_new_tokens=24))
+    eng.submit(Request(tokens=[5, 6], max_new_tokens=16))
+    eng.submit(Request(tokens=[7, 8], max_new_tokens=16))
+    rs = {r.request_id: r for r in eng.run()}
+    s = eng.resilience_summary()
+    walk_down = [(d["step"], d["from"], d["to"]) for d in s["demotions"]]
+    walk_up = [(p["step"], p["from"], p["to"]) for p in s["promotions"]]
+    # the scripted walk, exactly: kernel fault at 1 demotes fused->dequant;
+    # two quarantines inside the window demote dequant->fp at 5; 4-step
+    # healthy streaks re-engage fp->dequant at 9 and dequant->fused at 13
+    ok = (walk_down == [(1, "fused", "dequant"), (5, "dequant", "fp")]
+          and walk_up == [(9, "fp", "dequant"), (13, "dequant", "fused")]
+          and s["rung"] == "fused" and s["rung_index"] == 0
+          and s["kernel_errors"] == 1 and s["quarantined"] == 2
+          and rs[rid_a].finish_reason == "length"
+          and len(rs[rid_a].tokens) == 24
+          and len(plan.fired) == 3)
+    return {"ok": ok, "demotions": walk_down, "promotions": walk_up,
+            "final_rung": s["rung"], "survivor_tokens": len(rs[rid_a].tokens)}
+
+
+def scenario_oom_preempt() -> dict:
+    from repro.configs import get_smoke_config
+    from repro.infer import Engine, Request
+    from repro.models import build_model
+    from repro.train import FaultPlan
+
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init_params(KEY)
+    eng = Engine(model, params, max_slots=2, max_seq=64, paged=True,
+                 page_size=4, n_pages=6)            # 5 allocatable pages
+    plan = FaultPlan.parse("oom_pages@1:hold=2")
+    eng.fault_hooks = plan.engine_hooks()
+    free0 = eng.pool.free_pages
+    rids = [eng.submit(Request(tokens=[1, 2, 3, 4], max_new_tokens=12)),
+            eng.submit(Request(tokens=[5, 6, 7, 8], max_new_tokens=12))]
+    rs = {r.request_id: r for r in eng.run()}       # no CapacityError
+    all_done = all(rs[rid].finish_reason == "length"
+                   and len(rs[rid].tokens) == 12 for rid in rids)
+    pages_back = eng.pool.free_pages == free0
+    ok = (all_done and eng.preemptions >= 1 and pages_back
+          and plan.fired == ["oom_pages@1:hold=2"])
+    return {"ok": ok, "preemptions": eng.preemptions,
+            "pages_back": pages_back,
+            "tokens": [len(rs[rid].tokens) for rid in rids]}
+
+
 # ---------------------------------------------------------------------------
 # Harness
 # ---------------------------------------------------------------------------
@@ -246,7 +390,11 @@ def run_all(out_path: str = "BENCH_resilience.json", smoke: bool = False,
                 ("rotation_fallback", lambda: scenario_rotation_fallback(d3)),
                 ("atomic_save", lambda: scenario_atomic_save(d4)),
                 ("sched_watchdog", scenario_sched_watchdog),
-                ("request_timeout", scenario_request_timeout)):
+                ("request_timeout", scenario_request_timeout),
+                ("overload_shed", scenario_overload_shed),
+                ("nan_quarantine", scenario_nan_quarantine),
+                ("ladder_walk", scenario_ladder_walk),
+                ("oom_preempt", scenario_oom_preempt)):
             t0 = time.monotonic()
             r = fn()
             r["wall_s"] = round(time.monotonic() - t0, 2)
@@ -262,7 +410,7 @@ def run_all(out_path: str = "BENCH_resilience.json", smoke: bool = False,
         assert not failed, f"resilience scenarios failed: {failed}"
         with open(out_path, "w") as f:
             json.dump(results, f, indent=2)
-        print(f"resilience smoke ok: 6 scenarios in "
+        print(f"resilience smoke ok: 10 scenarios in "
               f"{results['total_wall_s']:.1f}s -> {out_path}")
     if emit_json:
         print(json.dumps(results, indent=2))

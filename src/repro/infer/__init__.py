@@ -7,10 +7,12 @@ from repro.infer.engine import (ENGINE_FAMILIES, PAGED_FAMILIES, Engine,
 from repro.infer.pages import (CapacityError, PagePool, init_paged_caches,
                                page_nbytes, pages_for)
 from repro.infer.prepare import params_nbytes, prepare_params, quantize_weight
+from repro.infer.resilience import EngineMonitor, MonitorConfig
 from repro.infer.sampling import SamplingParams, sample
 from repro.infer.scheduler import Scheduler
 
 __all__ = ["ENGINE_FAMILIES", "PAGED_FAMILIES", "Engine", "Request",
            "Response", "CapacityError", "PagePool", "init_paged_caches",
            "page_nbytes", "pages_for", "params_nbytes", "prepare_params",
-           "quantize_weight", "SamplingParams", "sample", "Scheduler"]
+           "quantize_weight", "EngineMonitor", "MonitorConfig",
+           "SamplingParams", "sample", "Scheduler"]

@@ -91,6 +91,7 @@ from repro.core.qpolicy import as_policy
 from repro.infer.pages import (CapacityError, PagePool, init_paged_caches,
                                page_nbytes, pages_for, place_paged_caches)
 from repro.infer.prepare import place_params, prepare_params
+from repro.infer.resilience import EngineMonitor, MonitorConfig
 from repro.infer.sampling import SamplingParams, sample
 from repro.infer.scheduler import Scheduler
 
@@ -155,12 +156,19 @@ class Request:
 
 @dataclasses.dataclass
 class Response:
+    """``finish_reason``: ``"eos"`` / ``"length"`` (served to completion),
+    ``"timeout"`` (deadline sweep), ``"shed"`` (admission control rejected
+    the request under overload -- ``retry_after_s`` estimates when resources
+    should free up), ``"numerics"`` (the request's logits row went
+    non-finite and it was quarantined -- tokens generated before the fault
+    are kept, the poisoned token is not)."""
     request_id: int
     prompt: List[int]
     tokens: List[int]                        # generated, eos excluded
-    finish_reason: str                       # "eos" | "length" | "timeout"
+    finish_reason: str     # "eos" | "length" | "timeout" | "shed" | "numerics"
     text: Optional[str] = None               # set by the emit thread when the
     #                                          engine has a detokenizer
+    retry_after_s: Optional[float] = None    # set on "shed" responses
 
 
 @dataclasses.dataclass
@@ -185,7 +193,8 @@ class Engine:
                  paged: bool = False, page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
                  mesh=None, aot: Optional[bool] = None,
-                 detokenizer=None):
+                 detokenizer=None, max_queue: Optional[int] = None,
+                 monitor: Optional[MonitorConfig] = None):
         cfg = model.cfg
         if cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
@@ -278,6 +287,27 @@ class Engine:
             self._kv_block = effective_block_k(self.max_seq)
         self._kv_env = {"REPRO_FUSED_DECODE": "1" if self._kv_fused else "0",
                         "REPRO_DECODE_BLOCK": str(default_block_k())}
+        # the compiled-path degradation ladder (mirrors the training
+        # sentinel's skip -> rollback -> fallback ladder): rung 0 is the
+        # configured fast path; a kernel failure or repeated numeric fault
+        # steps down toward the bit-compared references, a healthy streak
+        # re-probes back up (see _step / _demote / _try_promote)
+        caches0 = self._state.get("caches")
+        if caches0 is None:
+            self._rungs = ["none"]
+        elif "k_scale" not in caches0:
+            self._rungs = ["fp"]
+        elif self._kv_fused:
+            self._rungs = ["fused", "dequant", "fp"]
+        else:
+            self._rungs = ["dequant", "fp"]
+        self._rung = 0
+        self.monitor = EngineMonitor(monitor)
+        #: set by the resilience harness (FaultPlan.engine_hooks()) to
+        #: inject serving faults at the decode-step hook points
+        self.fault_hooks = None
+        self._decode_steps = 0
+        self.preemptions = 0
         if self.rules is not None:
             # decode state onto the mesh: payload AND sidecar cache buffers
             # tensor-parallel over the kv-head axis, everything else (slot
@@ -308,7 +338,7 @@ class Engine:
         self._prefixes: Dict[tuple, List[int]] = {}   # cached prefix -> pids
         self._pagein_jits: "OrderedDict[tuple, jax.stages.Wrapped]" = \
             OrderedDict()
-        self.scheduler = Scheduler(self)
+        self.scheduler = Scheduler(self, max_queue=max_queue)
 
         if self.paged:
             def _prefill(params, toks, last, segs):
@@ -323,14 +353,16 @@ class Engine:
                                               max_seq=self.max_seq,
                                               last_pos=last, segments=segs)
 
-            def _decode(params, state, tok, pos, pt, key):
-                self._trace_counts["decode"] += 1
-                with _pinned_env(self._kv_env):
-                    logits, state = self.model.decode(params, state, tok,
-                                                      pos, policy=self.policy,
-                                                      rules=self.rules,
-                                                      page_table=pt)
-                return sample(logits, self.sampling, key), state
+            def _make_decode(env):
+                def _decode(params, state, tok, pos, pt, key):
+                    self._trace_counts["decode"] += 1
+                    with _pinned_env(env):
+                        logits, state = self.model.decode(
+                            params, state, tok, pos, policy=self.policy,
+                            rules=self.rules, page_table=pt)
+                    return (sample(logits, self.sampling, key),
+                            jnp.all(jnp.isfinite(logits), axis=-1), state)
+                return _decode
         else:
             def _prefill(params, toks, last_pos):
                 self._trace_counts["prefill"] += 1
@@ -341,24 +373,16 @@ class Engine:
                                               max_seq=self.max_seq,
                                               last_pos=last_pos)
 
-            def _decode(params, state, tok, pos, key):
-                self._trace_counts["decode"] += 1
-                with _pinned_env(self._kv_env):
-                    logits, state = self.model.decode(params, state, tok,
-                                                      pos, policy=self.policy,
-                                                      rules=self.rules)
-                return sample(logits, self.sampling, key), state
-
-        def _scatter(state, new, src, written):
-            # fixed-shape slot scatter: ``src[slot]`` is the prefill row to
-            # copy into ``slot`` and ``written`` masks the slots admitted
-            # this pass.  One executable regardless of group size (the old
-            # ``buf.at[:, slots].set`` retraced per admission-group size).
-            def upd(buf, n):
-                rows = jnp.take(n, src, axis=1).astype(buf.dtype)
-                m = written.reshape((1, -1) + (1,) * (buf.ndim - 2))
-                return jnp.where(m, rows, buf)
-            return jax.tree_util.tree_map(upd, state, new)
+            def _make_decode(env):
+                def _decode(params, state, tok, pos, key):
+                    self._trace_counts["decode"] += 1
+                    with _pinned_env(env):
+                        logits, state = self.model.decode(
+                            params, state, tok, pos, policy=self.policy,
+                            rules=self.rules)
+                    return (sample(logits, self.sampling, key),
+                            jnp.all(jnp.isfinite(logits), axis=-1), state)
+                return _decode
 
         # donate the decode state: it is replaced by the return value every
         # step, and without donation XLA must defensively copy the buffers
@@ -367,20 +391,31 @@ class Engine:
         # the one-read-one-row-write schedule.  Under sharding rules the
         # output shardings are pinned to the construction-time placement so
         # the AOT decode executable's input layouts hold step to step.
-        dec_kw, pre_kw, sc_kw = {}, {}, {}
+        # The decode step additionally returns a (B,) per-slot logit
+        # finiteness flag (reduced on device -- the full logits never come
+        # to host): the quarantine signal.  Token values are untouched, so
+        # healthy-path greedy output is bit-identical to an engine without
+        # the ladder.
+        dec_kw, pre_kw = {}, {}
         if self.rules is not None:
             repl = self.rules.replicated()
             st_sh = self._state_shardings()
-            dec_kw["out_shardings"] = (repl, st_sh)
+            dec_kw["out_shardings"] = (repl, repl, st_sh)
             # prefill state buffers are dense (B, max_seq) strips in both
             # modes (pages are sliced out afterwards): kv-head sharded
             # caches, replicated logits/ssm -- a pytree prefix
             pre_kw["out_shardings"] = (repl, {"caches": self._kv_sharding(),
                                               "ssm": repl})
-            sc_kw["out_shardings"] = st_sh
+        self._make_decode = _make_decode
         self._prefill_jit = jax.jit(_prefill, **pre_kw)
-        self._decode_jit = jax.jit(_decode, donate_argnums=(1,), **dec_kw)
-        self._scatter_jit = jax.jit(_scatter, donate_argnums=(0,), **sc_kw)
+        # rung 0's jit is built eagerly (it is the one warmup AOT-compiles
+        # and lowered_decode_hlo lints); degraded rungs trace lazily at
+        # first demotion -- the emergency path pays its own compile
+        self._decode_jit = jax.jit(_make_decode(dict(self._kv_env)),
+                                   donate_argnums=(1,), **dec_kw)
+        self._decode_jits: Dict[str, object] = {self._rungs[0]:
+                                                self._decode_jit}
+        self._scatter_jit = self._make_scatter_jit()
 
         # AOT executables (warmup() fills these): decode + one prefill per
         # (bucket, packed) shape
@@ -469,12 +504,15 @@ class Engine:
             out[i, :len(t)] = t
         return jnp.asarray(out)
 
-    def cancel(self, request_id: int, reason: str = "timeout") -> bool:
+    def cancel(self, request_id: int, reason: str = "timeout",
+               retry_after_s: Optional[float] = None) -> bool:
         """Cancel a queued or running request (scheduler-thread only -- the
         same thread that runs ``_admit``/``_step``).  Running: finished via
         the normal path (slot and pages freed, tokens generated so far kept).
         Queued: removed before admission (a preempted continuation keeps its
-        carry split, so the response still reports the original prompt).
+        carry split, so the response still reports the original prompt);
+        ``retry_after_s`` is attached to the response (the scheduler's shed
+        path sets it as the client's back-off hint).
         Returns False when the request is unknown or already finished."""
         for req in self._queue:
             if req.request_id == request_id:
@@ -484,7 +522,8 @@ class Engine:
                     request_id, (list(req.tokens), []))
                 self._done.append(Response(request_id=request_id, prompt=orig,
                                            tokens=prior,
-                                           finish_reason=reason))
+                                           finish_reason=reason,
+                                           retry_after_s=retry_after_s))
                 return True
         for st in self._running.values():
             if st.req.request_id == request_id:
@@ -532,6 +571,7 @@ class Engine:
         # this prompt itself would write (same attend path, fused or not)
         last = np.asarray([[0, plen - 1]], np.int32)
         _, new_state = self._prefill_call(toksa, last)
+        new_state = self._match_prefill_state(new_state)
         pids = self.pool.alloc(n_pg)
         self.pool.pin(pids)
         self._page_in(new_state["caches"], 0, 0, pids)
@@ -561,13 +601,15 @@ class Engine:
         (no KV cache -- pure SSM).  Snapshotted at construction and pinned
         around the step traces (``_pinned_env``), so the report always
         matches the compiled path -- flipping ``REPRO_FUSED_DECODE`` /
-        ``REPRO_DECODE_BLOCK`` after construction affects neither."""
+        ``REPRO_DECODE_BLOCK`` after construction affects neither.  A
+        ladder-degraded engine reports the rung it currently runs (the
+        state structure and the rung's pinned env move together)."""
         caches = self._state.get("caches")
         if caches is None:
             return "none"
         if "k_scale" not in caches:
             return "fp"
-        return "fused" if self._kv_fused else "dequant"
+        return "fused" if self._rungs[self._rung] == "fused" else "dequant"
 
     def kv_decode_read_bytes(self) -> int:
         """Analytic KV bytes moved per decode step across the stack (the
@@ -611,13 +653,20 @@ class Engine:
         else:
             kv = {"dequant": "int8-dequant", "fp": "fp", "none": "none"}[mode]
         s = f"weights={'prepared-int8' if prepared else 'raw'} kv={kv}"
+        if self._rung > 0:
+            s += (f" degraded={self._rungs[self._rung]}"
+                  f"(rung {self._rung}/{len(self._rungs) - 1})")
         if self.rules is not None:
             s += f" mesh=dp{self.rules.dp_size}xtp{self.rules.tp_size}"
         if self._warmed:
             rep = self.warmup_report()
             s += (f" aot={rep['n_executables']}exec"
-                  f"/{rep['total_compile_s']:.1f}s"
-                  f"/{int(rep['total_code_bytes']) // 1024}KiB")
+                  f"/{rep['total_compile_s']:.1f}s")
+            # generated_code_size is 0 on the CPU backend (the plugin does
+            # not report it): omit the segment rather than print a bogus
+            # 0KiB -- on a real TPU the per-executable bytes are nonzero
+            if int(rep["total_code_bytes"]):
+                s += f"/{int(rep['total_code_bytes']) // 1024}KiB"
         return s
 
     def lowered_decode_hlo(self) -> str:
@@ -665,6 +714,25 @@ class Engine:
             out[k] = jax.tree_util.tree_map(lambda x, _sh=sh: _sh, v)
         return out
 
+    def _make_scatter_jit(self):
+        """Build the admission scatter jit against the *current* decode
+        state structure (a ladder transition to/from the fp rung changes the
+        cache leaves, and under a mesh the pinned out_shardings with them)."""
+        def _scatter(state, new, src, written):
+            # fixed-shape slot scatter: ``src[slot]`` is the prefill row to
+            # copy into ``slot`` and ``written`` masks the slots admitted
+            # this pass.  One executable regardless of group size (the old
+            # ``buf.at[:, slots].set`` retraced per admission-group size).
+            def upd(buf, n):
+                rows = jnp.take(n, src, axis=1).astype(buf.dtype)
+                m = written.reshape((1, -1) + (1,) * (buf.ndim - 2))
+                return jnp.where(m, rows, buf)
+            return jax.tree_util.tree_map(upd, state, new)
+        kw = {}
+        if self.rules is not None:
+            kw["out_shardings"] = self._state_shardings()
+        return jax.jit(_scatter, donate_argnums=(0,), **kw)
+
     def _dev(self, x):
         """Pin small host-built step inputs (tokens, positions, rng keys,
         page tables) to a replicated mesh placement so the AOT executables
@@ -708,8 +776,8 @@ class Engine:
         try:
             mem = comp.memory_analysis()
             size = int(getattr(mem, "generated_code_size_in_bytes", 0) or 0)
-        except Exception:
-            pass
+        except Exception:  # lint: except-ok -- optional metric probe: some
+            pass           # backends have no memory_analysis(); size stays 0
         self._compiles.append(
             {"name": name, "compile_s": dt, "code_bytes": size})
         return comp
@@ -888,6 +956,7 @@ class Engine:
             toks[i, :len(r.tokens)] = r.tokens
             last[i] = len(r.tokens) - 1
         logits, new_state = self._prefill_call(toks, last)
+        new_state = self._match_prefill_state(new_state)
         src = np.zeros((self.max_slots,), np.int32)
         written = np.zeros((self.max_slots,), np.bool_)
         for i, s in enumerate(slots):
@@ -950,6 +1019,7 @@ class Engine:
                 placement[i] = (ri, off)
         logits, new_state = self._prefill_call(
             toks, last, segs if packed else None)
+        new_state = self._match_prefill_state(new_state)
         first = np.asarray(sample(logits, self.sampling, self._next_key()))
         for i, r in enumerate(selected):
             ri, off = placement[i]
@@ -1024,23 +1094,23 @@ class Engine:
     def _ensure_write_pages(self) -> None:
         """Before a decode step, make sure every running slot owns the page
         its next row lands in; when the pool is dry, preempt the youngest
-        other request (instant page recycle) and retry."""
+        other request (instant page recycle) and retry.  With nothing else
+        to evict the needy request preempts *itself* -- it re-enters the
+        queue with its tokens carried and resumes once pages free up --
+        instead of raising a ``CapacityError`` out of the scheduling loop
+        (overload is an outcome here, not an exception; if the pool stays
+        dry the scheduler eventually sheds it)."""
         for slot in sorted(self._running):
             st = self._running.get(slot)
             if st is None:                 # preempted by an earlier iteration
                 continue
-            while int(self._pos[slot]) // self.page_size \
+            while slot in self._running \
+                    and int(self._pos[slot]) // self.page_size \
                     >= int(self.pool.used[slot]):
                 if self.pool.free_pages == 0:
                     if not self._preempt_for(slot):
-                        raise CapacityError(
-                            f"slot {slot} needs a page but the pool is "
-                            "exhausted and there is nothing to preempt",
-                            tokens=int(self._pos[slot]),
-                            page_size=self.page_size,
-                            pages_total=self.pool.n_pages - 1,
-                            pages_free=0, slots_total=self.max_slots,
-                            slots_free=len(self._free))
+                        self._preempt(st)
+                        break
                     continue
                 self.pool.append(slot, self.pool.alloc(1)[0])
 
@@ -1056,6 +1126,7 @@ class Engine:
         queue at the front with prompt = original prompt + tokens generated
         so far (the carry map keeps the original prompt/generation split for
         the final Response)."""
+        self.preemptions += 1
         rid = st.req.request_id
         orig, prior = self._carry.get(rid, (list(st.req.tokens), []))
         gen = prior + st.tokens
@@ -1077,32 +1148,210 @@ class Engine:
                                    max_new_tokens=remaining)
         self._queue.appendleft(cont)
 
+    # -- degradation ladder ------------------------------------------------
+
+    def _rung_env(self, rung: str) -> Dict[str, str]:
+        env = dict(self._kv_env)
+        env["REPRO_FUSED_DECODE"] = "1" if rung == "fused" else "0"
+        return env
+
+    def _decode_fn(self, rung: str):
+        """The decode jit for one ladder rung (lazily built and cached --
+        ``fused`` and ``dequant`` share the int8 state structure and differ
+        only in the env pinned at trace time; ``fp`` traces against the
+        dequantized structure)."""
+        fn = self._decode_jits.get(rung)
+        if fn is None:
+            kw = {}
+            if self.rules is not None:
+                repl = self.rules.replicated()
+                kw["out_shardings"] = (repl, repl, self._state_shardings())
+            fn = jax.jit(self._make_decode(self._rung_env(rung)),
+                         donate_argnums=(1,), **kw)
+            self._decode_jits[rung] = fn
+        return fn
+
+    def _decode_call(self, args):
+        if self._rung == 0 and self._decode_exec is not None:
+            return self._decode_exec(self.params, self._state, *args)
+        return self._decode_fn(self._rungs[self._rung])(
+            self.params, self._state, *args)
+
+    def _dequant_caches(self, caches):
+        """int8 cache strips/pools -> the fp reference structure (payload x
+        guarded scale; scale-0 padding rows dequantize to exactly 0,
+        matching attention's ``_kv_guard`` convention).  Pinned prefix
+        pages convert in place, so aliased tables stay valid."""
+        dt = self._dtype
+
+        def conv(c):
+            out = {}
+            for name in ("k", "v"):
+                s = c[name + "_scale"]
+                g = jnp.where(s == 0.0, 1.0, s)
+                out[name] = (c[name].astype(jnp.float32) * g).astype(dt)
+            return out
+        kw = {}
+        if self.rules is not None:
+            kw["out_shardings"] = {"k": self._kv_sharding(),
+                                   "v": self._kv_sharding()}
+        return jax.jit(conv, **kw)(caches)
+
+    def _requant_caches(self, caches):
+        """Re-engage path: fp caches back to int8 payloads + per-(position,
+        head) fp32 scale sidecars.  All-zero (never-written) rows keep
+        scale 0, the padding convention.  Requantization is near-exact, not
+        bit-exact -- live rows re-enter the int8 codec with fresh scales,
+        the same precision a freshly-written row gets."""
+        spec = self.policy.kv_spec()
+        from repro.core.quantizer import storage_dtype
+        sdt = storage_dtype(spec.bits)
+
+        def conv(c):
+            out = {}
+            for name in ("k", "v"):
+                xf = c[name].astype(jnp.float32)
+                absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+                scale = absmax / spec.qmax
+                q = jnp.round(xf / jnp.where(scale == 0.0, 1.0, scale))
+                out[name] = jnp.clip(q, spec.qmin, spec.qmax).astype(sdt)
+                out[name + "_scale"] = scale.astype(jnp.float32)
+            return out
+        kw = {}
+        if self.rules is not None:
+            kw["out_shardings"] = {
+                k: self._kv_sharding()
+                for k in ("k", "v", "k_scale", "v_scale")}
+        return jax.jit(conv, **kw)(caches)
+
+    def _match_prefill_state(self, new_state):
+        """On the fp rung, prefill still produces int8-structured caches
+        (the policy drives its trace); dequantize them before the scatter /
+        page-in so they match the engine's current cache structure."""
+        caches = self._state.get("caches")
+        nc = new_state.get("caches")
+        if (caches is not None and "k_scale" not in caches
+                and nc is not None and "k_scale" in nc):
+            new_state = dict(new_state,
+                             caches=self._dequant_caches(nc))
+        return new_state
+
+    def _demote(self, why: str, step: int) -> bool:
+        """One rung down the ladder; False when already at the bottom.
+        Stepping onto the fp rung dequantizes the live decode state (pages
+        and dense strips alike), so running requests continue with their
+        history intact on the bit-compared reference path."""
+        if self._rung + 1 >= len(self._rungs):
+            return False
+        frm = self._rungs[self._rung]
+        to = self._rungs[self._rung + 1]
+        if to == "fp":
+            caches = self._state.get("caches")
+            if caches is not None and "k_scale" in caches:
+                self._state = dict(self._state,
+                                   caches=self._dequant_caches(caches))
+                self._scatter_jit = self._make_scatter_jit()
+        self._rung += 1
+        self.monitor.record_demotion(step, frm, to, why)
+        return True
+
+    def _try_promote(self, step: int) -> bool:
+        """Re-probe one rung up after a healthy streak; False at the top.
+        Leaving the fp rung requantizes the live state (near-exact);
+        dequant -> fused is free (same buffers, different compiled path)."""
+        if self._rung == 0:
+            return False
+        frm = self._rungs[self._rung]
+        to = self._rungs[self._rung - 1]
+        if frm == "fp":
+            caches = self._state.get("caches")
+            if caches is not None and "k_scale" not in caches:
+                self._state = dict(self._state,
+                                   caches=self._requant_caches(caches))
+                self._scatter_jit = self._make_scatter_jit()
+        self._rung -= 1
+        self.monitor.record_promotion(step, frm, to)
+        return True
+
+    def _absorb_step_failure(self, e: BaseException, step: int) -> bool:
+        """Decide whether a decode-step exception is survivable: True means
+        the engine demoted a rung and the caller should retry the step.
+        False (no lower rung, or the donated state buffers were consumed
+        before the failure surfaced -- nothing valid to retry against)
+        re-raises."""
+        self.monitor.record_kernel_error(step)
+        leaves = jax.tree_util.tree_leaves(self._state)
+        if any(getattr(x, "is_deleted", lambda: False)() for x in leaves):
+            return False
+        return self._demote(
+            f"decode step failed: {type(e).__name__}: {e}", step=step)
+
+    def resilience_summary(self) -> Dict[str, object]:
+        """Serving-side mirror of the trainer's ``resilience_summary``:
+        current ladder rung, every demotion/promotion (with steps and
+        reasons), quarantine / kernel-error / preemption counters, and
+        rolling decode-step latency percentiles."""
+        s = self.monitor.summary()
+        s.update({"rung": self._rungs[self._rung],
+                  "rung_index": self._rung,
+                  "rungs": list(self._rungs),
+                  "preemptions": self.preemptions,
+                  "decode_steps": self._decode_steps})
+        return s
+
     def _step(self) -> None:
-        step = self._decode_exec if self._decode_exec is not None \
-            else self._decode_jit
+        hooks = self.fault_hooks
+        n = self._decode_steps
+        if hooks is not None:
+            hooks.pre_step(self, n)
         if self.paged:
             self._ensure_write_pages()
             if not self._running:
                 return
-            tok = self._dev(jnp.asarray(self._last_tok[:, None]))
-            pos = self._dev(jnp.asarray(self._pos))
-            nxt, self._state = step(
-                self.params, self._state, tok, pos,
-                self._dev(self.pool.table_array()),
-                self._dev(self._next_key()))
-        else:
-            tok = self._dev(jnp.asarray(self._last_tok[:, None]))
-            pos = self._dev(jnp.asarray(self._pos))
-            nxt, self._state = step(self.params, self._state, tok, pos,
-                                    self._dev(self._next_key()))
+        args = [self._dev(jnp.asarray(self._last_tok[:, None])),
+                self._dev(jnp.asarray(self._pos))]
+        if self.paged:
+            args.append(self._dev(self.pool.table_array()))
+        args.append(self._dev(self._next_key()))
+        t0 = time.perf_counter()
+        try:
+            if hooks is not None:
+                hooks.kernel(n)
+            nxt, finite, self._state = self._decode_call(args)
+        except Exception as e:
+            # the ladder's guarded dispatch: a failing compiled step demotes
+            # one rung and retries; anything unabsorbable re-raises into the
+            # scheduler's dead-loop watchdog
+            if not self._absorb_step_failure(e, n):
+                raise
+            nxt, finite, self._state = self._decode_call(args)
+        self.monitor.record_step((time.perf_counter() - t0) * 1e3)
+        self._decode_steps = n + 1
         nxt = np.asarray(nxt)
+        finite = np.asarray(finite)
+        if hooks is not None:
+            finite = hooks.mangle_finite(n, finite)
+            hooks.post_step(self, n)
         for slot in list(self._running):
-            self._pos[slot] += 1
-            self._last_tok[slot] = int(nxt[slot])
             st = self._running[slot]
+            self._pos[slot] += 1
+            if not bool(finite[slot]):
+                # non-finite logits row: quarantine THIS request (the
+                # sampled token is garbage and is not recorded), free its
+                # slot and pages, leave the rest of the batch untouched
+                self.monitor.record_quarantine(n)
+                self._finish(st, "numerics")
+                continue
+            self._last_tok[slot] = int(nxt[slot])
             self._record(st, int(nxt[slot]))
             if slot in self._running and self._pos[slot] >= self.max_seq:
                 self._finish(st, "length")       # cache rows exhausted
+        if self.monitor.should_demote(n):
+            self._demote(
+                f"{self.monitor.cfg.numeric_limit}+ numeric quarantines "
+                f"within {self.monitor.cfg.numeric_window} steps", step=n)
+        elif self._rung > 0 and self.monitor.should_reprobe():
+            self._try_promote(step=n)
 
     def _record(self, st: _Running, tok: int) -> None:
         if st.req.eos_id is not None and tok == st.req.eos_id:

@@ -21,13 +21,27 @@ prefill / decode / page-in steps, the page pool, slot bookkeeping); the
   the scheduling loop sweeps expired requests every tick and cancels them
   through ``Engine.cancel`` (finish reason ``"timeout"``, slot and pages
   freed) -- one stuck or oversized request cannot hold resources forever;
+* **admission control + load shedding**: overload rejection is a
+  first-class *outcome* (finish reason ``"shed"`` with a
+  ``Response.retry_after_s`` back-off hint), never an exception escaping
+  the loop.  Three shed points: a bounded submit queue (``max_queue``
+  waiting requests -- the (queued + running) depth gate at :meth:`enqueue`);
+  deadline-aware shedding (a queued request that cannot finish before its
+  deadline by the rolling decode-step estimate is rejected immediately
+  instead of burning pages until the timeout sweep kills it); and the
+  idle-inadmissible head (a request the (prefix-pinned) pool can never fit
+  -- previously a ``CapacityError`` straight out of the loop, killing
+  serving for everyone).  Precedence: the timeout sweep runs first, so an
+  already-expired deadline is always a ``"timeout"``;
 * a **dead-loop watchdog**: if the background scheduling thread dies, every
   pending completion event is set so blocked ``wait()`` callers wake up and
   re-raise the loop's exception instead of hanging until their own timeout
-  (``stop()`` re-raises it too).  ``fault_hook`` (set by the resilience
-  harness from ``train.faults.FaultPlan.scheduler_hook``) is called with
-  the tick number at the top of every :meth:`step` to inject exactly this
-  failure deterministically.
+  (``stop()`` re-raises it too, and raises ``RuntimeError`` when the loop
+  thread fails to join -- a hung decode step must not masquerade as a clean
+  shutdown).  ``fault_hook`` (set by the resilience harness from
+  ``train.faults.FaultPlan.scheduler_hook``) is called with the tick number
+  at the top of every :meth:`step` to inject exactly this failure
+  deterministically.
 
 Two driving modes share every code path:
 
@@ -46,8 +60,6 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.infer.pages import CapacityError
-
 
 def _percentile(xs: List[float], q: float) -> float:
     """Nearest-rank percentile (no numpy dependency on the hot path)."""
@@ -59,8 +71,12 @@ def _percentile(xs: List[float], q: float) -> float:
 
 
 class Scheduler:
-    def __init__(self, engine):
+    def __init__(self, engine, max_queue: Optional[int] = None):
         self.engine = engine
+        #: bounded submit queue: enqueue sheds when (queued + running)
+        #: already holds this many requests; None = unbounded (the
+        #: pre-admission-control behaviour)
+        self.max_queue = max_queue
         self._inbox: "queue.Queue" = queue.Queue()
         self._emit_q: "queue.Queue" = queue.Queue()
         self._results: Dict[int, object] = {}
@@ -78,13 +94,52 @@ class Scheduler:
         self.peak_live_bytes = 0
         self.steps = 0
         self.timeouts = 0
+        self.peak_queue_depth = 0
+        self._reasons: Dict[str, int] = {}     # finish_reason -> count
+        self._good_tokens = 0                  # tokens of completed requests
 
     # -- submission (any thread) ------------------------------------------
 
+    def queue_depth(self) -> int:
+        """Requests waiting or running: submitted-not-yet-drained (inbox) +
+        the engine's queue + running slots.  Reads of the engine deques from
+        the submitting thread are len()-only (atomic under the GIL)."""
+        return (self._inbox.qsize() + len(self.engine._queue)
+                + len(self.engine._running))
+
+    def _retry_after(self, req) -> float:
+        """Back-off hint attached to shed responses: a rough drain estimate
+        from the rolling decode-step time and the work ahead; a 50ms floor
+        covers the cold engine (no step history yet)."""
+        step_s = self.engine.monitor.mean_step_s() or 0.05
+        depth = max(1, len(self.engine._queue) + len(self.engine._running))
+        budget = max(1, int(getattr(req, "max_new_tokens", 1)))
+        return round(max(0.05, step_s * min(depth * budget, 10_000)), 3)
+
+    def _shed_at_submit(self, req, now: float) -> None:
+        """Bounded-queue rejection on the submitting thread: the request
+        never reaches the scheduling loop; its ``"shed"`` response flows
+        through the normal emit thread so ``wait``/``run`` see it like any
+        other finish."""
+        from repro.infer.engine import Response
+        resp = Response(request_id=req.request_id, prompt=list(req.tokens),
+                        tokens=[], finish_reason="shed",
+                        retry_after_s=self._retry_after(req))
+        with self._lock:
+            self._events[req.request_id] = threading.Event()
+            self._times[req.request_id] = {"submit": now}
+        self._ensure_emit_thread()
+        self._emit_q.put(resp)
+
     def enqueue(self, req) -> None:
         """Called by ``Engine.submit`` after validation: records the arrival
-        time and hands the request to the scheduling loop."""
+        time and hands the request to the scheduling loop -- or sheds it on
+        the spot when the bounded submit queue is full."""
         now = time.monotonic()
+        if self.max_queue is not None \
+                and self.queue_depth() >= self.max_queue:
+            self._shed_at_submit(req, now)
+            return
         with self._lock:
             self._events[req.request_id] = threading.Event()
             self._times[req.request_id] = {"submit": now}
@@ -111,6 +166,12 @@ class Scheduler:
                 with self._lock:
                     t = self._times.setdefault(resp.request_id, {})
                     t["finish"] = now
+                    reason = resp.finish_reason
+                    if reason == "shed":
+                        t["shed"] = True
+                    self._reasons[reason] = self._reasons.get(reason, 0) + 1
+                    if reason in ("eos", "length"):
+                        self._good_tokens += len(resp.tokens)
                     self._results[resp.request_id] = resp
                     ev = self._events.get(resp.request_id)
                 if ev is not None:
@@ -145,6 +206,35 @@ class Scheduler:
             if self.engine.cancel(rid, reason="timeout"):
                 self.timeouts += 1
 
+    def _sweep_sheds(self) -> None:
+        """Deadline-aware shedding: reject queued requests that cannot finish
+        before their deadline by the rolling decode-step estimate.  Runs
+        after the timeout sweep (an expired deadline is always a
+        ``"timeout"``); refuses to guess on a cold engine (no step history
+        -> no estimate -> no shed)."""
+        step_s = self.engine.monitor.mean_step_s()
+        if step_s is None:
+            return
+        queued = {r.request_id: r for r in self.engine._queue}
+        if not queued:
+            return
+        now = time.monotonic()
+        with self._lock:
+            doomed = []
+            for rid, dl in self._deadlines.items():
+                req = queued.get(rid)
+                if req is None:
+                    continue
+                # prefill step + one decode step per budgeted token
+                est = (1 + int(req.max_new_tokens)) * step_s
+                if now + est > dl:
+                    doomed.append((rid, req))
+            for rid, _ in doomed:
+                del self._deadlines[rid]
+        for rid, req in doomed:
+            self.engine.cancel(rid, reason="shed",
+                               retry_after_s=self._retry_after(req))
+
     def step(self) -> bool:
         """One scheduling tick: drain submissions, sweep deadlines, admit,
         decode one step, emit finishes.  Returns False when fully idle."""
@@ -153,6 +243,9 @@ class Scheduler:
         eng = self.engine
         self._drain_inbox()
         self._sweep_timeouts()
+        self._sweep_sheds()
+        self.peak_queue_depth = max(self.peak_queue_depth,
+                                    len(eng._queue) + len(eng._running))
         eng._admit()
         if eng._running:
             eng._step()
@@ -169,19 +262,31 @@ class Scheduler:
             # nothing running and nothing admissible: the queued request can
             # never fit (pinned prefixes shrank the pool below its need).
             # With a deadline armed we idle until the sweep cancels it
-            # (finish reason "timeout") instead of killing the loop.
+            # (finish reason "timeout") instead of killing the loop.  An
+            # undeadlined head gets patience first -- a transiently dry pool
+            # (fault hold, preempted pages mid-recycle) must not shed a
+            # request that would fit next tick -- then is shed (finish
+            # reason "shed", retry-after hint); pre-admission-control this
+            # raised CapacityError out of the loop, killing serving for
+            # every in-flight request.
+            from repro.infer.engine import STARVATION_LIMIT
             req = eng._queue[0]
+            rid = req.request_id
             with self._lock:
-                deadlined = req.request_id in self._deadlines
+                deadlined = rid in self._deadlines
             if deadlined:
                 return True
-            raise CapacityError(
-                f"request {req.request_id} ({len(req.tokens)} tokens) is not "
-                "admissible into an idle engine: the page pool (minus pinned "
-                "prefix pages) is too small",
-                tokens=len(req.tokens),
-                pages_free=(eng.pool.free_pages if eng.paged else None),
-                slots_free=len(eng._free))
+            if eng.paged and eng._skips.get(rid, 0) < STARVATION_LIMIT:
+                eng._skips[rid] = eng._skips.get(rid, 0) + 1
+                return True
+            eng.cancel(rid, reason="shed",
+                       retry_after_s=self._retry_after(req))
+            for resp in eng._drain_done():
+                with self._lock:
+                    self._deadlines.pop(resp.request_id, None)
+                self._ensure_emit_thread()
+                self._emit_q.put(resp)
+            return True
         return bool(eng._running or eng._queue or not self._inbox.empty())
 
     def run(self) -> List[object]:
@@ -239,10 +344,22 @@ class Scheduler:
         for ev in evs:
             ev.set()
 
-    def stop(self) -> None:
+    def stop(self, join_timeout_s: float = 60.0) -> None:
+        """Stop the background loop.  Raises ``RuntimeError`` if the loop
+        thread fails to join within ``join_timeout_s`` (a decode step wedged
+        in the runtime must not masquerade as a clean shutdown -- previously
+        this returned silently and the next ``start()`` raced the zombie),
+        and re-raises the loop's own error if it died."""
         self._stop.set()
         if self._loop_thread is not None:
-            self._loop_thread.join(timeout=60)
+            t = self._loop_thread
+            t.join(timeout=join_timeout_s)
+            if t.is_alive():
+                raise RuntimeError(
+                    f"scheduler loop thread failed to join within "
+                    f"{join_timeout_s:g}s; a decode step is likely wedged "
+                    "in the runtime (the thread is a daemon and will not "
+                    "block interpreter exit)")
             self._loop_thread = None
         if self._loop_error is not None:
             raise self._loop_error
@@ -278,11 +395,31 @@ class Scheduler:
     # -- metrics -----------------------------------------------------------
 
     def latency_stats(self) -> Dict[str, float]:
-        """End-to-end (submit -> finish) latency over finished requests."""
+        """End-to-end (submit -> finish) latency over finished requests,
+        plus overload accounting: ``completed``/``shed``/``timeout``/
+        ``numerics`` outcome counts, ``goodput_tok_s`` (tokens of
+        *completed* requests over the serving span), and queue-depth
+        telemetry.  Latency percentiles exclude shed requests -- a
+        rejection in microseconds would make p50 meaningless; ``n`` stays
+        "requests that actually ran"."""
         with self._lock:
             lats = [t["finish"] - t["submit"] for t in self._times.values()
-                    if "finish" in t]
+                    if "finish" in t and not t.get("shed")]
+            finishes = [t["finish"] for t in self._times.values()
+                        if "finish" in t]
+            submits = [t["submit"] for t in self._times.values()]
+            reasons = dict(self._reasons)
+            good_tokens = self._good_tokens
+        span = (max(finishes) - min(submits)) if finishes else 0.0
         return {"n": len(lats),
                 "p50_s": _percentile(lats, 50),
                 "p99_s": _percentile(lats, 99),
-                "mean_s": (sum(lats) / len(lats)) if lats else float("nan")}
+                "mean_s": (sum(lats) / len(lats)) if lats else float("nan"),
+                "completed": (reasons.get("eos", 0)
+                              + reasons.get("length", 0)),
+                "shed": reasons.get("shed", 0),
+                "timeout": reasons.get("timeout", 0),
+                "numerics": reasons.get("numerics", 0),
+                "goodput_tok_s": good_tokens / max(span, 1e-9),
+                "queue_depth": self.queue_depth(),
+                "peak_queue_depth": self.peak_queue_depth}

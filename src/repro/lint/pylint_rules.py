@@ -176,8 +176,11 @@ def lint_source(source: str, filename: str = "<string>") -> List[Finding]:
 EXCEPT_RULE_ID = "swallowed-broad-except"
 _EXCEPT_ALLOW = "# lint: except-ok"
 #: recovery-path modules where a swallowed broad except is a data-loss bug
+#: (the serving engine joined the scope when its degradation ladder started
+#: absorbing decode-step failures -- a silently swallowed one would skip
+#: both the demotion and the re-raise on the bottom rung)
 EXCEPT_SCOPE = ("checkpoint/", "train/loop.py", "train/sentinel.py",
-                "train/faults.py", "infer/scheduler.py")
+                "train/faults.py", "infer/scheduler.py", "infer/engine.py")
 _BROAD_EXC = {"Exception", "BaseException"}
 
 

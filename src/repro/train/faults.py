@@ -27,6 +27,21 @@ stability sentinel and the hardened checkpoint manager must survive:
                        completes (preemption-resume tests)
 ``dead_sched@N``       the serving scheduler's step thread raises on its
                        N-th tick (dead-thread watchdog tests)
+``nan_logit@N``        the serving engine's decode step N reports slot
+                       ``slot`` (default 0) as non-finite -- the engine
+                       must quarantine *that request* (finish reason
+                       ``"numerics"``), not the batch
+``oom_pages@N``        every free page is stolen from the engine's pool
+                       just before decode step N and held for ``hold``
+                       steps (default 2) -- exercises mid-decode
+                       preemption under pool exhaustion
+``slow_step@N``        decode step N is delayed ``ms`` milliseconds
+                       (default 50) on the host -- latency-watchdog and
+                       deadline-shed tests
+``kernel_error@N``     the decode step raises just before dispatch on
+                       step N, as a failing fused kernel would -- the
+                       engine must step down its compiled-path ladder
+                       and retry, not kill the scheduling loop
 =====================  =====================================================
 
 Entries are ``;``-separated; key=val args follow the step after ``:`` and
@@ -36,33 +51,41 @@ are ``,``-separated, e.g.::
 
 Steps are the 0-based train-loop step for ``*_grad`` / ``sigterm_run``
 (the value of ``state.opt.step`` entering the step), 1-based completed-save
-ordinals for the checkpoint faults, and 0-based scheduler ticks for
-``dead_sched``.  Everything is deterministic: the same spec against the
-same run injects at exactly the same point every time.
+ordinals for the checkpoint faults, 0-based scheduler ticks for
+``dead_sched``, and 0-based engine *decode* steps for the serving kinds
+(``Engine._decode_steps`` -- admissions/prefills do not advance it).
+Everything is deterministic: the same spec against the same run injects at
+exactly the same point every time.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import signal
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 ENV_VAR = "REPRO_FAULT"
 
 GRAD_KINDS = ("nan_grad", "sat_grad")
 CKPT_KINDS = ("corrupt_ckpt", "sigterm_save")
-KINDS = GRAD_KINDS + CKPT_KINDS + ("sigterm_run", "dead_sched")
+ENGINE_KINDS = ("nan_logit", "oom_pages", "slow_step", "kernel_error")
+KINDS = GRAD_KINDS + CKPT_KINDS + ("sigterm_run", "dead_sched") \
+    + ENGINE_KINDS
 
 _CORRUPT_MODES = ("flip", "truncate", "manifest")
 
 
 class FaultInjected(RuntimeError):
-    """Raised by host-side faults that simulate a hard crash (the scheduler
-    step-thread death).  Deliberately NOT a subclass of anything the guarded
-    code paths catch."""
+    """Raised by host-side faults that simulate a hard crash.  The scheduler
+    step-thread death is deliberately NOT absorbed by any guard (the
+    dead-loop watchdog must surface it); ``kernel_error`` is deliberately
+    raised *inside* the engine's guarded decode step, where the degradation
+    ladder is expected to absorb it and retry one rung down."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -243,6 +266,79 @@ class FaultPlan:
                     raise FaultInjected(
                         f"injected scheduler-thread death at tick {tick}")
         return hook
+
+    # -- serving (engine) faults -------------------------------------------
+
+    def engine_hooks(self) -> Optional["EngineFaultHooks"]:
+        """Hooks for ``Engine.fault_hooks``: deliver the serving fault
+        kinds at the engine's decode-step hook points.  None when the plan
+        carries no serving faults (the healthy path stays hook-free)."""
+        faults = self._of(*ENGINE_KINDS)
+        if not faults:
+            return None
+        return EngineFaultHooks(self, faults)
+
+
+class EngineFaultHooks:
+    """Deterministic serving faults, keyed on the engine's 0-based decode
+    step counter.  Each fault is one-shot (marked in the plan's ``fired``
+    list the step it lands).  Hook points, in the order ``Engine._step``
+    calls them:
+
+    * :meth:`pre_step` -- before the decode dispatch: ``slow_step`` sleeps
+      ``ms`` on the host; ``oom_pages`` steals every free page from the
+      pool (held ``hold`` steps, then released) so the next write forces a
+      preemption;
+    * :meth:`kernel` -- inside the guarded dispatch: ``kernel_error``
+      raises :class:`FaultInjected` exactly where a failing fused kernel
+      would surface;
+    * :meth:`mangle_finite` -- after the step's per-slot finiteness flags
+      are on the host: ``nan_logit`` flips slot ``slot`` (default 0) to
+      non-finite, standing in for a real NaN logits row;
+    * :meth:`post_step` -- after bookkeeping: releases expired page holds.
+    """
+
+    def __init__(self, plan: FaultPlan, faults: List[Fault]):
+        self._plan = plan
+        self._faults = list(faults)
+        self._held: List[Tuple[int, List[int]]] = []   # (release_step, pids)
+
+    def _due(self, kind: str, step: int) -> List[Fault]:
+        return [f for f in self._faults
+                if f.kind == kind and f.at == step
+                and f.describe() not in self._plan._fired]
+
+    def pre_step(self, engine, step: int) -> None:
+        for f in self._due("slow_step", step):
+            self._plan._mark(f)
+            time.sleep(float(f.arg("ms", "50")) / 1e3)
+        for f in self._due("oom_pages", step):
+            self._plan._mark(f)
+            if engine.pool is not None and engine.pool.free_pages > 0:
+                pids = engine.pool.alloc(engine.pool.free_pages)
+                self._held.append((step + int(f.arg("hold", "2")), pids))
+
+    def kernel(self, step: int) -> None:
+        for f in self._due("kernel_error", step):
+            self._plan._mark(f)
+            raise FaultInjected(
+                f"injected fused-kernel failure at decode step {step}")
+
+    def mangle_finite(self, step: int, finite: np.ndarray) -> np.ndarray:
+        for f in self._due("nan_logit", step):
+            self._plan._mark(f)
+            finite = np.array(finite, copy=True)
+            finite[int(f.arg("slot", "0")) % len(finite)] = False
+        return finite
+
+    def post_step(self, engine, step: int) -> None:
+        keep = []
+        for rel, pids in self._held:
+            if step >= rel and engine.pool is not None:
+                engine.pool.release(pids)
+            else:
+                keep.append((rel, pids))
+        self._held = keep
 
 
 def corrupt_checkpoint(path: str, mode: str = "flip") -> str:

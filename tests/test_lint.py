@@ -414,5 +414,6 @@ def test_except_lint_scope_covers_recovery_modules():
     assert in_except_scope("src/repro/train/loop.py")
     assert in_except_scope("src/repro/train/faults.py")
     assert in_except_scope("src/repro/infer/scheduler.py")
+    assert in_except_scope("src/repro/infer/engine.py")
     assert not in_except_scope("src/repro/core/quantizer.py")
     assert not in_except_scope("benchmarks/run.py")

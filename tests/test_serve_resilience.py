@@ -1,0 +1,359 @@
+"""Overload resilience: admission control / load shedding, the serving
+degradation ladder, serving fault injection, and the deadline/watchdog
+edges around them.
+
+Companion to ``tests/test_pages.py`` (scheduler deadlines + dead-loop
+watchdog) and ``benchmarks/resilience.py`` (the e2e scenario gate); this
+module pins the unit-level contracts: shed is a first-class outcome (never
+an exception escaping the loop), the ladder walks and re-engages exactly
+as scripted, quarantine isolates one row, and the monitor's window
+arithmetic."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.infer import Engine, EngineMonitor, MonitorConfig, Request
+from repro.models import build_model
+from repro.train import FaultPlan
+
+import jax
+
+
+def _setup():
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def gpt2():
+    return _setup()
+
+
+# ---------------------------------------------------------------------------
+# Admission control / load shedding
+# ---------------------------------------------------------------------------
+
+def test_shed_on_bounded_queue(gpt2):
+    """Submissions past ``max_queue`` are rejected at submit time: finish
+    reason "shed", retry-after hint, zero tokens -- and the admitted
+    requests are unaffected."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=32, max_queue=2)
+    ids = [eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=3))
+           for _ in range(5)]
+    by_id = {r.request_id: r for r in eng.run()}
+    reasons = [by_id[i].finish_reason for i in ids]
+    assert reasons == ["length", "length", "shed", "shed", "shed"]
+    for i in ids[2:]:
+        assert by_id[i].retry_after_s is not None
+        assert by_id[i].retry_after_s > 0
+        assert by_id[i].tokens == []
+        assert by_id[i].prompt == [1, 2, 3]
+    assert [len(by_id[i].tokens) for i in ids[:2]] == [3, 3]
+    stats = eng.scheduler.latency_stats()
+    assert stats["shed"] == 3 and stats["completed"] == 2
+    assert stats["n"] == 2           # shed excluded from latency percentiles
+
+
+def test_max_queue_zero_sheds_everything(gpt2):
+    """Degenerate bound: every submission sheds; the cold-engine retry
+    hint falls back to the 50ms floor (no step history to estimate from)."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=16, max_queue=0)
+    eng.submit(Request(tokens=[1, 2], max_new_tokens=2))
+    [r] = eng.run()
+    assert r.finish_reason == "shed"
+    # 50ms/step floor x 1 (idle depth) x 2 budgeted tokens
+    assert r.retry_after_s == pytest.approx(0.1)
+
+
+def test_idle_inadmissible_sheds_not_raises(gpt2):
+    """A queued request the (prefix-pinned) pool can never admit used to
+    raise CapacityError out of the scheduling loop; now it is shed after
+    the patience window, and the loop keeps running."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, "*=w8c", max_slots=2, max_seq=48,
+                 paged=True, page_size=8, n_pages=6)      # 5 allocatable
+    prefix = list(range(1, 33))                           # pins 4 pages
+    eng.cache_prefix(prefix)
+    assert eng.pool.free_pages == 1
+    # passes submit validation (2 pages <= 5 total) but can never admit
+    # against the 1 remaining free page
+    eng.submit(Request(tokens=[60, 61, 62, 63, 64, 65, 66, 67],
+                       max_new_tokens=8))
+    [r] = eng.run()                                       # must not raise
+    assert r.finish_reason == "shed"
+    assert r.retry_after_s is not None
+    assert eng.pool.free_pages == 1                       # nothing leaked
+
+
+def test_shed_vs_timeout_precedence(gpt2):
+    """Same inadmissible setup with a deadline armed: the timeout sweep
+    runs first, so the outcome is "timeout", never "shed"."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, "*=w8c", max_slots=2, max_seq=48,
+                 paged=True, page_size=8, n_pages=6)
+    eng.cache_prefix(list(range(1, 33)))
+    eng.submit(Request(tokens=[60, 61, 62, 63, 64, 65, 66, 67],
+                       max_new_tokens=8, timeout_s=0.01))
+    [r] = eng.run()
+    assert r.finish_reason == "timeout"
+    assert eng.scheduler.timeouts == 1
+    assert eng.scheduler.latency_stats()["shed"] == 0
+
+
+def test_deadline_aware_shed(gpt2):
+    """A queued request whose decode-step estimate cannot make its deadline
+    is shed immediately instead of burning pages until the timeout sweep."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=64)
+    # seed the rolling estimate: 1s/step makes any multi-token budget
+    # hopeless against a 2s deadline
+    for _ in range(8):
+        eng.monitor.record_step(1000.0)
+    r1 = eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=30))
+    r2 = eng.submit(Request(tokens=[4, 5, 6], max_new_tokens=30,
+                            timeout_s=2.0))
+    by_id = {r.request_id: r for r in eng.run()}
+    assert by_id[r2].finish_reason == "shed"
+    assert by_id[r2].retry_after_s is not None
+    assert by_id[r1].finish_reason == "length"
+    assert len(by_id[r1].tokens) == 30
+    assert eng.scheduler.timeouts == 0
+
+
+def test_mixed_queued_running_timeout_sweep(gpt2):
+    """One sweep cancels expired deadlines in both states: the running
+    request and the queued ones behind it (slots=1) all finish "timeout"
+    -- expired deadlines outrank the shed estimate."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=256)
+    ids = [eng.submit(Request(tokens=[i + 1, i + 2], max_new_tokens=200,
+                              timeout_s=0.05)) for i in range(3)]
+    by_id = {r.request_id: r for r in eng.run()}
+    assert [by_id[i].finish_reason for i in ids] == ["timeout"] * 3
+    assert eng.scheduler.timeouts == 3
+    assert eng.scheduler.latency_stats()["shed"] == 0
+    assert not eng._running and not eng._queue
+
+
+# ---------------------------------------------------------------------------
+# Scheduler loop edges
+# ---------------------------------------------------------------------------
+
+def test_start_twice_is_noop(gpt2):
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=16)
+    sched = eng.scheduler
+    sched.start()
+    t1 = sched._loop_thread
+    sched.start()
+    assert sched._loop_thread is t1
+    sched.stop()
+
+
+def test_wait_races_timeout_cancellation(gpt2):
+    """wait() blocked on a request that the deadline sweep cancels must
+    wake with the "timeout" response, not TimeoutError or a hang."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=256)
+    sched = eng.scheduler
+    sched.start()
+    try:
+        rid = eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=200,
+                                 timeout_s=0.05))
+        sched.wait([rid], timeout=120)
+        r = sched.result(rid)
+        assert r.finish_reason == "timeout"
+    finally:
+        sched.stop()
+
+
+def test_stop_raises_on_hung_loop(gpt2):
+    """stop() must not masquerade a wedged loop thread as a clean
+    shutdown: a decode step stuck past the join timeout raises
+    RuntimeError (the old behaviour returned silently)."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=64)
+    eng.generate(np.asarray([[1, 2, 3]]), 2)      # compile outside the race
+    # the decode-step counter is cumulative; pin the fault to the next step
+    spec = f"slow_step@{eng._decode_steps}:ms=1500"
+    plan = FaultPlan.parse(spec)
+    eng.fault_hooks = plan.engine_hooks()
+    sched = eng.scheduler
+    sched.start()
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4))
+    time.sleep(0.4)                               # loop is inside the sleep
+    t = sched._loop_thread
+    with pytest.raises(RuntimeError, match="failed to join"):
+        sched.stop(join_timeout_s=0.2)
+    t.join(timeout=30)                            # drains after the fault
+    assert not t.is_alive()
+    assert plan.fired == [spec]
+
+
+# ---------------------------------------------------------------------------
+# Quarantine + degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_quarantine_isolates_row(gpt2):
+    """A non-finite logits row evicts only that request; its batchmate's
+    greedy tokens are bit-identical to a clean solo run."""
+    cfg, model, params = gpt2
+    clean = Engine(model, params, max_slots=2, max_seq=32)
+    clean.submit(Request(tokens=[4, 5, 6], max_new_tokens=8))
+    [oracle] = clean.run()
+
+    eng = Engine(model, params, max_slots=2, max_seq=32)
+    plan = FaultPlan.parse("nan_logit@2:slot=0")
+    eng.fault_hooks = plan.engine_hooks()
+    victim = eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=8))
+    other = eng.submit(Request(tokens=[4, 5, 6], max_new_tokens=8))
+    by_id = {r.request_id: r for r in eng.run()}
+    assert by_id[victim].finish_reason == "numerics"
+    assert 0 < len(by_id[victim].tokens) < 8
+    assert by_id[other].finish_reason == "length"
+    assert by_id[other].tokens == oracle.tokens   # batch-invariance survives
+    s = eng.resilience_summary()
+    assert s["quarantined"] == 1 and s["rung_index"] == 0
+    assert not eng._running and len(eng._free) == 2
+
+
+def test_ladder_demote_and_reengage(gpt2):
+    """A kernel error demotes one rung (dequant -> fp on a dense int8-KV
+    engine); the healthy streak re-probes back up; the request finishes."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, "kv_cache=a8t,*=w8c", max_slots=1,
+                 max_seq=32, monitor=MonitorConfig(reprobe_after=2))
+    assert eng._rungs == ["dequant", "fp"]
+    plan = FaultPlan.parse("kernel_error@1")
+    eng.fault_hooks = plan.engine_hooks()
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=8))
+    [r] = eng.run()
+    assert r.finish_reason == "length" and len(r.tokens) == 8
+    s = eng.resilience_summary()
+    assert s["kernel_errors"] == 1
+    assert [(d["step"], d["from"], d["to"]) for d in s["demotions"]] \
+        == [(1, "dequant", "fp")]
+    assert [(p["from"], p["to"]) for p in s["promotions"]] \
+        == [("fp", "dequant")]
+    assert s["rung"] == "dequant" and s["rung_index"] == 0
+    assert "degraded" not in eng.path_summary()
+    assert plan.fired == ["kernel_error@1"]
+
+
+def test_fp_rung_roundtrip_serves_correctly(gpt2):
+    """Forcing the engine onto the fp reference rung (dequantized caches)
+    and back (requantized) leaves it serving correctly either way, and
+    path_summary reports the degraded rung only while degraded."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, "kv_cache=a8t,*=w8c", max_slots=1,
+                 max_seq=32)
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4))
+    [r0] = eng.run()
+    assert r0.finish_reason == "length"
+
+    assert eng._demote("test-forced", step=0)
+    assert eng._rungs[eng._rung] == "fp"
+    assert "degraded=fp" in eng.path_summary()
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4))
+    [r1] = eng.run()
+    assert r1.finish_reason == "length" and len(r1.tokens) == 4
+
+    assert eng._try_promote(step=0)
+    assert eng._rung == 0
+    assert "degraded" not in eng.path_summary()
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4))
+    [r2] = eng.run()
+    assert r2.finish_reason == "length" and len(r2.tokens) == 4
+
+
+def test_bottom_rung_reraises(gpt2):
+    """A decode-step failure on the last rung has nowhere to go: the
+    exception propagates (absorbed only while a lower rung exists)."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=1, max_seq=16)   # fp-only engine
+    assert eng._rungs == ["fp"]
+    plan = FaultPlan.parse("kernel_error@1")
+    eng.fault_hooks = plan.engine_hooks()
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4))
+    from repro.train import FaultInjected
+    with pytest.raises(FaultInjected):
+        eng.run()
+
+
+def test_oom_fault_preempts_and_recovers(gpt2):
+    """An injected page-pool drain forces preemption, never CapacityError;
+    the held pages come back and every request completes."""
+    cfg, model, params = gpt2
+    eng = Engine(model, params, max_slots=2, max_seq=64, paged=True,
+                 page_size=4, n_pages=6)
+    plan = FaultPlan.parse("oom_pages@1:hold=2")
+    eng.fault_hooks = plan.engine_hooks()
+    free0 = eng.pool.free_pages
+    ids = [eng.submit(Request(tokens=[1, 2, 3, 4], max_new_tokens=10)),
+           eng.submit(Request(tokens=[5, 6, 7, 8], max_new_tokens=10))]
+    by_id = {r.request_id: r for r in eng.run()}
+    assert all(by_id[i].finish_reason == "length"
+               and len(by_id[i].tokens) == 10 for i in ids)
+    assert eng.preemptions >= 1
+    assert eng.pool.free_pages == free0
+    assert plan.fired == ["oom_pages@1:hold=2"]
+
+
+# ---------------------------------------------------------------------------
+# Fault grammar + monitor arithmetic
+# ---------------------------------------------------------------------------
+
+def test_engine_fault_grammar():
+    plan = FaultPlan.parse(
+        "nan_logit@2:slot=1;oom_pages@3:hold=4;slow_step@1:ms=5;"
+        "kernel_error@6")
+    assert [f.kind for f in plan.faults] == \
+        ["nan_logit", "oom_pages", "slow_step", "kernel_error"]
+    assert plan.engine_hooks() is not None
+    # plans without serving kinds keep the engine hook-free
+    assert FaultPlan.parse("nan_grad@3").engine_hooks() is None
+    assert FaultPlan.parse(None).engine_hooks() is None
+    with pytest.raises(ValueError):
+        FaultPlan.parse("nan_logits@2")            # unknown kind
+
+
+def test_mangle_finite_is_one_shot_and_copies():
+    plan = FaultPlan.parse("nan_logit@2:slot=1")
+    hooks = plan.engine_hooks()
+    finite = np.ones(4, bool)
+    out = hooks.mangle_finite(2, finite)
+    assert not out[1] and finite[1]                # input not mutated
+    assert plan.fired == ["nan_logit@2:slot=1"]
+    again = hooks.mangle_finite(2, np.ones(4, bool))
+    assert again.all()                             # one-shot
+
+
+def test_monitor_window_and_reprobe():
+    m = EngineMonitor(MonitorConfig(numeric_window=4, numeric_limit=2,
+                                    reprobe_after=3))
+    m.record_quarantine(1)
+    assert not m.should_demote(1)
+    m.record_quarantine(3)
+    assert m.should_demote(3)                      # 2 inside the window
+    m.record_demotion(3, "fused", "dequant", "test")
+    # quarantines at/before the transition no longer count
+    assert not m.should_demote(4)
+    m.record_quarantine(10)                        # outside window of 3
+    assert not m.should_demote(10)
+    assert m.mean_step_s() is None
+    for _ in range(3):
+        m.record_step(10.0)
+    assert m.should_reprobe()
+    assert m.mean_step_s() == pytest.approx(0.01)
+    m.record_promotion(12, "dequant", "fused")
+    assert m.healthy_streak == 0                   # re-earn the streak
+    s = m.summary()
+    assert s["quarantined"] == 3
+    assert s["demotions"][0]["why"] == "test"
+    assert s["step_ms"]["n"] == 3
